@@ -1,0 +1,43 @@
+"""Paper claim: standards-conforming parallel algorithms (C++17 par).
+seq vs par (AMT pool) vs vec on reduce / sort / transform_reduce."""
+import time
+
+import repro.core as core
+from repro.core import algorithms as alg
+from repro.core.executor import par, seq, vec
+
+
+def _timeit(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    core.get_runtime()
+    rows = []
+    data = list(range(400_000))
+    f = lambda x: x * x + 1
+
+    t_seq = _timeit(lambda: alg.transform_reduce(seq, data, f))
+    t_par = _timeit(lambda: alg.transform_reduce(par.with_chunk_size(25_000), data, f))
+    rows.append(("algorithms/transform_reduce_seq", t_seq * 1e6, ""))
+    rows.append(("algorithms/transform_reduce_par", t_par * 1e6,
+                 f"speedup={t_seq / t_par:.2f}x"))
+
+    import random
+
+    random.seed(0)
+    xs = [random.random() for _ in range(400_000)]
+    t_seq = _timeit(lambda: alg.sort(seq, xs))
+    t_par = _timeit(lambda: alg.sort(par.with_chunk_size(50_000), xs))
+    rows.append(("algorithms/sort_seq", t_seq * 1e6, ""))
+    rows.append(("algorithms/sort_par", t_par * 1e6,
+                 f"speedup={t_seq / t_par:.2f}x"))
+
+    t_vec = _timeit(lambda: alg.reduce(vec, xs))
+    rows.append(("algorithms/reduce_vec", t_vec * 1e6, "jnp backend"))
+    return rows

@@ -1,0 +1,38 @@
+"""Paper claim: OctoTiger at 96.8 % parallel efficiency on 643,280 cores.
+Our analogue: parallel efficiency of the futurized train step when scaling
+one pod (256 chips) → two pods (512 chips).  Both cells run the SAME
+global batch (the assigned shape), so this is STRONG scaling:
+
+    eff = T(256 chips) / (2 × T(512 chips))     (overlapped step model)
+
+computed per arch for train_4k; the collective term picks up the DCI hop
+and the halved per-chip work, everything else divides."""
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "dryrun"
+
+
+def run():
+    from repro.analysis.roofline import analyze, load_records
+
+    rows = []
+    pods = {r["arch"]: analyze(r) for r in load_records(OUT, "futurized", "pod")
+            if r["shape"] == "train_4k"}
+    multis = {r["arch"]: analyze(r) for r in load_records(OUT, "futurized", "multipod")
+              if r["shape"] == "train_4k"}
+    effs = []
+    for arch in sorted(set(pods) & set(multis)):
+        t1 = max(pods[arch].compute_s, pods[arch].memory_s, pods[arch].collective_s)
+        t2 = max(multis[arch].compute_s, multis[arch].memory_s,
+                 multis[arch].collective_s)
+        eff = t1 / (2 * t2) if t2 else 0.0  # strong scaling: fixed global work
+        effs.append(eff)
+        rows.append((f"efficiency/{arch}", 0.0, f"{100 * eff:.1f}% @512 chips"))
+    if effs:
+        import statistics
+
+        rows.append(("efficiency/mean_strong_scaling", 0.0,
+                     f"{100 * statistics.mean(effs):.1f}% (paper: 96.8%)"))
+    return rows

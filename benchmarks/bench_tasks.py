@@ -1,0 +1,59 @@
+"""Paper claim: HPX schedules 'billions of lightweight threads' with µs-scale
+overheads.  Measures: task spawn+complete latency, sustained task throughput
+per policy, future-chain (.then) latency, dataflow-node overhead."""
+import time
+
+import repro.core as core
+from repro.core.dataflow import dataflow
+from repro.core.scheduler import Runtime
+
+
+def _timeit(fn, n):
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) / n * 1e6  # µs per op
+
+
+def run():
+    rows = []
+    n = 20_000
+    with Runtime(num_workers=4, policy="local", pool_name="bench-local") as rt:
+        futs = None
+
+        def spawn_all():
+            nonlocal futs
+            futs = [rt.spawn(lambda: None) for _ in range(n)]
+            for f in futs:
+                f.get()
+
+        us = _timeit(spawn_all, n)
+        rows.append(("tasks/spawn_get_local", us, f"{1e6 / us:.0f} tasks/s"))
+
+        chain_len = 2_000
+        def chain():
+            f = core.make_ready_future(0)
+            for _ in range(chain_len):
+                f = f.then_value(lambda x: x + 1)
+            assert f.get() == chain_len
+
+        rows.append(("tasks/then_chain", _timeit(chain, chain_len), "per link"))
+
+        def flow():
+            fs = [dataflow(lambda a, b: a + b,
+                           core.make_ready_future(i), core.make_ready_future(i))
+                  for i in range(5_000)]
+            for f in fs:
+                f.get()
+
+        rows.append(("tasks/dataflow_node", _timeit(flow, 5_000), "2-input node"))
+
+    for policy in ("static", "hierarchical"):
+        with Runtime(num_workers=4, policy=policy, pool_name=f"bench-{policy}") as rt:
+            def burst():
+                fs = [rt.spawn(lambda: None) for _ in range(n)]
+                for f in fs:
+                    f.get()
+
+            us = _timeit(burst, n)
+            rows.append((f"tasks/spawn_get_{policy}", us, f"{1e6 / us:.0f} tasks/s"))
+    return rows

@@ -1,0 +1,37 @@
+"""Benchmark driver — one benchmark per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import traceback
+
+
+def main() -> None:
+    import repro.core as core
+
+    core.init(num_workers=4)
+    from benchmarks import (bench_algorithms, bench_cholesky, bench_efficiency,
+                            bench_overlap, bench_stream, bench_tasks)
+
+    suites = [
+        ("tasks", bench_tasks),
+        ("stream", bench_stream),
+        ("cholesky", bench_cholesky),
+        ("algorithms", bench_algorithms),
+        ("overlap", bench_overlap),
+        ("efficiency", bench_efficiency),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    core.finalize()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# 8 placeholder devices so this example can demonstrate real mesh changes
+# (must be set before any jax import — same rule as the dry-run).
+
+"""Elastic scaling & fault tolerance: AGAS migration in action.
+
+    PYTHONPATH=src python examples/elastic_migration.py
+
+1. Train on a 4-device mesh (FSDP over 'data').
+2. Simulate losing half the fleet → migrate live params+opt onto 2 devices
+   (same GID, bumped generation) and KEEP TRAINING.
+3. 'Repair' the fleet → restore the async checkpoint onto all 8 devices
+   (elastic restart across a different topology).
+"""
+import jax
+import numpy as np
+
+import repro.core as core
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import agas
+from repro.data.pipeline import DataConfig
+from repro.dist.plan import get_plan
+from repro.launch.mesh import make_mesh_shape
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train import step as step_mod
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    core.init(num_workers=4)
+    cfg = get_config("starcoder2_3b", smoke=True)
+    model = build_model(cfg, get_plan("futurized"))
+
+    mesh4 = make_mesh_shape((4, 2), ("data", "model"))
+    mesh2 = make_mesh_shape((2, 1), ("data", "model"))
+    mesh8 = make_mesh_shape((8, 1), ("data", "model"))
+
+    trainer = Trainer(model, AdamWConfig(lr=1e-3, total_steps=60),
+                      DataConfig(batch_size=8, seq_len=32),
+                      TrainConfig(steps=10, log_every=5,
+                                  ckpt_dir="checkpoints/elastic"),
+                      mesh=mesh4)
+    with jax.set_mesh(mesh4):
+        trainer.params = jax.device_put(
+            trainer.params, model.plan.param_shardings(model.param_specs(), mesh4))
+        h1 = trainer.fit(10)
+    print(f"[mesh 4x2] 10 steps, loss {h1[-1]['loss']:.3f}")
+    print("placement:", next(iter(trainer.params.values())).sharding)
+    ck = trainer.checkpoint_async()
+
+    # --- simulate node failure: shrink to 2 devices -------------------------
+    rec_before = agas.default().record(trainer.gid)
+    with jax.set_mesh(mesh2):
+        trainer.elastic_restart(mesh2)
+        h2 = trainer.fit(10)
+    rec_after = agas.default().record(trainer.gid)
+    print(f"[mesh 2x1] survived failure: 10 more steps, loss {h2[-1]['loss']:.3f}")
+    print(f"AGAS gid stable: {rec_before.gid == rec_after.gid}, "
+          f"generation {rec_before.generation} → {rec_after.generation}")
+
+    # --- fleet repaired: restore checkpoint onto 8 devices -------------------
+    ck.get()
+    plan = model.plan
+    specs = model.param_specs()
+    with jax.set_mesh(mesh8):
+        shardings = {"params": plan.param_shardings(specs, mesh8),
+                     "opt": {"m": plan.param_shardings(specs, mesh8),
+                             "v": plan.param_shardings(specs, mesh8),
+                             "step": plan.replicated(mesh8)}}
+        step, state = ckpt.restore("checkpoints/elastic", shardings=shardings)
+    print(f"[mesh 8x1] checkpoint from step {step} restored onto 8 devices; "
+          f"placement: {next(iter(state['params'].values())).sharding}")
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the HPX-style AMT runtime in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.core import algorithms as alg
+from repro.core.dataflow import TaskGraph, dataflow, futurize
+from repro.core.executor import par, vec
+
+
+def main() -> None:
+    # hpx::init — bring up the runtime (work-stealing 'local' policy)
+    core.init(num_workers=4, policy="local")
+
+    # 1. futures: wait-free asynchronous execution --------------------------
+    f = core.spawn(lambda: 21)
+    g = f.then_value(lambda x: x * 2)  # continuation, runs on the pool
+    print("future chain:", g.get())  # 42
+
+    # 2. futurization: sequential code → dataflow DAG -----------------------
+    @futurize
+    def mul(a, b):
+        return a * b
+
+    @futurize
+    def add(a, b):
+        return a + b
+
+    print("dataflow DAG:", add(mul(3, 4), mul(5, 6)).get())  # 42
+
+    # explicit task graphs (the tiled-Cholesky pattern)
+    graph = TaskGraph()
+    graph.add("a", lambda: 2)
+    graph.add("b", lambda x: x + 3, deps=["a"])
+    graph.add("c", lambda x, y: x * y, deps=["a", "b"])
+    print("task graph:", graph.run()["c"].get())  # 10
+
+    # 3. parallel algorithms with execution policies (C++17 style) ----------
+    data = list(range(1_000))
+    print("par reduce:", alg.reduce(par, data))
+    print("vec transform_reduce:",
+          int(alg.transform_reduce(vec, jnp.arange(1_000), lambda x: x * x)))
+
+    # 4. AGAS + parcels: send work to data ----------------------------------
+    core.agas.register({"weights": jnp.ones((4, 4))}, name="/demo/model")
+    fut = core.parcel.apply(lambda obj, s: float(obj["weights"].sum()) * s,
+                            "/demo/model", 2.0)
+    print("parcel result:", fut.get())  # 32.0
+
+    # 5. performance counters (APEX style) ----------------------------------
+    for name, value in core.counters.query("/scheduler{pool#0}/tasks/*"):
+        print(f"counter {name} = {value:.0f}")
+
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Re-run the static HLO profile over archived .hlo.gz artifacts and update
+the dry-run JSONs in place — analysis refinements without recompiling.
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from repro.dist.hlo_analysis import parse_module
+
+DEFAULT = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def reanalyze(results_dir: Path = DEFAULT) -> int:
+    n = 0
+    for jpath in sorted(Path(results_dir).glob("*.json")):
+        hpath = jpath.with_suffix(".hlo.gz")
+        if not hpath.exists():
+            continue
+        rec = json.loads(jpath.read_text())
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        mod = parse_module(hlo, rec["n_devices"])
+        coll = mod.collectives()
+        rec["hlo_flops_per_device"] = float(mod.dot_flops())
+        rec["hlo_flops_total"] = rec["hlo_flops_per_device"] * rec["n_devices"]
+        rec["hbm_traffic_per_device"] = float(mod.memory_traffic())
+        rec["collectives"] = {
+            "count": coll.count(),
+            "wire_bytes_total": int(coll.total_wire()),
+            "wire_bytes_ici": int(coll.total_wire(crosses_pod=False)),
+            "wire_bytes_dci": int(coll.total_wire(crosses_pod=True)),
+            "operand_bytes_total": int(coll.total_operand()),
+            "by_kind": {k: int(v) for k, v in coll.by_kind().items()},
+        }
+        jpath.write_text(json.dumps(rec, indent=1))
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    d = Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT
+    print(f"reanalyzed {reanalyze(d)} artifacts in {d}")

@@ -1,0 +1,144 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_total   / (chips × 197 TF/s bf16)
+    memory     = HBM_traffic/chip  /          819 GB/s
+    collective = ICI_wire/(chips × 50 GB/s) + DCI_wire/(chips × 25 GB/s)
+
+HLO_FLOPs and HBM traffic come from the static HLO profiler
+(``dist.hlo_analysis``, while-loop trip counts applied — XLA's own
+cost_analysis counts loop bodies once).  MODEL_FLOPS = 6·N·D (train) /
+2·N·D (inference), N_active for MoE — the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat & quadratic-attention overheads.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.launch.mesh import DCI_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def active_param_count(arch: str) -> int:
+    """Activated parameters per token (MoE: shared + top-k routed)."""
+    from repro.configs import get_config
+    from repro.dist.plan import futurized_plan
+    from repro.models.model import build_model
+
+    cfg = get_config(arch)
+    specs = build_model(cfg, futurized_plan()).param_specs()
+    total = 0
+    for path, s in specs.items():
+        n = int(np.prod(s.shape))
+        if cfg.is_moe and "moe/w_" in path:  # routed experts: top_k of E active
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops(rec: Dict) -> float:
+    """MODEL_FLOPS per the brief: 6·N_active·D train, 2·N_active·D inference."""
+    n = active_param_count(rec["arch"])
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    return 2.0 * n * rec["global_batch"]  # decode: one token per slot
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    plan: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    ici_s: float
+    dci_s: float
+    model_flops: float
+    hlo_flops: float
+    step_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+
+    def finish(self) -> "Roofline":
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        # overlapped execution model: perfectly async collectives/DMA ⇒ the
+        # step takes the max term; roofline fraction = useful compute time
+        # over that bound (1.0 = MODEL_FLOPS at peak with zero exposure)
+        self.step_s = max(terms.values())
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.useful_ratio = self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+        self.roofline_fraction = ideal / self.step_s if self.step_s else 0.0
+        return self
+
+
+def analyze(rec: Dict) -> Roofline:
+    chips = rec["n_devices"]
+    coll = rec["collectives"]
+    ici = coll["wire_bytes_ici"] / (chips * ICI_BW)
+    dci = coll["wire_bytes_dci"] / (chips * DCI_BW)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], plan=rec["plan"],
+        chips=chips,
+        compute_s=rec["hlo_flops_total"] / (chips * PEAK_FLOPS_BF16),
+        memory_s=rec["hbm_traffic_per_device"] / HBM_BW,
+        collective_s=ici + dci,
+        ici_s=ici, dci_s=dci,
+        model_flops=model_flops(rec),
+        hlo_flops=rec["hlo_flops_total"],
+    ).finish()
+
+
+def load_records(results_dir: Path = RESULTS, plan: Optional[str] = None,
+                 mesh: Optional[str] = None) -> List[Dict]:
+    recs = []
+    for p in sorted(Path(results_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if plan and r.get("plan") != plan:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(results_dir: Path = RESULTS, plan: str = "futurized",
+          mesh: str = "pod") -> List[Roofline]:
+    return [analyze(r) for r in load_records(results_dir, plan, mesh)]
+
+
+def format_table(rows: List[Roofline]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'chips':>5s} {'compute':>9s} "
+           f"{'memory':>9s} {'coll':>9s} {'bottleneck':>10s} {'MF/HF':>6s} "
+           f"{'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.chips:5d} {r.compute_s:9.2e} "
+            f"{r.memory_s:9.2e} {r.collective_s:9.2e} {r.bottleneck:>10s} "
+            f"{r.useful_ratio:6.2f} {100 * r.roofline_fraction:8.1f}%")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod"
+    print(format_table(table(mesh=mesh)))

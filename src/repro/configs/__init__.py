@@ -1,0 +1,15 @@
+"""Architecture configs — one module per assigned architecture."""
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeCell,
+    all_cells,
+    cells_for,
+    get_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ModelConfig", "ShapeCell",
+    "all_cells", "cells_for", "get_config",
+]

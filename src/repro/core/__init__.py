@@ -1,0 +1,49 @@
+"""repro.core — the paper's contribution: an HPX-style AMT runtime for JAX.
+
+Surface mirrors HPX:
+
+    init / finalize / Runtime            hpx::init / hpx::finalize
+    spawn / async_                       hpx::async            -> Future
+    dataflow / futurize / TaskGraph      hpx::dataflow         (futurization)
+    Future / Promise / when_all / when_any / make_ready_future
+    agas                                 Active Global Address Space
+    parcel                               active messages (send work to data)
+    counters                             APEX-style performance counters
+    algorithms / executor                C++17 parallel algorithms + policies
+    migration                            object migration / elastic resharding
+"""
+
+from repro.core import agas, algorithms, counters, executor, migration, parcel
+from repro.core.dataflow import TaskGraph, dataflow, futurize
+from repro.core.future import (
+    Future,
+    FutureError,
+    Promise,
+    make_exceptional_future,
+    make_ready_future,
+    unwrap,
+    wait_all,
+    when_all,
+    when_any,
+)
+from repro.core.scheduler import (
+    PRIORITY_HIGH,
+    PRIORITY_LOW,
+    PRIORITY_NORMAL,
+    Runtime,
+    async_,
+    current_runtime,
+    finalize,
+    get_runtime,
+    init,
+    spawn,
+)
+
+__all__ = [
+    "agas", "algorithms", "counters", "executor", "migration", "parcel",
+    "TaskGraph", "dataflow", "futurize",
+    "Future", "FutureError", "Promise", "make_exceptional_future",
+    "make_ready_future", "unwrap", "wait_all", "when_all", "when_any",
+    "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL", "Runtime", "async_",
+    "current_runtime", "finalize", "get_runtime", "init", "spawn",
+]

@@ -1,0 +1,173 @@
+"""AGAS — Active Global Address Space (HPX P3, paper §2.2).
+
+Every distributed object lives in AGAS under a *GID* (global id); access is
+location-transparent, and objects may *migrate* between localities for load
+balancing, with AGAS responsible for address resolution.
+
+TPU/JAX adaptation: a "locality" is a placement — a ``jax.sharding.Sharding``
+over some mesh (or host memory).  An AGAS record therefore binds::
+
+    GID → (symbolic name, pytree of arrays, placement metadata, generation)
+
+Migration (see :mod:`repro.core.migration`) re-`device_put`s the pytree to a
+new sharding and bumps the record's generation — the GID is stable across
+migrations, exactly the paper's "independence of whether an object is located
+remotely or local".  Model/optimizer state, KV caches and performance
+counters are all registered here; the checkpoint layer saves/restores *by
+GID*, which is what makes elastic restart (restore onto a different mesh)
+a pure AGAS operation.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class GID:
+    """Global identifier: (locality id, sequence number) like HPX msb/lsb."""
+
+    locality: int
+    seq: int
+
+    def __repr__(self) -> str:
+        return f"gid{{{self.locality:04x}:{self.seq:012x}}}"
+
+
+@dataclass
+class AgasRecord:
+    gid: GID
+    obj: Any
+    name: Optional[str] = None
+    placement: Optional[Any] = None  # sharding / mesh descriptor / "host"
+    generation: int = 0  # bumped on every migration
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class AGAS:
+    """The resolver: GID ↔ object ↔ symbolic name."""
+
+    def __init__(self, locality: int = 0):
+        self.locality = locality
+        self._seq = itertools.count(1)
+        self._records: Dict[GID, AgasRecord] = {}
+        self._names: Dict[str, GID] = {}
+        self._lock = threading.RLock()
+        # AGAS exposes its own counters (paper: counters are read *via* AGAS)
+        from repro.core import counters as _counters
+
+        reg = _counters.default()
+        self._c_objects = reg.gauge(f"/agas{{locality#{locality}}}/objects/count")
+        self._c_migrations = reg.counter(f"/agas{{locality#{locality}}}/migrations/cumulative")
+        self._c_resolutions = reg.counter(f"/agas{{locality#{locality}}}/resolutions/cumulative")
+
+    # ------------------------------------------------------------ register
+    def register(
+        self,
+        obj: Any,
+        name: Optional[str] = None,
+        placement: Optional[Any] = None,
+        **meta: Any,
+    ) -> GID:
+        """Give ``obj`` a global identity; optionally bind a symbolic name."""
+        with self._lock:
+            gid = GID(self.locality, next(self._seq))
+            rec = AgasRecord(gid=gid, obj=obj, name=name, placement=placement, meta=dict(meta))
+            self._records[gid] = rec
+            if name is not None:
+                if name in self._names:
+                    raise KeyError(f"AGAS name already bound: {name!r}")
+                self._names[name] = gid
+            self._c_objects.set(len(self._records))
+            return gid
+
+    def register_name(self, name: str, obj: Any, replace: bool = False, **meta: Any) -> GID:
+        """Bind-or-rebind a symbolic name (used for counters)."""
+        with self._lock:
+            if name in self._names:
+                if not replace:
+                    raise KeyError(f"AGAS name already bound: {name!r}")
+                gid = self._names[name]
+                rec = self._records[gid]
+                rec.obj = obj
+                rec.meta.update(meta)
+                return gid
+            return self.register(obj, name=name, **meta)
+
+    def unregister(self, gid: GID) -> None:
+        with self._lock:
+            rec = self._records.pop(gid, None)
+            if rec is None:
+                raise KeyError(f"unknown {gid}")
+            if rec.name is not None:
+                self._names.pop(rec.name, None)
+            self._c_objects.set(len(self._records))
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, gid_or_name) -> Any:
+        """GID/name → live object (the one-sided access path)."""
+        return self.record(gid_or_name).obj
+
+    def record(self, gid_or_name) -> AgasRecord:
+        with self._lock:
+            self._c_resolutions.increment()
+            gid = self._names[gid_or_name] if isinstance(gid_or_name, str) else gid_or_name
+            return self._records[gid]
+
+    def gid_of(self, name: str) -> GID:
+        with self._lock:
+            return self._names[name]
+
+    def contains(self, gid_or_name) -> bool:
+        with self._lock:
+            if isinstance(gid_or_name, str):
+                return gid_or_name in self._names
+            return gid_or_name in self._records
+
+    # ------------------------------------------------------------- migrate
+    def rebind(self, gid: GID, obj: Any, placement: Optional[Any] = None) -> int:
+        """Install a migrated object under the same GID. Returns new generation."""
+        with self._lock:
+            rec = self._records[gid]
+            rec.obj = obj
+            if placement is not None:
+                rec.placement = placement
+            rec.generation += 1
+            self._c_migrations.increment()
+            return rec.generation
+
+    # ------------------------------------------------------------- queries
+    def names(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(n for n in self._names if n.startswith(prefix))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    def __iter__(self) -> Iterator[AgasRecord]:
+        with self._lock:
+            return iter(list(self._records.values()))
+
+
+_default: Optional[AGAS] = None
+_lock = threading.Lock()
+
+
+def default() -> AGAS:
+    global _default
+    with _lock:
+        if _default is None:
+            _default = AGAS()
+        return _default
+
+
+def register(obj: Any, name: Optional[str] = None, **kw: Any) -> GID:
+    return default().register(obj, name=name, **kw)
+
+
+def resolve(gid_or_name) -> Any:
+    return default().resolve(gid_or_name)

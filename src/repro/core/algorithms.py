@@ -1,0 +1,232 @@
+"""C++17-style parallel algorithms with execution policies (HPX P6).
+
+The paper: C++17 "support for parallel algorithms was added, which
+coincidentally covers the need for data parallel algorithms"; HPX provides
+the reference implementation.  We provide the JAX analogue:
+
+    for_each, transform, reduce, transform_reduce, inclusive_scan,
+    exclusive_scan, sort, count_if, all_of/any_of, copy
+
+Each takes an :class:`~repro.core.executor.ExecutionPolicy`:
+
+- ``seq``  — plain Python/jnp loop (specification oracle);
+- ``par``  — chunks dispatched as AMT scheduler tasks (host parallel);
+- ``vec``  — jnp/vmap vectorized;
+- ``mesh`` — input sharded over a mesh axis; the body runs on-device
+  per shard, reductions finish with the matching collective.  This is the
+  device-plane data-parallel executor of DESIGN.md §2.
+
+All algorithms return *values* under ``seq``/``vec``/``mesh`` and under
+``par`` as well (they internally join their tasks): parallelism is an
+implementation detail of the algorithm, exactly the C++ standard's stance.
+"""
+
+from __future__ import annotations
+
+import builtins
+import operator
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as _sched
+from repro.core.executor import ExecutionPolicy, par, seq, vec
+from repro.core.future import wait_all
+
+
+def _chunks(n: int, chunk: int) -> List[tuple]:
+    return [(i, min(i + chunk, n)) for i in range(0, n, chunk)]
+
+
+def _default_chunk(policy: ExecutionPolicy, n: int) -> int:
+    if policy.chunk_size:
+        return policy.chunk_size
+    rt = _sched.get_runtime()
+    return max(1, n // (4 * rt.num_workers))
+
+
+# ---------------------------------------------------------------- for_each
+def for_each(policy: ExecutionPolicy, data: Sequence[Any], fn: Callable[[Any], None]) -> None:
+    if policy.kind in ("seq", "vec"):
+        for x in data:
+            fn(x)
+        return
+    if policy.kind == "par":
+        n = len(data)
+        chunk = _default_chunk(policy, n)
+        rt = _sched.get_runtime()
+
+        def _run(lo: int, hi: int) -> None:
+            for i in range(lo, hi):
+                fn(data[i])
+
+        wait_all([rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)])
+        return
+    raise ValueError(f"for_each: unsupported policy {policy.kind}")
+
+
+# ---------------------------------------------------------------- transform
+def transform(policy: ExecutionPolicy, data: Any, fn: Callable[[Any], Any]) -> Any:
+    if policy.kind == "seq":
+        return [fn(x) for x in data]
+    if policy.kind == "vec":
+        return jax.vmap(fn)(jnp.asarray(data))
+    if policy.kind == "par":
+        n = len(data)
+        chunk = _default_chunk(policy, n)
+        rt = _sched.get_runtime()
+
+        def _run(lo: int, hi: int) -> List[Any]:
+            return [fn(data[i]) for i in range(lo, hi)]
+
+        futs = [rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)]
+        out: List[Any] = []
+        for f in futs:
+            out.extend(f.get())
+        return out
+    if policy.kind == "mesh":
+        arr = jnp.asarray(data)
+        sharding = jax.sharding.NamedSharding(
+            policy.mesh, jax.sharding.PartitionSpec(policy.axis)
+        )
+        arr = jax.device_put(arr, sharding)
+        return jax.jit(jax.vmap(fn), out_shardings=sharding)(arr)
+    raise ValueError(f"transform: unsupported policy {policy.kind}")
+
+
+# ------------------------------------------------------------------- reduce
+def reduce(
+    policy: ExecutionPolicy,
+    data: Any,
+    init: Any = 0,
+    op: Callable[[Any, Any], Any] = operator.add,
+) -> Any:
+    if policy.kind == "seq":
+        acc = init
+        for x in data:
+            acc = op(acc, x)
+        return acc
+    if policy.kind == "vec":
+        arr = jnp.asarray(data)
+        if op is operator.add:
+            return init + jnp.sum(arr)
+        acc = init
+        for x in arr:  # generic op: no vectorized shortcut
+            acc = op(acc, x)
+        return acc
+    if policy.kind == "par":
+        n = len(data)
+        chunk = _default_chunk(policy, n)
+        rt = _sched.get_runtime()
+
+        def _run(lo: int, hi: int) -> Any:
+            acc = data[lo]
+            for i in range(lo + 1, hi):
+                acc = op(acc, data[i])
+            return acc
+
+        futs = [rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)]
+        acc = init
+        for f in futs:  # op must be associative (C++ requirement)
+            acc = op(acc, f.get())
+        return acc
+    if policy.kind == "mesh":
+        arr = jnp.asarray(data)
+        mesh, axis = policy.mesh, policy.axis
+        sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+        arr = jax.device_put(arr, sharding)
+
+        def _body(x):  # per-shard partial + collective finish
+            return jax.lax.psum(jnp.sum(x), axis)
+
+        total = jax.jit(
+            jax.shard_map(
+                _body,
+                mesh=mesh,
+                in_specs=jax.sharding.PartitionSpec(axis),
+                out_specs=jax.sharding.PartitionSpec(),
+            )
+        )(arr)
+        return init + total
+    raise ValueError(f"reduce: unsupported policy {policy.kind}")
+
+
+def transform_reduce(
+    policy: ExecutionPolicy,
+    data: Any,
+    fn: Callable[[Any], Any],
+    init: Any = 0,
+    op: Callable[[Any, Any], Any] = operator.add,
+) -> Any:
+    if policy.kind == "vec":
+        return init + jnp.sum(jax.vmap(fn)(jnp.asarray(data)))
+    if policy.kind == "mesh":
+        return reduce(policy, transform(policy, data, fn), init=init, op=op)
+    return reduce(policy, [fn(x) for x in data] if policy.kind == "seq" else transform(policy, data, fn), init=init, op=op)
+
+
+# -------------------------------------------------------------------- scans
+def inclusive_scan(policy: ExecutionPolicy, data: Any, op: Callable = operator.add) -> Any:
+    if policy.kind in ("vec", "mesh"):
+        arr = jnp.asarray(data)
+        if op is operator.add:
+            return jnp.cumsum(arr)
+        return jax.lax.associative_scan(jax.vmap(op), arr)
+    out: List[Any] = []
+    acc: Optional[Any] = None
+    for x in data:
+        acc = x if acc is None else op(acc, x)
+        out.append(acc)
+    return out
+
+
+def exclusive_scan(policy: ExecutionPolicy, data: Any, init: Any = 0, op: Callable = operator.add) -> Any:
+    if policy.kind in ("vec", "mesh"):
+        arr = jnp.asarray(data)
+        if op is operator.add:
+            return jnp.concatenate([jnp.asarray([init], dtype=arr.dtype), init + jnp.cumsum(arr)[:-1]])
+    out: List[Any] = []
+    acc = init
+    for x in data:
+        out.append(acc)
+        acc = op(acc, x)
+    return out
+
+
+# --------------------------------------------------------------------- sort
+def sort(policy: ExecutionPolicy, data: Any) -> Any:
+    """Parallel merge-ish sort: chunk-sort on tasks, k-way merge on host."""
+    if policy.kind == "seq":
+        return builtins.sorted(data)
+    if policy.kind in ("vec", "mesh"):
+        return jnp.sort(jnp.asarray(data))
+    n = len(data)
+    chunk = _default_chunk(policy, n)
+    rt = _sched.get_runtime()
+    futs = [rt.spawn(lambda lo=lo, hi=hi: builtins.sorted(data[lo:hi])) for lo, hi in _chunks(n, chunk)]
+    import heapq
+
+    return list(heapq.merge(*[f.get() for f in futs]))
+
+
+# --------------------------------------------------------------- predicates
+def count_if(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> int:
+    if policy.kind == "vec":
+        return int(jnp.sum(jax.vmap(pred)(jnp.asarray(data))))
+    return int(transform_reduce(policy, data, lambda x: 1 if pred(x) else 0, init=0))
+
+
+def all_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> bool:
+    return count_if(policy, data, pred) == len(data)
+
+
+def any_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> bool:
+    return count_if(policy, data, pred) > 0
+
+
+def copy(policy: ExecutionPolicy, data: Any) -> Any:
+    if policy.kind in ("vec", "mesh"):
+        return jnp.array(jnp.asarray(data), copy=True)
+    return list(data)

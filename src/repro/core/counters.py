@@ -1,0 +1,286 @@
+"""APEX-style performance-counter framework (HPX §2.4).
+
+HPX exposes *intrinsic* performance counters under hierarchical symbolic
+names such as ``/threads{locality#0/total}/count/cumulative``; counters are
+registered with AGAS so they are readable from any locality, and they feed
+runtime-adaptivity decisions.
+
+This module is the TPU/JAX adaptation: counters sample host-side runtime
+metrics (task counts, steals, queue depths, step latencies) *and*
+HLO-derived metrics (collective bytes, FLOPs) published by the dry-run /
+trainer.  They are registered into :mod:`repro.core.agas` under their
+symbolic name so they resolve exactly like any other global object.
+
+Counter kinds
+-------------
+- ``Counter``        monotonically increasing value (``.../cumulative``)
+- ``Gauge``          instantaneous value (``.../instantaneous``)
+- ``TimerCounter``   accumulates durations; exposes count/total/mean/max
+- callable counters  lazily evaluated on read (e.g. queue length probes)
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+
+class Counter:
+    """Monotonic cumulative counter."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str, initial: float = 0.0):
+        self.name = name
+        self._value = initial
+        self._lock = threading.Lock()
+
+    def increment(self, by: float = 1.0) -> None:
+        with self._lock:
+            self._value += by
+
+    # HPX counters are read through a uniform ``get_value`` interface.
+    def get_value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = 0.0
+
+
+class Gauge:
+    """Instantaneous value counter."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str, initial: float = 0.0):
+        self.name = name
+        self._value = initial
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = value
+
+    def get_value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def reset(self) -> None:
+        self.set(0.0)
+
+
+class TimerCounter:
+    """Duration accumulator: count/total/mean/max, with EMA for adaptivity.
+
+    The exponentially-weighted mean is what the straggler detector and the
+    auto-tuner consume (cheap, windowless).
+    """
+
+    __slots__ = ("name", "count", "total", "max", "ema", "ema_alpha", "_lock")
+
+    def __init__(self, name: str, ema_alpha: float = 0.2):
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+        self.ema: Optional[float] = None
+        self.ema_alpha = ema_alpha
+        self._lock = threading.Lock()
+
+    def add(self, seconds: float) -> None:
+        with self._lock:
+            self.count += 1
+            self.total += seconds
+            self.max = max(self.max, seconds)
+            self.ema = (
+                seconds
+                if self.ema is None
+                else self.ema_alpha * seconds + (1.0 - self.ema_alpha) * self.ema
+            )
+
+    def time(self):
+        """Context manager measuring a block."""
+        return _TimerCtx(self)
+
+    def get_value(self) -> float:  # mean, for the uniform interface
+        with self._lock:
+            return self.total / self.count if self.count else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            mean = self.total / self.count if self.count else 0.0
+            return {
+                "count": float(self.count),
+                "total": self.total,
+                "mean": mean,
+                "max": self.max,
+                "ema": self.ema if self.ema is not None else 0.0,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.count = 0
+            self.total = 0.0
+            self.max = 0.0
+            self.ema = None
+
+
+class _TimerCtx:
+    __slots__ = ("timer", "t0")
+
+    def __init__(self, timer: TimerCounter):
+        self.timer = timer
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.timer.add(time.perf_counter() - self.t0)
+        return False
+
+
+@dataclass
+class CounterRegistry:
+    """Registry of hierarchically-named counters (the APEX analogue).
+
+    Names follow the HPX convention ``/object{instance}/metric``, e.g.::
+
+        /scheduler{pool#0}/tasks/executed
+        /scheduler{pool#0}/tasks/stolen
+        /agas{root}/objects/count
+        /train{step}/duration
+        /parcel{port#0}/bytes/sent
+    """
+
+    _counters: Dict[str, Any] = field(default_factory=dict)
+    _lock: threading.RLock = field(default_factory=threading.RLock)
+
+    def register(self, counter: Any, name: Optional[str] = None) -> Any:
+        name = name or counter.name
+        with self._lock:
+            self._counters[name] = counter
+        # Publish into AGAS so the counter resolves like a global object.
+        try:  # deferred import: agas depends on nothing here
+            from repro.core import agas as _agas
+
+            _agas.default().register_name(f"/counters{name}", counter, replace=True)
+        except Exception:
+            pass  # AGAS not initialised (e.g. unit tests on bare registry)
+        return counter
+
+    def counter(self, name: str) -> Counter:
+        """Get-or-create a cumulative counter."""
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = Counter(name)
+                self._counters[name] = c
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = Gauge(name)
+                self._counters[name] = c
+            return c
+
+    def timer(self, name: str) -> TimerCounter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = TimerCounter(name)
+                self._counters[name] = c
+            return c
+
+    def register_callable(self, name: str, fn: Callable[[], float]) -> None:
+        """Lazily-evaluated counter (e.g. instantaneous queue length)."""
+        with self._lock:
+            self._counters[name] = _CallableCounter(name, fn)
+
+    def get(self, name: str) -> Optional[Any]:
+        with self._lock:
+            return self._counters.get(name)
+
+    def get_value(self, name: str) -> float:
+        c = self.get(name)
+        if c is None:
+            raise KeyError(f"no such performance counter: {name}")
+        return c.get_value()
+
+    def query(self, pattern: str) -> List[Tuple[str, float]]:
+        """Glob query, HPX ``--hpx:print-counter`` style: ``/scheduler*``."""
+        with self._lock:
+            names = sorted(self._counters)
+        return [
+            (n, self._counters[n].get_value())
+            for n in names
+            if fnmatch.fnmatch(n, pattern)
+        ]
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._counters)
+
+    def reset_all(self) -> None:
+        with self._lock:
+            for c in self._counters.values():
+                if hasattr(c, "reset"):
+                    c.reset()
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return {n: c.get_value() for n, c in self._counters.items()}
+
+
+class _CallableCounter:
+    __slots__ = ("name", "_fn")
+
+    def __init__(self, name: str, fn: Callable[[], float]):
+        self.name = name
+        self._fn = fn
+
+    def get_value(self) -> float:
+        return float(self._fn())
+
+    def reset(self) -> None:
+        pass
+
+
+_default: Optional[CounterRegistry] = None
+_default_lock = threading.Lock()
+
+
+def default() -> CounterRegistry:
+    """Process-wide registry (lives across runtime init/finalize)."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = CounterRegistry()
+        return _default
+
+
+def counter(name: str) -> Counter:
+    return default().counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return default().gauge(name)
+
+
+def timer(name: str) -> TimerCounter:
+    return default().timer(name)
+
+
+def query(pattern: str) -> List[Tuple[str, float]]:
+    return default().query(pattern)
+
+
+def get_value(name: str) -> float:
+    return default().get_value(name)

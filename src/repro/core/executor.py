@@ -1,0 +1,43 @@
+"""Execution policies & executors (HPX P6 substrate).
+
+C++17 parallel algorithms take an *execution policy*; HPX extends these with
+*executors* binding policies to concrete resources.  Ours:
+
+- ``seq``            sequential, in the calling thread;
+- ``par``            chunked across the AMT scheduler's workers (host);
+- ``vec``            vectorized via jax.vmap / jnp (SIMD analogue);
+- ``mesh(mesh,axis)``  device-parallel: data sharded over a mesh axis, the
+                       algorithm body executes per-shard (TPU analogue of
+                       HPX distributed executors).
+
+``par.on(executor)`` / ``with_chunk_size`` mirror the HPX spelling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Optional
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    kind: str  # "seq" | "par" | "vec" | "mesh"
+    chunk_size: Optional[int] = None
+    mesh: Any = None
+    axis: Optional[str] = None
+
+    def with_chunk_size(self, n: int) -> "ExecutionPolicy":
+        return replace(self, chunk_size=int(n))
+
+    def on(self, mesh: Any, axis: str = "data") -> "ExecutionPolicy":
+        """Bind to a device mesh → a distributed (device-plane) policy."""
+        return replace(self, kind="mesh", mesh=mesh, axis=axis)
+
+
+seq = ExecutionPolicy("seq")
+par = ExecutionPolicy("par")
+vec = ExecutionPolicy("vec")
+
+
+def mesh_policy(mesh: Any, axis: str = "data") -> ExecutionPolicy:
+    return ExecutionPolicy("mesh", mesh=mesh, axis=axis)

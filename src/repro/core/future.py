@@ -1,0 +1,259 @@
+"""Futures, promises and composition primitives (HPX P1).
+
+HPX's central abstraction is the *future*: a proxy for a value that will be
+computed asynchronously, enabling wait-free composition via ``.then()``,
+``when_all`` / ``when_any`` and ``dataflow`` (see :mod:`repro.core.dataflow`).
+
+JAX note: a ``jax.Array`` produced by a jitted computation is *already* a
+future — XLA dispatch is asynchronous and the host only blocks when the value
+is read.  ``repro.core.Future`` is the host-plane complement: it sequences
+*host* work (step dispatch, I/O, checkpointing, serving continuations) on the
+AMT scheduler, while device work overlaps underneath.  ``Future.get`` on a
+value containing ``jax.Array`` leaves therefore composes both planes.
+
+Deadlock-freedom: ``Future.get`` called *from a scheduler worker thread*
+does not merely block — it runs a *help-along* loop, executing pending tasks
+while it waits.  This mirrors HPX's user-level thread suspension (the paper's
+"oversubscribing execution resources"): a blocked logical task never wastes
+its execution resource.
+"""
+
+from __future__ import annotations
+
+import threading
+from enum import Enum
+from typing import Any, Callable, Generic, Iterable, List, Optional, Sequence, TypeVar
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+
+class FutureState(Enum):
+    PENDING = 0
+    READY = 1
+    FAILED = 2
+
+
+class FutureError(RuntimeError):
+    pass
+
+
+class Future(Generic[T]):
+    """Read side of a :class:`Promise`. One-shot, many readers."""
+
+    __slots__ = ("_state", "_value", "_exc", "_cbs", "_cond")
+
+    def __init__(self) -> None:
+        self._state = FutureState.PENDING
+        self._value: Optional[T] = None
+        self._exc: Optional[BaseException] = None
+        self._cbs: List[Callable[["Future[T]"], None]] = []
+        self._cond = threading.Condition()
+
+    # -- state ----------------------------------------------------------
+    def is_ready(self) -> bool:
+        with self._cond:
+            return self._state is not FutureState.PENDING
+
+    def has_value(self) -> bool:
+        with self._cond:
+            return self._state is FutureState.READY
+
+    def has_exception(self) -> bool:
+        with self._cond:
+            return self._state is FutureState.FAILED
+
+    # -- completion (used by Promise) ------------------------------------
+    def _set(self, value: Optional[T], exc: Optional[BaseException]) -> None:
+        with self._cond:
+            if self._state is not FutureState.PENDING:
+                raise FutureError("promise already satisfied")
+            self._value = value
+            self._exc = exc
+            self._state = FutureState.FAILED if exc is not None else FutureState.READY
+            cbs, self._cbs = self._cbs, []
+            self._cond.notify_all()
+        for cb in cbs:
+            cb(self)
+
+    # -- access -----------------------------------------------------------
+    def get(self, timeout: Optional[float] = None) -> T:
+        """Wait for and return the value (re-raises a stored exception).
+
+        From a worker thread this *helps along* — executes queued tasks while
+        waiting, so nested blocking cannot starve the pool.
+        """
+        from repro.core import scheduler as _sched  # deferred, avoids cycle
+
+        rt = _sched.current_runtime()
+        if rt is not None and rt.on_worker_thread():
+            rt._help_until(self, timeout)  # executes tasks until ready
+        with self._cond:
+            if not self._cond.wait_for(
+                lambda: self._state is not FutureState.PENDING, timeout
+            ):
+                raise TimeoutError("future.get timed out")
+            if self._exc is not None:
+                raise self._exc
+            return self._value  # type: ignore[return-value]
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        from repro.core import scheduler as _sched
+
+        rt = _sched.current_runtime()
+        if rt is not None and rt.on_worker_thread():
+            rt._help_until(self, timeout)
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._state is not FutureState.PENDING, timeout
+            )
+
+    def wait_passive(self, timeout: Optional[float] = None) -> bool:
+        """Plain blocking wait, never helps along (used *by* the help loop)."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._state is not FutureState.PENDING, timeout
+            )
+
+    def exception(self) -> Optional[BaseException]:
+        with self._cond:
+            return self._exc
+
+    # -- composition ------------------------------------------------------
+    def _on_ready(self, cb: Callable[["Future[T]"], None]) -> None:
+        """Run ``cb(self)`` when ready (immediately if already ready)."""
+        run_now = False
+        with self._cond:
+            if self._state is FutureState.PENDING:
+                self._cbs.append(cb)
+            else:
+                run_now = True
+        if run_now:
+            cb(self)
+
+    def then(self, fn: Callable[["Future[T]"], U], priority: Optional[int] = None) -> "Future[U]":
+        """HPX ``future::then`` — attach a continuation, get a new future.
+
+        ``fn`` receives the *ready future* (HPX semantics, lets continuations
+        inspect exceptions).  The continuation is a real task on the
+        scheduler, so chains parallelize across workers.
+        """
+        from repro.core import scheduler as _sched
+
+        promise: Promise[U] = Promise()
+
+        def _launch(ready: "Future[T]") -> None:
+            def _run() -> None:
+                try:
+                    promise.set_value(fn(ready))
+                except BaseException as e:  # noqa: BLE001 — futures carry any error
+                    promise.set_exception(e)
+
+            rt = _sched.current_runtime()
+            if rt is not None:
+                rt.spawn_raw(_run, priority=priority)
+            else:  # no runtime: degrade to inline execution
+                _run()
+
+        self._on_ready(_launch)
+        return promise.future()
+
+    def then_value(self, fn: Callable[[T], U]) -> "Future[U]":
+        """Convenience: continuation over the *value* (propagates errors)."""
+        return self.then(lambda f: fn(f.get()))
+
+
+class Promise(Generic[T]):
+    """Write side: satisfied exactly once."""
+
+    __slots__ = ("_future",)
+
+    def __init__(self) -> None:
+        self._future: Future[T] = Future()
+
+    def future(self) -> Future[T]:
+        return self._future
+
+    def set_value(self, value: T) -> None:
+        self._future._set(value, None)
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._future._set(None, exc)
+
+
+def make_ready_future(value: T) -> Future[T]:
+    p: Promise[T] = Promise()
+    p.set_value(value)
+    return p.future()
+
+
+def make_exceptional_future(exc: BaseException) -> Future[Any]:
+    p: Promise[Any] = Promise()
+    p.set_exception(exc)
+    return p.future()
+
+
+def when_all(futures: Sequence[Future[Any]]) -> Future[List[Future[Any]]]:
+    """Future that becomes ready when *all* inputs are ready.
+
+    Like HPX, the result is the list of (ready) input futures — exceptions
+    are observed by the consumer, not swallowed here.
+    """
+    futures = list(futures)
+    promise: Promise[List[Future[Any]]] = Promise()
+    if not futures:
+        promise.set_value([])
+        return promise.future()
+    remaining = [len(futures)]
+    lock = threading.Lock()
+
+    def _one_done(_f: Future[Any]) -> None:
+        with lock:
+            remaining[0] -= 1
+            done = remaining[0] == 0
+        if done:
+            promise.set_value(futures)
+
+    for f in futures:
+        f._on_ready(_one_done)
+    return promise.future()
+
+
+def when_any(futures: Sequence[Future[Any]]) -> Future[int]:
+    """Future ready when *any* input is; value = index of the winner."""
+    futures = list(futures)
+    if not futures:
+        raise ValueError("when_any of empty sequence")
+    promise: Promise[int] = Promise()
+    fired = threading.Event()
+
+    def _make(i: int) -> Callable[[Future[Any]], None]:
+        def _cb(_f: Future[Any]) -> None:
+            if not fired.is_set():
+                # benign race: Event + one-shot promise; double-set guarded
+                try:
+                    promise.set_value(i)
+                    fired.set()
+                except FutureError:
+                    pass
+
+        return _cb
+
+    for i, f in enumerate(futures):
+        f._on_ready(_make(i))
+    return promise.future()
+
+
+def wait_all(futures: Iterable[Future[Any]], timeout: Optional[float] = None) -> None:
+    when_all(list(futures)).wait(timeout)
+
+
+def unwrap(value: Any) -> Any:
+    """Recursively resolve Futures inside (nested) lists/tuples/dicts."""
+    if isinstance(value, Future):
+        return unwrap(value.get())
+    if isinstance(value, (list, tuple)):
+        return type(value)(unwrap(v) for v in value)
+    if isinstance(value, dict):
+        return {k: unwrap(v) for k, v in value.items()}
+    return value

@@ -1,0 +1,66 @@
+"""Object migration & elastic resharding (HPX P3: "load balancing through
+object migration").
+
+In HPX an object migrates between process address spaces while its GID stays
+valid.  Here an object is a pytree of ``jax.Array`` leaves and a "locality"
+is a sharding; migration is ``device_put`` onto the new placement (XLA emits
+the minimal resharding collective) plus an AGAS generation bump.
+
+This single primitive gives us the framework's fault-tolerance story:
+
+- **elastic restart** — checkpoint written on mesh A restores onto mesh B
+  (different chip count / topology): ``checkpoint.restore`` loads host
+  arrays and calls :func:`migrate_tree` with B's shardings;
+- **shrink-on-failure** — on a simulated node loss, the trainer rebuilds a
+  smaller mesh and migrates live state onto it;
+- **load rebalancing** — AGAS-registered KV caches move between serving
+  meshes as request load shifts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.core import agas as _agas
+from repro.core import counters as _counters
+
+
+def migrate_tree(tree: Any, shardings: Any) -> Any:
+    """Reshard every leaf of ``tree`` onto the matching sharding.
+
+    ``shardings`` is either a single sharding (applied to all leaves) or a
+    pytree of shardings matching ``tree``'s structure.
+    """
+    _counters.counter("/migration/trees/cumulative").increment()
+    return jax.device_put(tree, shardings)
+
+
+def migrate(gid_or_name, shardings: Any, resolver: Optional[_agas.AGAS] = None) -> int:
+    """Migrate an AGAS-registered object to a new placement.
+
+    The GID remains valid; readers that re-resolve see the new placement
+    (HPX semantics: AGAS is responsible for address resolution after
+    migration).  Returns the new generation number.
+    """
+    resolver = resolver or _agas.default()
+    rec = resolver.record(gid_or_name)
+    moved = migrate_tree(rec.obj, shardings)
+    return resolver.rebind(rec.gid, moved, placement=shardings)
+
+
+def migrate_to_mesh(gid_or_name, new_mesh, spec_fn, resolver: Optional[_agas.AGAS] = None) -> int:
+    """Migrate onto a *different mesh* (elastic scaling).
+
+    ``spec_fn(path_free_leaf) -> PartitionSpec`` is usually
+    ``plan.sharding_for`` from :mod:`repro.dist.plan`; we rebuild
+    NamedShardings against ``new_mesh`` and reshard.
+    """
+    resolver = resolver or _agas.default()
+    rec = resolver.record(gid_or_name)
+    shardings = jax.tree.map(
+        lambda leaf: jax.sharding.NamedSharding(new_mesh, spec_fn(leaf)), rec.obj
+    )
+    moved = migrate_tree(rec.obj, shardings)
+    return resolver.rebind(rec.gid, moved, placement=new_mesh)

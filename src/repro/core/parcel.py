@@ -1,0 +1,157 @@
+"""Parcels — one-sided active messages / RPC (HPX P4, paper §2.3).
+
+A parcel ships *a function invocation* to where the data lives ("send work
+to data, not data to work"); the destination never polls, and the result
+comes back through a future.
+
+TPU/JAX adaptation — two transport planes:
+
+1. **Host plane** (this module): an :class:`Action` is a registered, named
+   function; ``apply(action, target_gid, *args)`` resolves the target via
+   AGAS and runs the action *against the live object*, returning a Future.
+   Since the target object may be a sharded ``jax.Array`` pytree, "executing
+   where the data lives" is real: the action body runs jitted computations
+   whose operands never leave their shards.
+
+2. **Device plane**: inside an XLA program, parcel transport *is* a
+   collective.  ``shard_parcel`` wraps ``jax.experimental.shard_map`` so an
+   action body executes per-shard with explicit collectives available; the
+   flagship production user is MoE expert dispatch (``models/moe.py``) where
+   tokens are parcels ``all_to_all``-routed to expert localities.
+
+Zero-copy serialization of the C++ runtime [Biddiscombe et al. 2017] maps to
+XLA buffer donation — see ``train/step.py`` (donated state) — so a parcel
+never copies what it can alias.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core import agas as _agas
+from repro.core import counters as _counters
+from repro.core import scheduler as _sched
+from repro.core.future import Future
+
+
+class ActionRegistry:
+    """Named action table (HPX: ``HPX_REGISTER_ACTION``)."""
+
+    def __init__(self) -> None:
+        self._actions: Dict[str, Callable[..., Any]] = {}
+        self._lock = threading.Lock()
+
+    def register(self, fn: Callable[..., Any], name: Optional[str] = None) -> str:
+        name = name or f"{fn.__module__}.{fn.__qualname__}"
+        with self._lock:
+            if name in self._actions and self._actions[name] is not fn:
+                raise KeyError(f"action name already registered: {name!r}")
+            self._actions[name] = fn
+        return name
+
+    def resolve(self, name: str) -> Callable[..., Any]:
+        with self._lock:
+            return self._actions[name]
+
+    def names(self):
+        with self._lock:
+            return sorted(self._actions)
+
+
+_registry = ActionRegistry()
+
+
+def action(fn: Callable[..., Any] = None, *, name: Optional[str] = None):
+    """Decorator registering an action; the wrapper keeps the plain call.
+
+    >>> @action
+    ... def scale(obj, s): return obj * s
+    """
+
+    def deco(f: Callable[..., Any]) -> Callable[..., Any]:
+        f._action_name = _registry.register(f, name)  # type: ignore[attr-defined]
+        return f
+
+    return deco(fn) if fn is not None else deco
+
+
+@dataclass
+class Parcel:
+    """destination GID + action + arguments (+ continuation promise)."""
+
+    action_name: str
+    target: Any  # GID or symbolic name
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+
+
+class ParcelPort:
+    """Local parcel port: decodes parcels and spawns the action as a task.
+
+    In HPX the parcelport moves bytes between nodes; in a single-controller
+    JAX program every shard is addressable from the controller, so the
+    "network" hop is the device placement of the target object — the action
+    body's jitted ops execute on the target's devices.  The port still gives
+    us HPX semantics: one-sided, asynchronous, future-returning, counted.
+    """
+
+    def __init__(self, name: str = "port#0", resolver: Optional[_agas.AGAS] = None):
+        self.name = name
+        self.resolver = resolver or _agas.default()
+        reg = _counters.default()
+        self.c_sent = reg.counter(f"/parcel{{{name}}}/count/sent")
+        self.c_actions = reg.counter(f"/parcel{{{name}}}/actions/executed")
+
+    def send(self, parcel: Parcel) -> Future[Any]:
+        """Deliver a parcel: resolve target, run action where the data is."""
+        self.c_sent.increment()
+        resolver = self.resolver
+
+        def _deliver() -> Any:
+            rec = resolver.record(parcel.target)
+            fn = _registry.resolve(parcel.action_name)
+            self.c_actions.increment()
+            return fn(rec.obj, *parcel.args, **parcel.kwargs)
+
+        return _sched.get_runtime().spawn(_deliver)
+
+    def apply(self, fn: Callable[..., Any], target, *args: Any, **kwargs: Any) -> Future[Any]:
+        """``hpx::async(action, gid, args...)`` convenience."""
+        name = getattr(fn, "_action_name", None) or _registry.register(fn)
+        return self.send(Parcel(name, target, args, kwargs))
+
+
+_port: Optional[ParcelPort] = None
+_port_lock = threading.Lock()
+
+
+def default_port() -> ParcelPort:
+    global _port
+    with _port_lock:
+        if _port is None:
+            _port = ParcelPort()
+        return _port
+
+
+def apply(fn: Callable[..., Any], target, *args: Any, **kwargs: Any) -> Future[Any]:
+    """Module-level one-sided invoke: run ``fn(object_at(target), *args)``."""
+    return default_port().apply(fn, target, *args, **kwargs)
+
+
+# ----------------------------------------------------------------- device plane
+def shard_parcel(mesh, body: Callable[..., Any], in_specs, out_specs, check_vma: bool = False):
+    """Device-plane parcel: execute ``body`` at every shard of the operands.
+
+    Thin wrapper over ``shard_map`` so call sites read as parcel semantics
+    ("ship this function to the shards") and so the import point for the
+    transport is unique.  Collectives available inside ``body`` —
+    ``jax.lax.all_to_all`` (MoE token parcels), ``psum``/``ppermute`` — are
+    the transport layer.
+    """
+    from jax.sharding import use_mesh  # noqa: F401  (documents requirement)
+    import jax
+
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=check_vma)

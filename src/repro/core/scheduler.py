@@ -1,0 +1,306 @@
+"""Lightweight work-stealing task scheduler (HPX P2, paper §2.1).
+
+The paper's thread manager offers interchangeable scheduling policies:
+
+- ``static``       one queue per core, **no stealing**;
+- ``local``        (default) one queue per core + work stealing from
+                   neighbours + high-priority queues;
+- ``hierarchical`` a tree of queues — tasks enqueue at the root and
+                   *trickle down* as cores fetch work.
+
+TPU adaptation: there are no user-level threads inside an XLA program, so
+this scheduler runs on the *host orchestration plane*: it drives data
+pipeline stages, device-step dispatch (which is async in JAX — the host
+thread returns immediately while the TPU computes), checkpoint I/O and
+serving continuations.  The paper's "oversubscribing execution resources"
+maps to spawning many more logical tasks than workers; blocked tasks
+*help along* (see :meth:`Runtime._help_until`), the analogue of HPX
+suspending a user-level thread instead of an OS thread.
+
+Performance counters published (HPX names, §2.4):
+
+    /scheduler{pool#0}/tasks/spawned
+    /scheduler{pool#0}/tasks/executed
+    /scheduler{pool#0}/tasks/stolen
+    /scheduler{pool#0}/tasks/pending        (instantaneous)
+    /scheduler{pool#0}/task/duration        (timer)
+"""
+
+from __future__ import annotations
+
+import collections
+import random
+import threading
+from typing import Any, Callable, Deque, List, Optional
+
+from repro.core import counters as _counters
+from repro.core.future import Future, Promise
+
+# Task priorities (HPX: thread_priority::{low,normal,high,boost}).
+PRIORITY_LOW = 0
+PRIORITY_NORMAL = 1
+PRIORITY_HIGH = 2
+
+_POLICIES = ("static", "local", "hierarchical")
+
+
+class _Task:
+    __slots__ = ("fn", "promise", "priority")
+
+    def __init__(self, fn: Callable[[], Any], promise: Optional[Promise], priority: int):
+        self.fn = fn
+        self.promise = promise
+        self.priority = priority
+
+    def run(self) -> None:
+        if self.promise is None:
+            self.fn()
+            return
+        try:
+            self.promise.set_value(self.fn())
+        except BaseException as e:  # noqa: BLE001
+            self.promise.set_exception(e)
+
+
+class Runtime:
+    """An HPX-style runtime instance (thread pool + scheduler policy).
+
+    Use as a context manager, or via module-level :func:`init`/:func:`finalize`::
+
+        with Runtime(num_workers=4, policy="local") as rt:
+            f = rt.spawn(lambda: 2 + 2)
+            assert f.get() == 4
+    """
+
+    def __init__(
+        self,
+        num_workers: int = 4,
+        policy: str = "local",
+        pool_name: str = "pool#0",
+        steal_seed: int = 0,
+    ):
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown scheduling policy {policy!r}; choose from {_POLICIES}")
+        self.policy = policy
+        self.num_workers = max(1, int(num_workers))
+        self.pool_name = pool_name
+        self._queues: List[Deque[_Task]] = [collections.deque() for _ in range(self.num_workers)]
+        self._hi_queue: Deque[_Task] = collections.deque()  # shared high-priority queue
+        self._root_queue: Deque[_Task] = collections.deque()  # hierarchical root
+        self._lock = threading.Lock()
+        self._work_available = threading.Condition(self._lock)
+        self._shutdown = False
+        self._threads: List[threading.Thread] = []
+        self._tls = threading.local()
+        self._rng = random.Random(steal_seed)
+        self._spawn_rr = 0
+
+        reg = _counters.default()
+        p = f"/scheduler{{{pool_name}}}"
+        self.c_spawned = reg.counter(f"{p}/tasks/spawned")
+        self.c_executed = reg.counter(f"{p}/tasks/executed")
+        self.c_stolen = reg.counter(f"{p}/tasks/stolen")
+        self.t_task = reg.timer(f"{p}/task/duration")
+        reg.register_callable(f"{p}/tasks/pending", self._pending_count)
+
+        for i in range(self.num_workers):
+            t = threading.Thread(target=self._worker, args=(i,), daemon=True, name=f"repro-{pool_name}-w{i}")
+            self._threads.append(t)
+            t.start()
+
+    # ------------------------------------------------------------------ api
+    def spawn(
+        self,
+        fn: Callable[..., Any],
+        *args: Any,
+        priority: int = PRIORITY_NORMAL,
+        worker_hint: Optional[int] = None,
+        **kwargs: Any,
+    ) -> Future[Any]:
+        """``hpx::async`` — schedule ``fn(*args, **kwargs)``, return a Future."""
+        promise: Promise[Any] = Promise()
+        task = _Task((lambda: fn(*args, **kwargs)) if (args or kwargs) else fn, promise, priority)
+        self._enqueue(task, worker_hint)
+        return promise.future()
+
+    def spawn_raw(self, fn: Callable[[], Any], priority: Optional[int] = None,
+                  worker_hint: Optional[int] = None) -> None:
+        """Fire-and-forget task with no promise (continuation plumbing)."""
+        self._enqueue(_Task(fn, None, priority if priority is not None else PRIORITY_NORMAL), worker_hint)
+
+    def on_worker_thread(self) -> bool:
+        return getattr(self._tls, "worker_id", None) is not None
+
+    def current_worker(self) -> Optional[int]:
+        return getattr(self._tls, "worker_id", None)
+
+    def pending(self) -> int:
+        return int(self._pending_count())
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            self._work_available.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=10.0)
+        global _runtime
+        with _runtime_lock:
+            if _runtime is self:
+                _runtime = None
+
+    def __enter__(self) -> "Runtime":
+        _set_runtime(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
+
+    # ----------------------------------------------------------- internals
+    def _pending_count(self) -> float:
+        with self._lock:
+            return float(
+                sum(len(q) for q in self._queues) + len(self._hi_queue) + len(self._root_queue)
+            )
+
+    def _enqueue(self, task: _Task, worker_hint: Optional[int]) -> None:
+        self.c_spawned.increment()
+        with self._lock:
+            if task.priority >= PRIORITY_HIGH:
+                self._hi_queue.append(task)
+            elif self.policy == "hierarchical":
+                # tasks always enqueue at the root and trickle down
+                self._root_queue.append(task)
+            else:
+                wid = worker_hint
+                if wid is None:
+                    wid = self.current_worker()  # child tasks stay local (work-first)
+                if wid is None:
+                    wid = self._spawn_rr % self.num_workers
+                    self._spawn_rr += 1
+                self._queues[wid % self.num_workers].append(task)
+            self._work_available.notify()
+
+    def _try_pop(self, wid: int) -> Optional[_Task]:
+        """Pop under self._lock. Order: high-prio, own queue (LIFO), then
+        policy-dependent acquisition (steal FIFO / trickle from root)."""
+        if self._hi_queue:
+            return self._hi_queue.popleft()
+        q = self._queues[wid]
+        if q:
+            return q.pop()  # LIFO for locality
+        if self.policy == "hierarchical":
+            if self._root_queue:
+                task = self._root_queue.popleft()
+                # trickle a small batch down into the local queue
+                for _ in range(min(3, len(self._root_queue))):
+                    q.append(self._root_queue.popleft())
+                return task
+            return None
+        if self.policy == "local":
+            # steal FIFO (oldest = largest granularity) from a random victim
+            offs = self._rng.randrange(1, self.num_workers) if self.num_workers > 1 else 0
+            for k in range(self.num_workers - 1):
+                vid = (wid + offs + k) % self.num_workers
+                if vid == wid:
+                    continue
+                victim = self._queues[vid]
+                if victim:
+                    self.c_stolen.increment()
+                    return victim.popleft()
+        return None  # static: never steal
+
+    def _run_task(self, task: _Task) -> None:
+        with self.t_task.time():
+            task.run()
+        self.c_executed.increment()
+
+    def _worker(self, wid: int) -> None:
+        self._tls.worker_id = wid
+        while True:
+            with self._lock:
+                task = self._try_pop(wid)
+                if task is None:
+                    if self._shutdown:
+                        return
+                    self._work_available.wait(timeout=0.05)
+                    continue
+            self._run_task(task)
+
+    def _help_until(self, future: Future, timeout: Optional[float]) -> None:
+        """Help-along loop: a worker blocked on ``future`` executes other
+        tasks instead of idling (HPX user-thread suspension analogue)."""
+        wid = self.current_worker()
+        if wid is None:
+            return
+        import time as _time
+
+        deadline = None if timeout is None else _time.perf_counter() + timeout
+        while not future.is_ready():
+            with self._lock:
+                task = self._try_pop(wid)
+            if task is not None:
+                self._run_task(task)
+            else:
+                if deadline is not None and _time.perf_counter() > deadline:
+                    return
+                future.wait_passive(0.002)
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until no tasks are pending (test/benchmark helper)."""
+        import time as _time
+
+        deadline = _time.perf_counter() + timeout
+        while self._pending_count() > 0:
+            if _time.perf_counter() > deadline:
+                raise TimeoutError("scheduler drain timed out")
+            _time.sleep(0.001)
+
+
+# --------------------------------------------------------------- module api
+_runtime: Optional[Runtime] = None
+_runtime_lock = threading.Lock()
+
+
+def _set_runtime(rt: Runtime) -> None:
+    global _runtime
+    with _runtime_lock:
+        _runtime = rt
+
+
+def init(num_workers: int = 4, policy: str = "local") -> Runtime:
+    """``hpx::init`` — bring up (or return) the global runtime."""
+    global _runtime
+    with _runtime_lock:
+        if _runtime is None:
+            _runtime = Runtime(num_workers=num_workers, policy=policy)
+        return _runtime
+
+
+def finalize() -> None:
+    """``hpx::finalize`` — tear down the global runtime."""
+    global _runtime
+    with _runtime_lock:
+        rt, _runtime = _runtime, None
+    if rt is not None:
+        rt.shutdown()
+
+
+def current_runtime() -> Optional[Runtime]:
+    return _runtime
+
+
+def get_runtime() -> Runtime:
+    """Global runtime, creating a default one on first use."""
+    return init()
+
+
+def spawn(fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Future[Any]:
+    """``hpx::async`` on the global runtime."""
+    return get_runtime().spawn(fn, *args, **kwargs)
+
+
+async_ = spawn  # HPX spelling

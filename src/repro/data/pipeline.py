@@ -1,0 +1,100 @@
+"""Data pipeline: synthetic token stream with AMT-scheduler prefetch.
+
+Production shape without a dataset dependency: a deterministic PRNG token
+stream (seeded per step — restart-reproducible), host-side batch assembly
+on the AMT scheduler (P2), and a double-buffered prefetch queue so batch
+(i+1) is built and transferred while the device runs step i — the paper's
+"overlapping communication and computation" on the host plane.  The
+trainer consumes ``Future[batch]``s (futurization, P1).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import counters as _counters
+from repro.core import scheduler as _sched
+from repro.core.future import Future
+
+
+@dataclass
+class DataConfig:
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    prefetch: int = 2
+
+
+def synth_batch(cfg: ModelConfig, dcfg: DataConfig, step: int,
+                shardings: Optional[Dict[str, Any]] = None) -> Dict[str, jax.Array]:
+    """Deterministic synthetic batch for ``step`` (restart-reproducible).
+
+    Token stream has learnable structure (a noisy cyclic grammar) so train
+    loss demonstrably falls below the uniform entropy floor.
+    """
+    rng = np.random.default_rng(dcfg.seed * 1_000_003 + step)
+    B, S = dcfg.batch_size, dcfg.seq_len + 1
+    V = cfg.vocab_size
+    period = max(2, min(64, V // 4))
+    phase = rng.integers(0, period, size=(B, 1))
+    base = (np.arange(S)[None, :] + phase) % period
+    noise = rng.integers(0, V, size=(B, S))
+    keep = rng.random((B, S)) < 0.85  # 85% grammar, 15% noise
+    tokens = np.where(keep, base, noise).astype(np.int32)
+    batch: Dict[str, Any] = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = rng.standard_normal(
+            (B, cfg.n_patches, cfg.d_model)).astype(np.float32)
+    if cfg.family == "encdec":
+        batch["enc"] = rng.standard_normal(
+            (B, dcfg.seq_len, cfg.d_model)).astype(np.float32)
+    out = {}
+    for k, v in batch.items():
+        arr = jnp.asarray(v, jnp.bfloat16 if v.dtype == np.float32 else None)
+        if shardings and k in shardings:
+            arr = jax.device_put(arr, shardings[k])
+        out[k] = arr
+    return out
+
+
+class Prefetcher:
+    """AMT-driven double buffering: ``get(step)`` returns a Future[batch];
+    the batch for step+prefetch is already being assembled by pool tasks."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig,
+                 shardings: Optional[Dict[str, Any]] = None):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.shardings = shardings
+        self._pending: Dict[int, Future] = {}
+        self._lock = threading.Lock()
+        self.c_built = _counters.counter("/data{pipeline#0}/batches/built")
+        self.t_build = _counters.timer("/data{pipeline#0}/build/duration")
+
+    def _spawn(self, step: int) -> Future:
+        def build():
+            with self.t_build.time():
+                b = synth_batch(self.cfg, self.dcfg, step, self.shardings)
+            self.c_built.increment()
+            return b
+
+        return _sched.get_runtime().spawn(build)
+
+    def get(self, step: int) -> Future:
+        with self._lock:
+            fut = self._pending.pop(step, None)
+            if fut is None:
+                fut = self._spawn(step)
+            # keep the window full
+            for s in range(step + 1, step + 1 + self.dcfg.prefetch):
+                if s not in self._pending:
+                    self._pending[s] = self._spawn(s)
+        return fut

@@ -1,0 +1,95 @@
+"""Flash-decoding kernel (TPU Pallas): one-token attention over a long KV
+cache, KV-blocked with a running log-sum-exp combine.
+
+Decode attention is memory-bound (the whole cache streams HBM→VMEM once per
+token); the kernel's job is to keep that stream dense and the softmax state
+in registers/VMEM.  Grid: (rows, T/block_k) with the KV dim sequential —
+(m, l, acc) scratch carries the online softmax across KV blocks, exactly the
+combine that GSPMD emits across *devices* when the cache is
+sequence-sharded (DESIGN.md §5) — same math, one level down.
+
+Layout (from ops.py): q (R, Dh) with R = B·KV·G; k/v (R, T, Dh).
+``length`` masks positions ≥ the current cache fill (ring buffers pass T).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)  # (1, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array, *, block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (R, Dh); k/v: (R, T, Dh); length: scalar int32 (valid prefix).
+
+    Returns (R, Dh). T must be a multiple of block_k (ops.py pads)."""
+    R, T, Dh = k.shape
+    assert T % block_k == 0, (T, block_k)
+    scale = 1.0 / math.sqrt(Dh)
+    grid = (R, T // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # length (prefetch-like)
+            pl.BlockSpec((1, Dh), lambda r, ki: (r, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda r, ki: (r, ki, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda r, ki: (r, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Dh), lambda r, ki: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)

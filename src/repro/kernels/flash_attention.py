@@ -1,0 +1,127 @@
+"""Flash attention forward kernel (TPU Pallas): blocked online-softmax.
+
+TPU adaptation of FlashAttention [arXiv:2205.14135] — the HBM→VMEM
+hierarchy replaces SRAM tiling: Q blocks of ``block_q`` rows live in VMEM,
+the kernel streams K/V blocks of ``block_k`` rows, maintaining the running
+(max, sum, acc) online-softmax state in fp32 VMEM scratch.  Block sizes are
+multiples of 128 to keep the MXU systolic array full (DESIGN.md §6).
+
+Grid: (batch·kv_head·q_group, S/block_q, S/block_k) with the K dimension
+``arbitrary`` (sequential) — the carry lives in scratch across the K steps.
+Causal masking skips fully-masked K blocks via ``pl.when`` (halves the work
+like the original's block-skipping); sliding-window masking composes.
+
+GQA layout: callers (ops.py) reshape q to (B·KV·G, S, Dh) and k/v to
+(B·KV, S, Dh); the kernel maps program id → its kv row.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr,
+                      *, scale: float, block_q: int, block_k: int,
+                      causal: bool, window: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < seq_len
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # skip K blocks that are entirely masked out (flash block skipping)
+    if causal or window > 0:
+        run = k_start <= q_start + block_q - 1 if causal else (k_start >= 0)
+        if window > 0:
+            run = jnp.logical_and(run, k_start + block_k > q_start - window + 1)
+        pl.when(run)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        valid_len: int = 0,
+                        interpret: bool = False) -> jax.Array:
+    """q: (R, S, Dh) with R = B·KV·G; k/v: (R, S, Dh) (pre-broadcast KV).
+
+    Returns (R, S, Dh). Sequence length must be a multiple of the blocks
+    (ops.py pads); ``valid_len`` masks K positions beyond the true length.
+    """
+    R, S, Dh = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = 1.0 / math.sqrt(Dh)
+    grid = (R, S // block_q, S // block_k)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_len=valid_len or S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), lambda r, qi, ki: (r, qi, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda r, qi, ki: (r, ki, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda r, qi, ki: (r, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), lambda r, qi, ki: (r, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,168 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Single-source contract (the HPX.Compute claim, DESIGN.md P7): call sites
+use these ops everywhere; on TPU they run the Mosaic-compiled kernels, on
+CPU they execute the same kernel bodies under ``interpret=True`` — one
+source, two backends, identical semantics (tests assert allclose against
+``ref.py`` oracles on both paths).
+
+Wrappers own the ugly parts: GQA head broadcasting, layout flattening to
+kernel-friendly (rows, seq, feature) shapes, and padding to block multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rglru_scan import rglru_scan_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+from repro.kernels.stream import triad as _triad_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B,S,H,Dh), k/v: (B,S,KV,Dh) → (B,S,H,Dh). GQA via H % KV == 0."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, Dh).transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, Dh)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, S, Dh)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, S, Dh)
+    qr, S0 = _pad_to(qr, 1, max(block_q, block_k))
+    kr, _ = _pad_to(kr, 1, max(block_q, block_k))
+    vr, _ = _pad_to(vr, 1, max(block_q, block_k))
+    o = flash_attention_fwd(qr, kr, vr, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k, valid_len=S0,
+                            interpret=interpret)
+    o = o[:, :S0]
+    return o.reshape(B, KV, G, S0, Dh).transpose(0, 3, 1, 2, 4).reshape(B, S0, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, block_k: int = 512,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B,H,Dh), k/v: (B,T,KV,Dh), length: scalar → (B,H,Dh)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, Dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B * KV * G, Dh)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, T, Dh)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, T, Dh)
+    block_k = min(block_k, max(128, T))
+    kr, _ = _pad_to(kr, 1, block_k)
+    vr, _ = _pad_to(vr, 1, block_k)
+    o = decode_attention_fwd(qr, kr, vr, jnp.minimum(length, T),
+                             block_k=block_k, interpret=interpret)
+    return o.reshape(B, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 256,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,G,N) → y (B,S,H,P)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    xk = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Ak = jnp.tile(A, B)
+    Bk = jnp.repeat(Bm.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, S, N)
+    Ck = jnp.repeat(Cm.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, S, N)
+    xk, S0 = _pad_to(xk, 1, chunk)
+    dtk, _ = _pad_to(dtk, 1, chunk)
+    Bk, _ = _pad_to(Bk, 1, chunk)
+    Ck, _ = _pad_to(Ck, 1, chunk)
+    y = ssd_scan_fwd(xk, dtk, Ak, Bk, Ck, chunk=chunk, interpret=interpret)
+    return y[:, :S0].reshape(B, H, S0, P).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, *, block_s: int = 256,
+               block_w: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+    """h_t = a_t·h_{t-1} + b_t. a/b: (B,S,W) → (B,S,W)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, W = a.shape
+    block_s = min(block_s, S)
+    block_w = min(block_w, W)
+    a2, S0 = _pad_to(a, 1, block_s)
+    b2, _ = _pad_to(b, 1, block_s)
+    a2, W0 = _pad_to(a2, 2, block_w)
+    b2, _ = _pad_to(b2, 2, block_w)
+    h = rglru_scan_fwd(a2, b2, block_s=block_s, block_w=block_w,
+                       interpret=interpret)
+    return h[:, :S0, :W0]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def stream_triad(a: jax.Array, b: jax.Array, alpha: float = 3.0, *,
+                 block: int = 65536, interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    (N,) = a.shape
+    block = min(block, N)
+    a2, N0 = _pad_to(a, 0, block)
+    b2, _ = _pad_to(b, 0, block)
+    return _triad_kernel(a2, b2, alpha, block=block, interpret=interpret)[:N0]
+
+
+# ------------------------------------------------------------ trainable flash
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_trainable(q: jax.Array, k: jax.Array, v: jax.Array,
+                              causal: bool = True, window: int = 0) -> jax.Array:
+    """Training-path flash attention: Pallas forward kernel + exact backward.
+
+    Backward recomputes attention in the pure-jnp oracle and differentiates
+    it (flash-style recompute — no score materialization is *saved*, the
+    memory win is in the forward; a fused backward kernel is the natural
+    next TPU optimization and is noted in EXPERIMENTS.md)."""
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _fat_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal=causal, window=window), (q, k, v)
+
+
+def _fat_bwd(causal, window, res, ct):
+    from repro.kernels import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.mha(q_, k_, v_, causal=causal,
+                                                window=window), q, k, v)
+    return vjp(ct)
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)

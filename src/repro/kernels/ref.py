@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Deliberately naive: quadratic attention, O(S) sequential recurrences —
+correctness first, no blocking tricks.  Each kernel's test sweeps shapes and
+dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- attention
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+        window: int = 0) -> jax.Array:
+    """q: (B,S,H,Dh), k/v: (B,S,KV,Dh), GQA via H % KV == 0. fp32 math."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(Dh)
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        ok = kpos <= qpos
+        if window > 0:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, vf)
+    return o.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def decode_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+               length: Optional[jax.Array] = None) -> jax.Array:
+    """One-token decode. q: (B,H,Dh), k/v: (B,T,KV,Dh); positions >= length
+    masked (length scalar or (B,)). fp32 math."""
+    B, H, Dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)) / math.sqrt(Dh)
+    if length is not None:
+        mask = jnp.arange(T)[None, :] < jnp.broadcast_to(jnp.asarray(length), (B,))[:, None]
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- ssd
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the O(S) definition).
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,) negative, Bm/Cm: (B,S,G,N).
+    h_t = h_{t-1}·exp(dt_t·A) + dt_t·B_t⊗x_t ;  y_t = C_t·h_t
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t] * A[None, :])  # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dtf[:, t], Bf[:, t], xf[:, t])
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cf[:, t])
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), h
+
+
+# --------------------------------------------------------------------- rglru
+def rglru(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential linear recurrence h_t = a_t·h_{t-1} + b_t. a/b: (B,S,W)."""
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, jnp.arange(S))
+    return hs.transpose(1, 0, 2).astype(a.dtype)
+
+
+# --------------------------------------------------------------------- triad
+def triad(a: jax.Array, b: jax.Array, alpha: float) -> jax.Array:
+    """STREAM triad: a + alpha·b."""
+    return a + alpha * b

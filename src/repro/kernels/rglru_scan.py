@@ -1,0 +1,63 @@
+"""RG-LRU linear-recurrence kernel (TPU Pallas) [arXiv:2402.19427].
+
+h_t = a_t ⊙ h_{t-1} + b_t — a diagonal (per-channel) recurrence.  The XLA
+path uses a log-depth associative scan which materializes O(S·W·log S)
+temporaries in HBM; this kernel runs the recurrence *sequentially in VMEM*:
+grid (B, W/block_w, S/block_s) with the sequence dim ``arbitrary``, the
+carry h (1, block_w) in fp32 scratch, and an unrolled ``fori_loop`` over
+the rows of each (block_s, block_w) tile.  Channels are the vectorized
+(lane) dimension — the VPU runs all ``block_w`` recurrences in parallel, so
+the sequential loop costs S steps of one VPU op each, with zero HBM
+round-trips between steps (the hardware adaptation, DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h_ref, carry_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    a = a_ref[0].astype(jnp.float32)  # (block_s, block_w)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]  # (block_w,) vectorized over channels
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, carry_scr[0])
+    carry_scr[0, :] = h
+
+
+def rglru_scan_fwd(a: jax.Array, b: jax.Array, *, block_s: int = 256,
+                   block_w: int = 128, interpret: bool = False) -> jax.Array:
+    """a/b: (B, S, W) → h: (B, S, W).  S % block_s == 0, W % block_w == 0."""
+    B, S, W = a.shape
+    assert S % block_s == 0 and W % block_w == 0, (S, W, block_s, block_w)
+    grid = (B, W // block_w, S // block_s)
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunked-scan kernel (TPU Pallas) [arXiv:2405.21060].
+
+The SSD dual form maps beautifully onto the MXU: within a chunk of Q steps
+the recurrence is three small matmuls (C·Bᵀ ⊙ decay, scores·x, B^T·x);
+across chunks only an (P, N) state carries.  Grid: (B·H, S/Q) with the
+chunk dim sequential — the carried state lives in fp32 VMEM scratch, so the
+whole recurrence never leaves the core between chunks (the GPU original
+round-trips SRAM per chunk; on TPU the state persists across grid steps —
+the hardware-adaptation win, DESIGN.md §6).
+
+Layout (from ops.py): per (batch·head) rows —
+    x  (BH, S, P)   dt (BH, S)    B/C (BH, S, N)   A (BH,)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, s_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    A = a_ref[pl.program_id(0)]  # this row's decay rate (negative scalar)
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    a = dt * A  # (Q,) per-step log decay
+    cum = jnp.cumsum(a)  # inclusive
+    # intra-chunk: scores[i,j] = C_i·B_j · exp(cum_i - cum_j) · dt_j, j <= i
+    seg = cum[:, None] - cum[None, :]
+    Q = x.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * L * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    decay_in = jnp.exp(cum)  # (Q,)
+    y = y + decay_in[:, None] * jax.lax.dot_general(
+        Cm, s_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # C_i · S  (N,P)→(Q,P)
+
+    # state update: S' = S·exp(Σa) + Σ_j exp(cum_end - cum_j)·dt_j·B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    w = (decay_to_end * dt)[:, None] * Bm  # (Q, N)
+    s_new = jax.lax.dot_general(w, x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N, P)
+    s_scr[...] = s_scr[...] * jnp.exp(cum[-1]) + s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, *, chunk: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """x: (BH, S, P); dt: (BH, S); A: (BH,); Bm/Cm: (BH, S, N) → y (BH, S, P).
+
+    S must be a multiple of ``chunk`` (ops.py pads)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # A (BH,)
+            pl.BlockSpec((1, chunk, P), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, chunk), lambda r, c: (r, c)),
+            pl.BlockSpec((1, chunk, N), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda r, c: (r, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda r, c: (r, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(A, x, dt, Bm, Cm)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+use; smoke tests and benches see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (CPU) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def make_mesh_shape(shape: Sequence[int], axes: Sequence[str]):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# v5e hardware constants for the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (within pod)
+DCI_BW = 25e9  # bytes/s per chip across pods (assumption, documented)

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen25_3b --smoke \
+      --steps 100 --batch 8 --seq 128 --plan futurized
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_780m --smoke \
+      --steps 50 --ckpt-every 20 --ckpt-dir /tmp/ck
+
+Full (non ``--smoke``) configs are for real accelerator fleets; on this CPU
+container use ``--smoke`` (reduced same-family config) or the dry-run
+(``repro.launch.dryrun``) for the production shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--plan", default="futurized")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--scheduler", default="local",
+                    choices=("static", "local", "hierarchical"))
+    args = ap.parse_args()
+
+    import repro.core as core
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import TrainConfig, Trainer
+
+    core.init(num_workers=args.workers, policy=args.scheduler)
+    cfg = get_config(args.arch, smoke=args.smoke)
+    plan = get_plan(args.plan, **({"microbatches": args.microbatches}
+                                  if args.plan != "bsp" and args.microbatches > 1 else {}))
+    model = build_model(cfg, plan)
+    trainer = Trainer(
+        model,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        DataConfig(batch_size=args.batch, seq_len=args.seq),
+        TrainConfig(steps=args.steps, log_every=args.log_every,
+                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
+    )
+    if args.resume:
+        print(f"resumed at step {trainer.resume()}")
+    history = trainer.fit()
+    for h in history:
+        print(json.dumps(h))
+    print(json.dumps({"counters": dict(core.counters.query("/train*"))}))
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv/audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model).  Encoder = bidirectional
+pre-LN blocks with fixed sinusoidal positions; decoder = causal self-attn +
+cross-attn + MLP with *learned* positions, tied unembedding.
+
+Decode carries two caches: the growing self-attention KV ring and the fixed
+cross-attention KV (computed once from the encoder output at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models import layers as Lx
+from repro.models.params import ParamSpec
+from repro.models.transformer import (
+    _attn_specs,
+    _layer_axes,
+    _mlp_specs,
+    _slice_params,
+    gather_constrain,
+    stacked_gather_constrain,
+)
+
+_MAX_POS = 32_768  # learned decoder position table (covers all non-long cells)
+
+
+def encdec_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    Le, Ld = cfg.enc_layers, cfg.dec_layers
+    max_pos = cfg.max_position or _MAX_POS
+    specs: Dict[str, ParamSpec] = {
+        "tok_embed": ParamSpec((V, D), ("vocab", "embed"), scale=0.02),
+        "pos_embed": ParamSpec((max_pos, D), (None, "embed"), scale=0.02),
+        "enc/final_ln": ParamSpec((D,), (None,), init="ones"),
+        "dec/final_ln": ParamSpec((D,), (None,), init="ones"),
+    }
+    specs.update(_attn_specs(cfg, Le, "enc/"))
+    specs.update(_mlp_specs(cfg, Le, "enc/", cfg.d_ff))
+    specs.update(_attn_specs(cfg, Ld, "dec/"))  # self-attention
+    specs.update(_mlp_specs(cfg, Ld, "dec/", cfg.d_ff))
+    # cross-attention (queries from decoder, K/V from encoder output)
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs.update({
+        "dec/lnx": ParamSpec((Ld, D), ("layers", None), init="ones"),
+        "dec/xwq": ParamSpec((Ld, D, H * Dh), ("layers", "embed", "heads")),
+        "dec/xwk": ParamSpec((Ld, D, KV * Dh), ("layers", "embed", "kv_heads")),
+        "dec/xwv": ParamSpec((Ld, D, KV * Dh), ("layers", "embed", "kv_heads")),
+        "dec/xwo": ParamSpec((Ld, H * Dh, D), ("layers", "heads", "embed")),
+    })
+    if cfg.qkv_bias:
+        specs.update({
+            "dec/xbq": ParamSpec((Ld, H * Dh), ("layers", "heads"), init="zeros"),
+            "dec/xbk": ParamSpec((Ld, KV * Dh), ("layers", "kv_heads"), init="zeros"),
+            "dec/xbv": ParamSpec((Ld, KV * Dh), ("layers", "kv_heads"), init="zeros"),
+        })
+    return specs
+
+
+def _cross_attention(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                     lp: Dict[str, jax.Array], y_enc: jax.Array) -> jax.Array:
+    """Full-sequence cross-attention: queries x (B,Sd,D), K/V from y_enc."""
+    import math
+
+    dt = Lx.cdtype(cfg)
+    B, Sd, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    q = x @ lp["xwq"].astype(dt)
+    k = y_enc @ lp["xwk"].astype(dt)
+    v = y_enc @ lp["xwv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + lp["xbq"].astype(dt)
+        k = k + lp["xbk"].astype(dt)
+        v = v + lp["xbv"].astype(dt)
+    q = q.reshape(B, Sd, KV, G, Dh)
+    k = k.reshape(B, -1, KV, Dh)
+    v = v.reshape(B, -1, KV, Dh)
+    o = Lx._sdpa(q, k, v, None, 1.0 / math.sqrt(Dh))
+    return o.reshape(B, Sd, H * Dh) @ lp["xwo"].astype(dt)
+
+
+def _encoder(cfg: ModelConfig, plan: ShardingPlan, params, enc_x: jax.Array) -> jax.Array:
+    specs = encdec_param_specs(cfg)
+    B, Se, D = enc_x.shape
+    pos = jnp.asarray(Lx.sinusoidal_positions(Se, D))
+    x = enc_x.astype(Lx.cdtype(cfg)) + pos[None].astype(Lx.cdtype(cfg))
+    x = plan.constrain(x, ("batch", "seq", None))
+    positions = jnp.arange(Se, dtype=jnp.int32)
+    enc = _slice_params(params, "enc/")
+    enc.pop("final_ln")
+    ax = _layer_axes(specs, "enc/")
+    ax.pop("final_ln", None)
+    if plan.gather_upfront:
+        enc = stacked_gather_constrain(plan, enc, ax)
+
+    def body(x, lp):
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        h = Lx.norm(cfg, x, lp["ln1"])
+        x = x + Lx.attention(cfg, plan, h, lp, "", positions, causal=False)
+        h = Lx.norm(cfg, x, lp["ln2"])
+        return x + Lx.mlp(cfg, plan, h, lp, ""), None
+
+    body = Lx.remat_wrap(plan, body)
+    x, _ = jax.lax.scan(body, x, enc)
+    return Lx.norm(cfg, x, params["enc/final_ln"])
+
+
+def _decoder_stack(cfg: ModelConfig, plan: ShardingPlan, params, x: jax.Array,
+                   y_enc: jax.Array, positions: jax.Array, collect_kv: bool):
+    specs = encdec_param_specs(cfg)
+    dec = _slice_params(params, "dec/")
+    dec.pop("final_ln")
+    ax = _layer_axes(specs, "dec/")
+    ax.pop("final_ln", None)
+    if plan.gather_upfront:
+        dec = stacked_gather_constrain(plan, dec, ax)
+
+    def body(x, lp):
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        h = Lx.norm(cfg, x, lp["ln1"])
+        attn_out = Lx.attention(cfg, plan, h, lp, "", positions, causal=True,
+                                return_kv=collect_kv)
+        h, kv = attn_out if collect_kv else (attn_out, None)
+        x = x + h
+        h = Lx.norm(cfg, x, lp["lnx"])
+        x = x + _cross_attention(cfg, plan, h, lp, y_enc)
+        h = Lx.norm(cfg, x, lp["ln2"])
+        x = x + Lx.mlp(cfg, plan, h, lp, "")
+        if collect_kv:  # also emit this layer's cross K/V for the cache
+            dt = Lx.cdtype(cfg)
+            xk = (y_enc @ lp["xwk"].astype(dt))
+            xv = (y_enc @ lp["xwv"].astype(dt))
+            if cfg.qkv_bias:
+                xk = xk + lp["xbk"].astype(dt)
+                xv = xv + lp["xbv"].astype(dt)
+            KV, Dh = cfg.num_kv_heads, cfg.head_dim
+            B, Se = y_enc.shape[0], y_enc.shape[1]
+            kv = kv + (xk.reshape(B, Se, KV, Dh), xv.reshape(B, Se, KV, Dh))
+        return x, kv
+
+    body = Lx.remat_wrap(plan, body)
+    x, kvs = jax.lax.scan(body, x, dec)
+    return Lx.norm(cfg, x, params["dec/final_ln"]), kvs
+
+
+def forward(cfg: ModelConfig, plan: ShardingPlan, params,
+            enc_x: jax.Array, dec_tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """enc_x: (B, S_enc, D) stub embeddings; dec_tokens: (B, S_dec)."""
+    y_enc = _encoder(cfg, plan, params, enc_x)
+    B, Sd = dec_tokens.shape
+    x = Lx.embed(cfg, plan, params["tok_embed"], dec_tokens)
+    x = x + params["pos_embed"][:Sd][None].astype(x.dtype)
+    positions = jnp.arange(Sd, dtype=jnp.int32)
+    x, _ = _decoder_stack(cfg, plan, params, x, y_enc, positions, collect_kv=False)
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, plan: ShardingPlan, params, batch) -> jax.Array:
+    logits, _ = forward(cfg, plan, params, batch["enc"], batch["tokens"][:, :-1])
+    return Lx.cross_entropy(logits, batch["tokens"][:, 1:])
+
+
+# --------------------------------------------------------------------- cache
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int):
+    KV, Dh, Ld = cfg.num_kv_heads, cfg.head_dim, cfg.dec_layers
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, cache_len, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((Ld, batch, cache_len, KV, Dh), dt),
+        "xk": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, Dh), dt),
+        "xv": jax.ShapeDtypeStruct((Ld, batch, enc_len, KV, Dh), dt),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": ax, "v": ax, "xk": ax, "xv": ax, "pos": ("batch",)}
+
+
+def prefill(cfg: ModelConfig, plan: ShardingPlan, params, enc_x: jax.Array,
+            dec_tokens: jax.Array, cache_len: Optional[int] = None):
+    """Encoder pass + decoder prefill. Returns (last logits (B,V), cache)."""
+    y_enc = _encoder(cfg, plan, params, enc_x)
+    B, Sd = dec_tokens.shape
+    T = cache_len or Sd
+    x = Lx.embed(cfg, plan, params["tok_embed"], dec_tokens)
+    x = x + params["pos_embed"][:Sd][None].astype(x.dtype)
+    positions = jnp.arange(Sd, dtype=jnp.int32)
+    x, (k, v, xk, xv) = _decoder_stack(cfg, plan, params, x, y_enc, positions,
+                                       collect_kv=True)
+    specs = init_cache_specs(cfg, B, T, enc_x.shape[1])
+    cache = {n: jnp.zeros(s.shape, s.dtype) for n, s in specs.items()}
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)
+    cache["xk"], cache["xv"] = xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype)
+    cache["pos"] = jnp.full((B,), Sd, jnp.int32)
+    logits = Lx.unembed(cfg, plan, x[:, -1:, :], params["tok_embed"], transpose=True)
+    return logits[:, 0, :], cache
+
+
+def decode_step(cfg: ModelConfig, plan: ShardingPlan, params, cache, token):
+    """One decoder token against self-KV + fixed cross-KV."""
+    specs = encdec_param_specs(cfg)
+    pos = cache["pos"]
+    x = Lx.embed(cfg, plan, params["tok_embed"], token)
+    x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None, :].astype(x.dtype)
+    dec = _slice_params(params, "dec/")
+    dec.pop("final_ln")
+    ax = _layer_axes(specs, "dec/")
+    ax.pop("final_ln", None)
+    if plan.gather_upfront:
+        dec = stacked_gather_constrain(plan, dec, ax)
+
+    def body(x, xs):
+        lp, kc, vc, xkc, xvc = xs
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        h = Lx.norm(cfg, x, lp["ln1"])
+        h, kc, vc = Lx.decode_attention(cfg, plan, h, lp, "", kc, vc, pos)
+        x = x + h
+        h = Lx.norm(cfg, x, lp["lnx"])
+        # cross-attention against the fixed encoder cache (uses xwq/xbq/xwo)
+        xh, _, _ = Lx.decode_attention(cfg, plan, h, lp, "x", xkc, xvc, pos,
+                                       cross=True)
+        x = x + xh
+        h = Lx.norm(cfg, x, lp["ln2"])
+        x = x + Lx.mlp(cfg, plan, h, lp, "")
+        return x, (kc, vc)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (dec, cache["k"], cache["v"],
+                                         cache["xk"], cache["xv"]))
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    new_cache["pos"] = pos + 1
+    x = Lx.norm(cfg, x, params["dec/final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits[:, 0, :], new_cache

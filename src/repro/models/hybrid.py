@@ -1,0 +1,281 @@
+"""RecurrentGemma hybrid LM: (rec, rec, attn) pattern groups.
+
+26 layers = 8 scanned groups of (RG-LRU, RG-LRU, local-attn) + 2 trailing
+RG-LRU layers (DESIGN.md §4).  Every layer is temporal-mix + MLP with
+pre-norm residuals.  Decode caches: per rec layer (conv, h) — O(1); per
+attn layer a `window`-slot ring buffer — O(window); total O(1) in sequence
+length, which is why this arch runs the 500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models import layers as Lx
+from repro.models.params import ParamSpec
+from repro.models.rglru import (
+    _gates,
+    rec_block_decode,
+    rec_param_specs,
+    rglru_scan,
+)
+from repro.models.ssm import causal_conv1d
+from repro.models.transformer import (
+    _attn_specs,
+    _layer_axes,
+    _mlp_specs,
+    _slice_params,
+    gather_constrain,
+    stacked_gather_constrain,
+)
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(cfg.block_pattern)  # (rec, rec, attn)
+    return cfg.num_layers // plen, cfg.num_layers % plen  # (groups, tail)
+
+
+def hybrid_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    G, tail = _pattern(cfg)
+    specs: Dict[str, ParamSpec] = {
+        "tok_embed": ParamSpec((V, D), ("vocab", "embed"), scale=0.02),
+        "final_ln": ParamSpec((D,), (None,), init="ones"),
+    }
+    for slot in ("ra/", "rb/"):  # two rec layers per group
+        specs.update(rec_param_specs(cfg, G, f"grp/{slot}"))
+        specs.update(_mlp_specs(cfg, G, f"grp/{slot}", cfg.d_ff))
+    specs.update(_attn_specs(cfg, G, "grp/at/"))
+    specs.update(_mlp_specs(cfg, G, "grp/at/", cfg.d_ff))
+    if tail:
+        assert all(k == "rec" for k in cfg.block_pattern[:tail]), \
+            "tail layers must be recurrent for this layout"
+        specs.update(rec_param_specs(cfg, tail, "tail/"))
+        specs.update(_mlp_specs(cfg, tail, "tail/", cfg.d_ff))
+    return specs
+
+
+def _mlp_res(cfg, plan, x, lp, prefix):
+    h = Lx.norm(cfg, x, lp[f"{prefix}ln2"])
+    return x + Lx.mlp(cfg, plan, h, lp, prefix)
+
+
+def _rec_with_state(cfg, plan, x, lp, prefix, collect_state: bool):
+    """rec_block + MLP, optionally emitting (conv_state, h_final)."""
+    dt = Lx.cdtype(cfg)
+    B, S, D = x.shape
+    h = Lx.norm(cfg, x, lp[f"{prefix}ln"])
+    gate = jax.nn.gelu(h @ lp[f"{prefix}w_gate_branch"].astype(dt))
+    xw_raw = h @ lp[f"{prefix}w_x"].astype(dt)
+    xw = causal_conv1d(xw_raw, lp[f"{prefix}conv_w"], lp[f"{prefix}conv_b"])
+    a, gx = _gates(lp, prefix, xw, dt)
+    hseq = rglru_scan(a, gx)
+    y = (gate * hseq.astype(dt)) @ lp[f"{prefix}rec_out"].astype(dt)
+    x = x + y
+    x = _mlp_res(cfg, plan, x, lp, prefix)
+    if not collect_state:
+        return x, None
+    K = cfg.ssm_conv
+    pad = jnp.pad(xw_raw, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))
+    return x, (pad[:, -(K - 1):, :].astype(dt), hseq[:, -1, :].astype(jnp.float32))
+
+
+def _attn_with_kv(cfg, plan, x, lp, prefix, positions, collect_kv: bool):
+    h = Lx.norm(cfg, x, lp[f"{prefix}ln1"])
+    out = Lx.attention(cfg, plan, h, lp, prefix, positions, causal=True,
+                       window=cfg.window, return_kv=collect_kv)
+    h_attn, kv = out if collect_kv else (out, None)
+    x = x + h_attn
+    x = _mlp_res(cfg, plan, x, lp, prefix)
+    if collect_kv:
+        k, v = kv
+        W = min(cfg.window, k.shape[1])
+        S = k.shape[1]
+        k_w = jnp.roll(k[:, -W:], shift=S % W if W else 0, axis=1)
+        v_w = jnp.roll(v[:, -W:], shift=S % W if W else 0, axis=1)
+        kv = (k_w, v_w)  # ring-buffer layout: slot = position mod W
+    return x, kv
+
+
+def _run_groups(cfg: ModelConfig, plan: ShardingPlan, params, x: jax.Array,
+                positions, collect: bool):
+    specs = hybrid_param_specs(cfg)
+    grp = _slice_params(params, "grp/")
+    ax = _layer_axes(specs, "grp/")
+    if plan.gather_upfront:
+        grp = stacked_gather_constrain(plan, grp, ax)
+
+    def body(x, lp):
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x = plan.constrain(x, ("batch", "seq", None))
+        x, sa = _rec_with_state(cfg, plan, x, lp, "ra/", collect)
+        x, sb = _rec_with_state(cfg, plan, x, lp, "rb/", collect)
+        x, kv = _attn_with_kv(cfg, plan, x, lp, "at/", positions, collect)
+        return x, ((sa, sb, kv) if collect else None)
+
+    body = Lx.remat_wrap(plan, body)
+    return jax.lax.scan(body, x, grp)
+
+
+def _run_tail(cfg, plan, params, x, collect: bool):
+    G, tail = _pattern(cfg)
+    if not tail:
+        return x, None
+    specs = hybrid_param_specs(cfg)
+    tl = _slice_params(params, "tail/")
+    ax = _layer_axes(specs, "tail/")
+    if plan.gather_upfront:
+        tl = stacked_gather_constrain(plan, tl, ax)
+
+    def body(x, lp):
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        return _rec_with_state(cfg, plan, x, lp, "", collect)
+
+    body = Lx.remat_wrap(plan, body)
+    return jax.lax.scan(body, x, tl)
+
+
+def forward(cfg: ModelConfig, plan: ShardingPlan, params, tokens: jax.Array):
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    x = x * math.sqrt(cfg.d_model)  # gemma-style embedding scale
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = _run_groups(cfg, plan, params, x, positions, collect=False)
+    x, _ = _run_tail(cfg, plan, params, x, collect=False)
+    x = Lx.norm(cfg, x, params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, plan: ShardingPlan, params, batch) -> jax.Array:
+    logits, _ = forward(cfg, plan, params, batch["tokens"][:, :-1])
+    return Lx.cross_entropy(logits, batch["tokens"][:, 1:])
+
+
+# --------------------------------------------------------------------- cache
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    """cache_len ignored: attention KV is a fixed `window` ring buffer."""
+    G, tail = _pattern(cfg)
+    W = cfg.lru_width
+    KV, Dh, Win, K = cfg.num_kv_heads, cfg.head_dim, cfg.window, cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "conv_a": jax.ShapeDtypeStruct((G, batch, K - 1, W), dt),
+        "h_a": jax.ShapeDtypeStruct((G, batch, W), jnp.float32),
+        "conv_b": jax.ShapeDtypeStruct((G, batch, K - 1, W), dt),
+        "h_b": jax.ShapeDtypeStruct((G, batch, W), jnp.float32),
+        "k": jax.ShapeDtypeStruct((G, batch, Win, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((G, batch, Win, KV, Dh), dt),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    if tail:
+        specs["tail_conv"] = jax.ShapeDtypeStruct((tail, batch, K - 1, W), dt)
+        specs["tail_h"] = jax.ShapeDtypeStruct((tail, batch, W), jnp.float32)
+    return specs
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+    out = {
+        "conv_a": ("layers", "batch", None, "lru"),
+        "h_a": ("layers", "batch", "lru"),
+        "conv_b": ("layers", "batch", None, "lru"),
+        "h_b": ("layers", "batch", "lru"),
+        "k": kv, "v": kv, "pos": ("batch",),
+    }
+    G, tail = _pattern(cfg)
+    if tail:
+        out["tail_conv"] = ("layers", "batch", None, "lru")
+        out["tail_h"] = ("layers", "batch", "lru")
+    return out
+
+
+def prefill(cfg: ModelConfig, plan: ShardingPlan, params, tokens: jax.Array,
+            cache_len: Optional[int] = None):
+    B, S = tokens.shape
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    x = x * math.sqrt(cfg.d_model)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, ys = _run_groups(cfg, plan, params, x, positions, collect=True)
+    (conv_a, h_a), (conv_b, h_b), (kw, vw) = ys
+    cache = {"conv_a": conv_a, "h_a": h_a, "conv_b": conv_b, "h_b": h_b,
+             "pos": jnp.full((B,), S, jnp.int32)}
+    # pad the window ring if the prompt was shorter than the window
+    spec = init_cache_specs(cfg, B)
+    for name, arr in (("k", kw), ("v", vw)):
+        buf = jnp.zeros(spec[name].shape, spec[name].dtype)
+        cache[name] = jax.lax.dynamic_update_slice_in_dim(
+            buf, arr.astype(buf.dtype), 0, axis=2) if arr.shape[2] < cfg.window else arr
+    x, tail_ys = _run_tail(cfg, plan, params, x, collect=True)
+    if tail_ys is not None:
+        cache["tail_conv"], cache["tail_h"] = tail_ys
+    x = Lx.norm(cfg, x[:, -1:, :], params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits[:, 0, :], cache
+
+
+def decode_step(cfg: ModelConfig, plan: ShardingPlan, params, cache, token):
+    specs = hybrid_param_specs(cfg)
+    pos = cache["pos"]
+    x = Lx.embed(cfg, plan, params["tok_embed"], token)
+    x = x * math.sqrt(cfg.d_model)
+    grp = _slice_params(params, "grp/")
+    ax = _layer_axes(specs, "grp/")
+    if plan.gather_upfront:
+        grp = stacked_gather_constrain(plan, grp, ax)
+
+    def body(x, xs):
+        lp, ca, ha, cb, hb, kc, vc = xs
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x, ca, ha = rec_block_decode(cfg, plan, x, _sub(lp, "ra/"), "", ca, ha)
+        x = _mlp_res(cfg, plan, x, lp, "ra/")
+        x, cb, hb = rec_block_decode(cfg, plan, x, _sub(lp, "rb/"), "", cb, hb)
+        x = _mlp_res(cfg, plan, x, lp, "rb/")
+        h = Lx.norm(cfg, x, lp["at/ln1"])
+        h, kc, vc = Lx.decode_attention(cfg, plan, h, lp, "at/", kc, vc, pos,
+                                        window=cfg.window)
+        x = x + h
+        x = _mlp_res(cfg, plan, x, lp, "at/")
+        return x, (ca, ha, cb, hb, kc, vc)
+
+    x, ys = jax.lax.scan(body, x, (grp, cache["conv_a"], cache["h_a"],
+                                   cache["conv_b"], cache["h_b"],
+                                   cache["k"], cache["v"]))
+    new_cache = dict(cache)
+    (new_cache["conv_a"], new_cache["h_a"], new_cache["conv_b"],
+     new_cache["h_b"], new_cache["k"], new_cache["v"]) = ys
+
+    G, tail = _pattern(cfg)
+    if tail:
+        tl = _slice_params(params, "tail/")
+        axt = _layer_axes(specs, "tail/")
+        if plan.gather_upfront:
+            tl = stacked_gather_constrain(plan, tl, axt)
+
+        def tbody(x, xs):
+            lp, cs, hs = xs
+            if not plan.gather_upfront:
+                lp = gather_constrain(plan, lp, axt)
+            x, cs, hs = rec_block_decode(cfg, plan, x, lp, "", cs, hs)
+            x = _mlp_res(cfg, plan, x, lp, "")
+            return x, (cs, hs)
+
+        x, (tc, th) = jax.lax.scan(tbody, x, (tl, cache["tail_conv"], cache["tail_h"]))
+        new_cache["tail_conv"], new_cache["tail_h"] = tc, th
+
+    new_cache["pos"] = pos + 1
+    x = Lx.norm(cfg, x, params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits[:, 0, :], new_cache
+
+
+def _sub(lp: Dict[str, jax.Array], prefix: str) -> Dict[str, jax.Array]:
+    return {k[len(prefix):]: v for k, v in lp.items() if k.startswith(prefix)}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+This layer is the flagship *parcel* user (DESIGN.md P4): a token assigned to
+an expert is an active message — the token (arguments) travels to the expert
+"locality" (its shard on the model axis), compute happens *at the data*, and
+the result returns through the combine path.  Dispatch-time load balance
+(capacity factor + aux loss) replaces HPX's dynamic work stealing, which has
+no on-device analogue (DESIGN.md §8.3).
+
+Dispatch is **grouped-local** (GShard-style groups == data shards): tokens
+are viewed as (G, T/G, D) with G = the batch-sharding degree of the active
+mesh, routing ranks are computed per group with a one-hot cumsum (no global
+sort), and the capacity buffers are (G, E, C, D) built by *batched* scatters
+(vmap over G) — the scatter's batch dim aligns with the data axis, so GSPMD
+keeps dispatch entirely local to each shard.  The EXPERIMENTS.md §Perf log
+records the win: the naive global-scatter formulation forced full-buffer
+all-reduces over the data axis (granite-moe train: 559 s collective term).
+
+Capacity is per group (C = cf·T_loc·k/E), the standard per-shard semantics
+of production EP systems.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan, _active_mesh
+from repro.models.layers import act_fn, cdtype
+from repro.models.params import ParamSpec
+
+
+def moe_param_specs(cfg: ModelConfig, L: int, prefix: str) -> Dict[str, ParamSpec]:
+    """Stacked (L, …) specs for the routed-expert FFN of ``L`` layers."""
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    specs: Dict[str, ParamSpec] = {
+        f"{prefix}router": ParamSpec((L, D, E), ("layers", "embed", None)),
+        f"{prefix}w_in": ParamSpec((L, E, D, F), ("layers", "experts", "embed", "mlp")),
+        f"{prefix}w_gate": ParamSpec((L, E, D, F), ("layers", "experts", "embed", "mlp")),
+        f"{prefix}w_out": ParamSpec((L, E, F, D), ("layers", "experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts > 0:
+        Fs = cfg.n_shared_experts * F
+        specs.update({
+            f"{prefix}shared_w_in": ParamSpec((L, D, Fs), ("layers", "embed", "mlp")),
+            f"{prefix}shared_w_gate": ParamSpec((L, D, Fs), ("layers", "embed", "mlp")),
+            f"{prefix}shared_w_out": ParamSpec((L, Fs, D), ("layers", "mlp", "embed")),
+        })
+    return specs
+
+
+def _group_count(T: int) -> int:
+    """Dispatch groups = batch-sharding degree of the active mesh."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    return g if g > 1 and T % g == 0 else 1
+
+
+def moe_ffn(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+            p: Dict[str, jax.Array], prefix: str = "") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out (B,S,D), aux_loss scalar)."""
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.d_ff
+    T = B * S
+    G = _group_count(T)
+    TL = T // G  # tokens per group (== per data shard on the production mesh)
+    xt = plan.constrain(x.reshape(G, TL, D), ("batch", None, None))
+
+    # ---- routing (fp32, local per group) ----------------------------------
+    logits = jnp.einsum("gtd,de->gte", xt, p[f"{prefix}router"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)  # (G,TL,K)
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss: E · Σ_e f_e · P_e (global mean)
+    f_e = jnp.mean(jax.nn.one_hot(gate_i, E, dtype=jnp.float32), axis=(0, 1, 2))
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e)
+
+    # ---- grouped-local dispatch (parcel routing) ---------------------------
+    A = TL * K  # assignments per group
+    # capacity floor: small-T (decode) batches must never drop — a dropped
+    # parcel at decode time corrupts a live request
+    C = max(int(cfg.capacity_factor * A / E), min(A, 16), 1)
+    flat_e = gate_i.reshape(G, A)
+    tok_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(TL), K)[None, :], (G, A))
+    # rank within (group, expert): one-hot cumsum — local, no global sort
+    onehot = (flat_e[:, :, None] == jnp.arange(E)[None, None, :]).astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1), flat_e[:, :, None],
+                              axis=2)[:, :, 0] - 1  # (G, A)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)  # trap row for drops
+
+    updates = jnp.take_along_axis(xt, tok_of[:, :, None], axis=1).astype(dt)
+    buf = jax.vmap(lambda s, u: jnp.zeros((E * C + 1, D), dt).at[s].add(u))(
+        slot, updates)  # batched scatter: group dim == data shard, stays local
+    buf = plan.constrain(buf[:, : E * C].reshape(G, E, C, D),
+                         ("batch", "experts", "expert_cap", None))
+
+    # ---- expert GEMMs at the data (model-axis shards) ----------------------
+    h = jnp.einsum("gecd,edf->gecf", buf, p[f"{prefix}w_in"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", buf, p[f"{prefix}w_gate"].astype(dt))
+    h = act_fn(cfg, g) * h
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p[f"{prefix}w_out"].astype(dt))
+    out_buf = plan.constrain(out_buf, ("batch", "experts", "expert_cap", None))
+
+    # ---- combine (return parcels, batched gather + scatter) ----------------
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(G, E * C, D), jnp.zeros((G, 1, D), dt)], axis=1)
+    y_assign = jnp.take_along_axis(flat_out, slot[:, :, None], axis=1)
+    y_assign = y_assign * gate_w.reshape(G, A)[:, :, None].astype(dt)
+    y = jax.vmap(lambda t, ya: jnp.zeros((TL, D), dt).at[t].add(ya))(
+        tok_of, y_assign)
+    y = plan.constrain(y, ("batch", None, None))
+
+    # ---- shared experts (dense path, always-on) ----------------------------
+    if cfg.n_shared_experts > 0:
+        hs = jnp.einsum("gtd,df->gtf", xt, p[f"{prefix}shared_w_in"].astype(dt))
+        gs = jnp.einsum("gtd,df->gtf", xt, p[f"{prefix}shared_w_gate"].astype(dt))
+        y = y + jnp.einsum("gtf,fd->gtd", act_fn(cfg, gs) * hs,
+                           p[f"{prefix}shared_w_out"].astype(dt))
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,83 @@
+"""Parameter specification system: one source of truth for shape, dtype,
+init AND logical sharding axes.
+
+Every model declares ``param_specs(cfg) -> {path: ParamSpec}``; from that we
+derive initialization, the sharding pytree (via :mod:`repro.dist.plan`),
+checkpoint manifests, and the dry-run ``ShapeDtypeStruct`` stand-ins.  A flat
+``{path: array}`` dict is the params pytree everywhere (paths are
+``"block/attn/wq"`` style).
+
+Logical axis names (resolved to mesh axes by a ``ShardingPlan``):
+
+    layers     scan-stacked layer dim            (never sharded)
+    embed      d_model rows                      (FSDP axis)
+    vocab      vocabulary                        (TP)
+    heads      q-head * head_dim columns         (TP)
+    kv_heads   kv-head * head_dim columns        (TP if divisible)
+    mlp        ffn hidden                        (TP)
+    experts    MoE expert dim                    (EP)
+    ssm_inner  SSD d_inner                       (TP)
+    lru        RG-LRU width                      (TP)
+    null       explicitly replicated
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # matmul weights here are (.., in, out); fan-in = second-to-last dim
+    return shape[-2] if len(shape) >= 2 else shape[-1]
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def init_params(specs: Dict[str, ParamSpec], rng: jax.Array) -> Dict[str, jax.Array]:
+    """Deterministic per-path keys: fold the path hash into the root key."""
+    out: Dict[str, jax.Array] = {}
+    for path in sorted(specs):
+        spec = specs[path]
+        key = jax.random.fold_in(rng, abs(hash(path)) % (2**31))
+        out[path] = init_param(key, spec)
+    return out
+
+
+def abstract_params(specs: Dict[str, ParamSpec]) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    return {p: jax.ShapeDtypeStruct(s.shape, s.dtype) for p, s in specs.items()}
+
+
+def param_count(specs: Dict[str, ParamSpec]) -> int:
+    return int(sum(np.prod(s.shape) for s in specs.values()))
+
+
+def param_bytes(specs: Dict[str, ParamSpec]) -> int:
+    return int(
+        sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in specs.values())
+    )

@@ -1,0 +1,109 @@
+"""Griffin / RecurrentGemma blocks [arXiv:2402.19427]: RG-LRU recurrent
+blocks interleaved with local (sliding-window) MQA attention, pattern
+(rec, rec, attn).
+
+RG-LRU recurrence (per channel):
+
+    r_t = σ(W_a x_t + b_a)                   recurrence gate
+    i_t = σ(W_x x_t + b_x)                   input gate
+    a_t = exp(-c · softplus(Λ) · r_t)        c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Prefill runs it as an associative scan (log-depth in XLA; the Pallas kernel
+``kernels/rglru_scan.py`` is the sequential-in-VMEM TPU version).  Decode is
+the O(1) recurrence — with the 2048-token ring-buffer KV of the local-attn
+layers this is what makes the 500k cell sub-quadratic (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models.layers import cdtype, norm
+from repro.models.params import ParamSpec
+from repro.models.ssm import causal_conv1d
+
+_RGLRU_C = 8.0
+
+
+def rec_param_specs(cfg: ModelConfig, L: int, prefix: str) -> Dict[str, ParamSpec]:
+    """Recurrent-block params, stacked (L, …)."""
+    D, W = cfg.d_model, cfg.lru_width
+    return {
+        f"{prefix}ln": ParamSpec((L, D), ("layers", None), init="ones"),
+        f"{prefix}w_x": ParamSpec((L, D, W), ("layers", "embed", "lru")),
+        f"{prefix}w_gate_branch": ParamSpec((L, D, W), ("layers", "embed", "lru")),
+        f"{prefix}conv_w": ParamSpec((L, cfg.ssm_conv, W), ("layers", None, "lru"),
+                                     init="scaled", scale=0.5),
+        f"{prefix}conv_b": ParamSpec((L, W), ("layers", "lru"), init="zeros"),
+        f"{prefix}lam": ParamSpec((L, W), ("layers", "lru"), init="ones"),
+        f"{prefix}w_a": ParamSpec((L, W, W), ("layers", "lru", None)),
+        f"{prefix}b_a": ParamSpec((L, W), ("layers", "lru"), init="zeros"),
+        f"{prefix}w_i": ParamSpec((L, W, W), ("layers", "lru", None)),
+        f"{prefix}b_i": ParamSpec((L, W), ("layers", "lru"), init="zeros"),
+        f"{prefix}rec_out": ParamSpec((L, W, D), ("layers", "lru", "embed")),
+    }
+
+
+def _gates(p: Dict[str, jax.Array], prefix: str, xw: jax.Array, dt):
+    """a (log-decay) and gated input for the recurrence. xw: (..., W)."""
+    r = jax.nn.sigmoid(xw.astype(jnp.float32) @ p[f"{prefix}w_a"].astype(jnp.float32)
+                       + p[f"{prefix}b_a"])
+    i = jax.nn.sigmoid(xw.astype(jnp.float32) @ p[f"{prefix}w_i"].astype(jnp.float32)
+                       + p[f"{prefix}b_i"])
+    log_a = -_RGLRU_C * jax.nn.softplus(p[f"{prefix}lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xw.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan. a/b: (B,S,W) fp32."""
+    if h0 is not None:
+        # fold h0 into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_block(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+              p: Dict[str, jax.Array], prefix: str) -> jax.Array:
+    """Griffin recurrent block (train/prefill): x (B,S,D) → (B,S,D)."""
+    dt = cdtype(cfg)
+    h = norm(cfg, x, p[f"{prefix}ln"])
+    gate = jax.nn.gelu(h @ p[f"{prefix}w_gate_branch"].astype(dt))
+    xw = h @ p[f"{prefix}w_x"].astype(dt)
+    xw = causal_conv1d(xw, p[f"{prefix}conv_w"], p[f"{prefix}conv_b"])
+    a, gx = _gates(p, prefix, xw, dt)
+    hseq = rglru_scan(a, gx).astype(dt)
+    y = (gate * hseq) @ p[f"{prefix}rec_out"].astype(dt)
+    return x + y
+
+
+def rec_block_decode(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                     p: Dict[str, jax.Array], prefix: str,
+                     conv_state: jax.Array, h_state: jax.Array):
+    """One-token decode. x: (B,1,D); conv_state: (B,K-1,W); h_state: (B,W)."""
+    dt = cdtype(cfg)
+    h = norm(cfg, x, p[f"{prefix}ln"])[:, 0]  # (B,D)
+    gate = jax.nn.gelu(h @ p[f"{prefix}w_gate_branch"].astype(dt))
+    xw = h @ p[f"{prefix}w_x"].astype(dt)
+    seq = jnp.concatenate([conv_state.astype(dt), xw[:, None, :]], axis=1)  # (B,K,W)
+    w = p[f"{prefix}conv_w"].astype(dt)
+    xw = jax.nn.silu(jnp.sum(seq * w[None, :, :], axis=1) + p[f"{prefix}conv_b"].astype(dt))
+    new_conv = seq[:, 1:, :]
+    a, gx = _gates(p, prefix, xw, dt)
+    new_h = a * h_state.astype(jnp.float32) + gx
+    y = (gate * new_h.astype(dt)) @ p[f"{prefix}rec_out"].astype(dt)
+    return x + y[:, None, :], new_conv.astype(conv_state.dtype), new_h.astype(h_state.dtype)

@@ -1,0 +1,222 @@
+"""Mamba-2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The chunked "dual" algorithm: within a chunk the recurrence is computed in
+matmul form (MXU-friendly — the whole point of SSD on TPU), across chunks a
+tiny ``lax.scan`` carries the (H, P, N) state.  The same math lives in three
+places with one oracle:
+
+- here (`ssd_chunked`): the model's XLA path, jit/GSPMD-sharded;
+- ``kernels/ssd_scan.py``: the Pallas TPU kernel (VMEM-blocked);
+- ``kernels/ref.py::ssd_reference``: the O(S) sequential oracle both are
+  tested against.
+
+Decode is the recurrent form: state ← state·exp(dt·A) + dt·B⊗x, O(1) per
+token — which is why this arch runs the 500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models.layers import cdtype
+from repro.models.params import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return dict(
+        d_inner=d_inner,
+        H=H,
+        P=cfg.ssm_headdim,
+        N=cfg.ssm_state,
+        G=cfg.ssm_ngroups,
+        conv_ch=d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state,
+        d_in_proj=2 * d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + H,
+    )
+
+
+def ssm_param_specs(cfg: ModelConfig, L: int, prefix: str) -> Dict[str, ParamSpec]:
+    d = ssm_dims(cfg)
+    D = cfg.d_model
+    return {
+        f"{prefix}ln": ParamSpec((L, D), ("layers", None), init="ones"),
+        f"{prefix}in_proj": ParamSpec((L, D, d["d_in_proj"]), ("layers", "embed", "ssm_inner")),
+        f"{prefix}conv_w": ParamSpec((L, cfg.ssm_conv, d["conv_ch"]), ("layers", None, "ssm_inner"),
+                                     init="scaled", scale=0.5),
+        f"{prefix}conv_b": ParamSpec((L, d["conv_ch"]), ("layers", "ssm_inner"), init="zeros"),
+        f"{prefix}A_log": ParamSpec((L, d["H"]), ("layers", "ssm_heads"), init="ones"),
+        f"{prefix}D": ParamSpec((L, d["H"]), ("layers", "ssm_heads"), init="ones"),
+        f"{prefix}dt_bias": ParamSpec((L, d["H"]), ("layers", "ssm_heads"), init="zeros"),
+        f"{prefix}gate_ln": ParamSpec((L, d["d_inner"]), ("layers", "ssm_inner"), init="ones"),
+        f"{prefix}out_proj": ParamSpec((L, d["d_inner"], D), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C), b: (C,)."""
+    K = w.shape[0]
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(y + b[None, None, :])
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) → lower-triangular pairwise sums L[i,j] = Σ_{j<k<=i} a_k."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., Q, Q): sum (j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """SSD in chunked matmul form.
+
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,) (negative)  Bm/Cm: (B,S,G,N), G|H.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).  fp32 internally.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    S_orig = S
+    pad = (-S) % Q
+    if pad:  # zero-pad the tail: dt=0 ⇒ decay 1, no state update (inert)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    rep = H // G
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+
+    a = dtf * A[None, None, None, :]  # (B,nc,Q,H) decay log per step
+    a_t = a.transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    cum_a = jnp.cumsum(a_t, axis=-1)  # within-chunk inclusive cumsum
+
+    # ---- intra-chunk (quadratic in Q, matmul form) -----------------------
+    Lmat = jnp.exp(_segsum(a_t))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bchqn,bchkn->bchqk",
+                        Cf.transpose(0, 1, 3, 2, 4), Bf.transpose(0, 1, 3, 2, 4))
+    scores = scores * Lmat * dtf.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bchkp->bchqp", scores, xf.transpose(0, 1, 3, 2, 4))
+
+    # ---- chunk summary states --------------------------------------------
+    decay_to_end = jnp.exp(cum_a[..., -1:] - cum_a)  # (B,nc,H,Q)
+    st = jnp.einsum("bchq,bchqn,bchqp->bchnp",
+                    decay_to_end * dtf.transpose(0, 1, 3, 2),
+                    Bf.transpose(0, 1, 3, 2, 4), xf.transpose(0, 1, 3, 2, 4))
+
+    # ---- inter-chunk recurrence (tiny scan over nc) ------------------------
+    chunk_decay = jnp.exp(cum_a[..., -1])  # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32).transpose(0, 1, 3, 2))
+
+    def body(s, args):
+        st_c, dec_c = args  # (B,H,N,P), (B,H)
+        s_new = s * dec_c[:, :, None, None] + st_c
+        return s_new, s  # emit the state *entering* the chunk
+
+    s_final, s_in = jax.lax.scan(
+        body, s0, (st.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    s_in = s_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P): state entering each chunk
+    final = s_final  # state after the last chunk
+
+    decay_from_start = jnp.exp(cum_a)  # (B,nc,H,Q)
+    y_inter = jnp.einsum("bchq,bchqn,bchnp->bchqp",
+                         decay_from_start, Cf.transpose(0, 1, 3, 2, 4), s_in)
+
+    y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4).reshape(Bsz, S, H, P)
+    y = y[:, :S_orig]
+    return y.astype(x.dtype), final.transpose(0, 1, 3, 2)  # state (B,H,P,N)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Recurrent single step. state: (B,H,P,N), x: (B,H,P), dt: (B,H),
+    Bm/Cm: (B,G,N). Returns (y (B,H,P), new_state)."""
+    H, G = x.shape[1], Bm.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)  # (B,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, :])  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dtf, Bf, x.astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cf)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ------------------------------------------------------------- full block
+def ssm_block(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+              p: Dict[str, jax.Array], prefix: str) -> jax.Array:
+    """One Mamba-2 block (train/prefill): x (B,S,D) → (B,S,D)."""
+    from repro.models.layers import norm  # local import avoids cycle
+
+    d = ssm_dims(cfg)
+    dt_ = cdtype(cfg)
+    B, S, D = x.shape
+    h = norm(cfg, x, p[f"{prefix}ln"])
+    zxbcdt = h @ p[f"{prefix}in_proj"].astype(dt_)
+    z, xbc, dt = jnp.split(zxbcdt, [d["d_inner"], d["d_inner"] + d["conv_ch"]], axis=-1)
+    xbc = causal_conv1d(xbc, p[f"{prefix}conv_w"], p[f"{prefix}conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d["d_inner"], d["d_inner"] + d["G"] * d["N"]], axis=-1)
+    xs = xs.reshape(B, S, d["H"], d["P"])
+    Bm = Bm.reshape(B, S, d["G"], d["N"])
+    Cm = Cm.reshape(B, S, d["G"], d["N"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}dt_bias"][None, None, :])
+    A = -jnp.exp(p[f"{prefix}A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p[f"{prefix}D"].astype(dt_)[None, None, :, None] * xs
+    y = y.reshape(B, S, d["d_inner"])
+    # gated RMSNorm (Mamba-2: norm(y * silu(z)))
+    y = norm(cfg, y * jax.nn.silu(z), p[f"{prefix}gate_ln"])
+    return x + y @ p[f"{prefix}out_proj"].astype(dt_)
+
+
+def ssm_block_decode(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                     p: Dict[str, jax.Array], prefix: str,
+                     conv_state: jax.Array, ssm_state: jax.Array):
+    """One-token decode. x: (B,1,D). conv_state: (B,K-1,conv_ch),
+    ssm_state: (B,H,P,N). Returns (out, new_conv_state, new_ssm_state)."""
+    from repro.models.layers import norm
+
+    d = ssm_dims(cfg)
+    dt_ = cdtype(cfg)
+    B = x.shape[0]
+    h = norm(cfg, x, p[f"{prefix}ln"])[:, 0]  # (B,D)
+    zxbcdt = h @ p[f"{prefix}in_proj"].astype(dt_)
+    z, xbc, dt = jnp.split(zxbcdt, [d["d_inner"], d["d_inner"] + d["conv_ch"]], axis=-1)
+    # conv over (state ++ current)
+    seq = jnp.concatenate([conv_state.astype(dt_), xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p[f"{prefix}conv_w"].astype(dt_)  # (K,C)
+    y = jnp.sum(seq * w[None, :, :], axis=1) + p[f"{prefix}conv_b"].astype(dt_)
+    xbc = jax.nn.silu(y)
+    new_conv = seq[:, 1:, :]
+    xs, Bm, Cm = jnp.split(xbc, [d["d_inner"], d["d_inner"] + d["G"] * d["N"]], axis=-1)
+    xs = xs.reshape(B, d["H"], d["P"])
+    Bm = Bm.reshape(B, d["G"], d["N"])
+    Cm = Cm.reshape(B, d["G"], d["N"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}dt_bias"][None, :])
+    A = -jnp.exp(p[f"{prefix}A_log"].astype(jnp.float32))
+    ys, new_state = ssd_decode_step(ssm_state, xs, dt, A, Bm, Cm)
+    ys = ys + p[f"{prefix}D"].astype(dt_)[None, :, None] * xs
+    ys = ys.reshape(B, d["d_inner"])
+    ys = norm(cfg, ys * jax.nn.silu(z), p[f"{prefix}gate_ln"])
+    out = x + (ys @ p[f"{prefix}out_proj"].astype(dt_))[:, None, :]
+    return out, new_conv.astype(conv_state.dtype), new_state

@@ -1,0 +1,151 @@
+"""Mamba-2 language model: embed → scanned SSD blocks → tied logits."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models import layers as Lx
+from repro.models.params import ParamSpec
+from repro.models.ssm import (
+    causal_conv1d,
+    ssd_chunked,
+    ssm_block_decode,
+    ssm_dims,
+    ssm_param_specs,
+)
+from repro.models.transformer import (
+    _layer_axes,
+    _slice_params,
+    gather_constrain,
+    stacked_gather_constrain,
+)
+
+
+def lm_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, ParamSpec] = {
+        "tok_embed": ParamSpec((V, D), ("vocab", "embed"), scale=0.02),
+        "final_ln": ParamSpec((D,), (None,), init="ones"),
+    }
+    specs.update(ssm_param_specs(cfg, cfg.num_layers, "blk/"))
+    return specs
+
+
+def _block_with_state(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                      p: Dict[str, jax.Array], collect_state: bool):
+    """ssm_block, optionally emitting (conv_state, final ssm state)."""
+    d = ssm_dims(cfg)
+    dt_ = Lx.cdtype(cfg)
+    B, S, D = x.shape
+    h = Lx.norm(cfg, x, p["ln"])
+    zxbcdt = h @ p["in_proj"].astype(dt_)
+    z, xbc_raw, dt = jnp.split(zxbcdt, [d["d_inner"], d["d_inner"] + d["conv_ch"]], axis=-1)
+    xbc = causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d["d_inner"], d["d_inner"] + d["G"] * d["N"]], axis=-1)
+    xs = xs.reshape(B, S, d["H"], d["P"])
+    Bm = Bm.reshape(B, S, d["G"], d["N"])
+    Cm = Cm.reshape(B, S, d["G"], d["N"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"].astype(dt_)[None, None, :, None] * xs
+    y = y.reshape(B, S, d["d_inner"])
+    y = Lx.norm(cfg, y * jax.nn.silu(z), p["gate_ln"])
+    out = x + y @ p["out_proj"].astype(dt_)
+    if not collect_state:
+        return out, None
+    K = cfg.ssm_conv
+    pad = jnp.pad(xbc_raw, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))
+    conv_state = pad[:, -(K - 1):, :]
+    return out, (conv_state.astype(dt_), final_state.astype(jnp.float32))
+
+
+def _run_blocks(cfg: ModelConfig, plan: ShardingPlan, params, x: jax.Array,
+                collect_state: bool):
+    specs = lm_param_specs(cfg)
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:
+        blk = stacked_gather_constrain(plan, blk, ax)
+
+    def body(x, lp):
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x = plan.constrain(x, ("batch", "seq", None))
+        return _block_with_state(cfg, plan, x, lp, collect_state)
+
+    body = Lx.remat_wrap(plan, body)
+    return jax.lax.scan(body, x, blk)
+
+
+def forward(cfg: ModelConfig, plan: ShardingPlan, params, tokens: jax.Array):
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    x, _ = _run_blocks(cfg, plan, params, x, collect_state=False)
+    x = Lx.norm(cfg, x, params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, plan: ShardingPlan, params, batch) -> jax.Array:
+    logits, _ = forward(cfg, plan, params, batch["tokens"][:, :-1])
+    return Lx.cross_entropy(logits, batch["tokens"][:, 1:])
+
+
+# --------------------------------------------------------------------- cache
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    """SSM decode state is O(1) — ``cache_len`` is ignored (kept for API)."""
+    d = ssm_dims(cfg)
+    L = cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, d["conv_ch"]), dt),
+        "state": jax.ShapeDtypeStruct((L, batch, d["H"], d["P"], d["N"]), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "conv": ("layers", "batch", None, "ssm_inner"),
+        "state": ("layers", "batch", "ssm_heads", None, None),
+        "pos": ("batch",),
+    }
+
+
+def prefill(cfg: ModelConfig, plan: ShardingPlan, params, tokens: jax.Array,
+            cache_len: Optional[int] = None):
+    B, S = tokens.shape
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    x, states = _run_blocks(cfg, plan, params, x, collect_state=True)
+    conv_s, ssm_s = states
+    cache = {"conv": conv_s, "state": ssm_s, "pos": jnp.full((B,), S, jnp.int32)}
+    x = Lx.norm(cfg, x[:, -1:, :], params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits[:, 0, :], cache
+
+
+def decode_step(cfg: ModelConfig, plan: ShardingPlan, params, cache, token):
+    specs = lm_param_specs(cfg)
+    x = Lx.embed(cfg, plan, params["tok_embed"], token)
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:
+        blk = stacked_gather_constrain(plan, blk, ax)
+
+    def body(x, xs):
+        lp, conv_s, ssm_s = xs
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x, new_conv, new_state = ssm_block_decode(cfg, plan, x, lp, "", conv_s, ssm_s)
+        return x, (new_conv, new_state)
+
+    x, (nconv, nstate) = jax.lax.scan(body, x, (blk, cache["conv"], cache["state"]))
+    new_cache = {"conv": nconv, "state": nstate, "pos": cache["pos"] + 1}
+    x = Lx.norm(cfg, x, params["final_ln"])
+    logits = Lx.unembed(cfg, plan, x, params["tok_embed"], transpose=True)
+    return logits[:, 0, :], new_cache

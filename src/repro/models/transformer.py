@@ -1,0 +1,342 @@
+"""Decoder-only transformer (dense / MoE / VLM families).
+
+Layers are scan-stacked: every per-layer parameter has a leading ``layers``
+dim and the forward pass is one ``lax.scan`` over the stack (small HLO, fast
+512-device compiles).  The *gather point* implements the BSP vs futurized
+distinction (DESIGN.md §2):
+
+- BSP plan: the whole stacked FSDP-sharded parameter tree is constrained to
+  its gathered spec **before** the scan — one bulk all-gather, a global
+  barrier, peak memory ∝ all layers;
+- futurized plan: each layer's slice is constrained **inside** the scan
+  body — XLA overlaps the per-layer all-gather with the previous layer's
+  compute (async collectives), and the backward pass reduce-scatters
+  per-layer.  This is HPX futurization expressed at the XLA level.
+
+MoE layers route through :mod:`repro.models.moe` (the parcel path); the VLM
+family splices stub patch embeddings over the first ``n_patches`` positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import ShardingPlan
+from repro.models import layers as Lx
+from repro.models.moe import moe_ffn, moe_param_specs
+from repro.models.params import ParamSpec
+
+
+# ------------------------------------------------------------------- specs
+def _attn_specs(cfg: ModelConfig, L: int, prefix: str) -> Dict[str, ParamSpec]:
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        f"{prefix}ln1": ParamSpec((L, D), ("layers", None), init="ones"),
+        f"{prefix}wq": ParamSpec((L, D, H * Dh), ("layers", "embed", "heads")),
+        f"{prefix}wk": ParamSpec((L, D, KV * Dh), ("layers", "embed", "kv_heads")),
+        f"{prefix}wv": ParamSpec((L, D, KV * Dh), ("layers", "embed", "kv_heads")),
+        f"{prefix}wo": ParamSpec((L, H * Dh, D), ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs.update({
+            f"{prefix}bq": ParamSpec((L, H * Dh), ("layers", "heads"), init="zeros"),
+            f"{prefix}bk": ParamSpec((L, KV * Dh), ("layers", "kv_heads"), init="zeros"),
+            f"{prefix}bv": ParamSpec((L, KV * Dh), ("layers", "kv_heads"), init="zeros"),
+        })
+    return specs
+
+
+def _mlp_specs(cfg: ModelConfig, L: int, prefix: str, d_ff: int) -> Dict[str, ParamSpec]:
+    D = cfg.d_model
+    specs = {
+        f"{prefix}ln2": ParamSpec((L, D), ("layers", None), init="ones"),
+        f"{prefix}w_in": ParamSpec((L, D, d_ff), ("layers", "embed", "mlp")),
+        f"{prefix}w_out": ParamSpec((L, d_ff, D), ("layers", "mlp", "embed")),
+    }
+    if cfg.glu:
+        specs[f"{prefix}w_gate"] = ParamSpec((L, D, d_ff), ("layers", "embed", "mlp"))
+    return specs
+
+
+def decoder_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, ParamSpec] = {
+        "tok_embed": ParamSpec((V, D), ("vocab", "embed"), scale=0.02),
+        "final_ln": ParamSpec((D,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    fd = cfg.first_dense
+    Lm = cfg.num_layers - fd
+    if fd > 0:  # leading dense layers (DeepSeekMoE layer 0)
+        d_ff0 = cfg.dense_d_ff or cfg.d_ff
+        specs.update(_attn_specs(cfg, fd, "d0/"))
+        specs.update(_mlp_specs(cfg, fd, "d0/", d_ff0))
+    specs.update(_attn_specs(cfg, Lm, "blk/"))
+    if cfg.is_moe:
+        specs[f"blk/ln2"] = ParamSpec((Lm, D), ("layers", None), init="ones")
+        specs.update(moe_param_specs(cfg, Lm, "blk/moe/"))
+    else:
+        specs.update(_mlp_specs(cfg, Lm, "blk/", cfg.d_ff))
+    return specs
+
+
+# ------------------------------------------------------------------ helpers
+_GATHER_AXIS = "embed"  # the FSDP axis
+
+
+def _layer_axes(specs: Dict[str, ParamSpec], prefix: str) -> Dict[str, Tuple]:
+    """Per-layer logical axes (leading 'layers' dim dropped)."""
+    out = {}
+    for path, s in specs.items():
+        if path.startswith(prefix):
+            out[path[len(prefix):]] = tuple(a for a in s.axes if a != "layers")
+    return out
+
+
+def _slice_params(params: Dict[str, jax.Array], prefix: str) -> Dict[str, jax.Array]:
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _gathered(axes: Tuple) -> Tuple:
+    return tuple(None if a == _GATHER_AXIS else a for a in axes)
+
+
+def gather_constrain(plan: ShardingPlan, tree: Dict[str, jax.Array],
+                     axes: Dict[str, Tuple]) -> Dict[str, jax.Array]:
+    """Constrain every param to its *gathered* (non-FSDP) spec."""
+    return {k: plan.constrain(v, _gathered(axes[k])) for k, v in tree.items()}
+
+
+def stacked_gather_constrain(plan: ShardingPlan, tree: Dict[str, jax.Array],
+                             axes: Dict[str, Tuple]) -> Dict[str, jax.Array]:
+    """BSP: gather the whole stack up-front (axes still carry 'layers')."""
+    return {
+        k: plan.constrain(v, ("layers",) + _gathered(axes[k])) for k, v in tree.items()
+    }
+
+
+# ------------------------------------------------------------------ blocks
+def _layer_body(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                lp: Dict[str, jax.Array], positions: jax.Array,
+                moe_layer: bool, collect_kv: bool = False):
+    x = plan.constrain(x, ("batch", "seq_sp", None))
+    h = Lx.norm(cfg, x, lp["ln1"])
+    attn_out = Lx.attention(cfg, plan, h, lp, "", positions, causal=cfg.causal,
+                            window=cfg.window, return_kv=collect_kv)
+    if collect_kv:
+        h, kv = attn_out
+    else:
+        h, kv = attn_out, None
+    x = x + h
+    h = Lx.norm(cfg, x, lp["ln2"])
+    if moe_layer:
+        ffn, aux = moe_ffn(cfg, plan, h, lp, "moe/")
+    else:
+        ffn, aux = Lx.mlp(cfg, plan, h, lp, ""), jnp.zeros((), jnp.float32)
+    return x + ffn, aux, kv
+
+
+def _run_stack(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+               stacked: Dict[str, jax.Array], axes: Dict[str, Tuple],
+               positions: jax.Array, moe_layer: bool, collect_kv: bool = False):
+    """lax.scan over a stacked layer dict; returns (x, aux_sum, stacked_kv)."""
+
+    def body(carry, lp):
+        x, aux_sum = carry
+        if not plan.gather_upfront:  # futurized: per-layer gather point
+            lp = gather_constrain(plan, lp, axes)
+        x, aux, kv = _layer_body(cfg, plan, x, lp, positions, moe_layer, collect_kv)
+        return (x, aux_sum + aux), kv
+
+    body = Lx.remat_wrap(plan, body)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux, kvs
+
+
+# ------------------------------------------------------------------ forward
+def forward(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
+            tokens: jax.Array, patches: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) → (logits fp32 (B,S,V), aux_loss)."""
+    specs = decoder_param_specs(cfg)
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm family requires patch embeddings"
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, cfg.n_patches:, :]], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.first_dense > 0:
+        d0 = _slice_params(params, "d0/")
+        a0 = _layer_axes(specs, "d0/")
+        if plan.gather_upfront:
+            d0 = stacked_gather_constrain(plan, d0, a0)
+        x, _, _ = _run_stack(cfg, plan, x, d0, a0, positions, moe_layer=False)
+
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:  # BSP: one bulk all-gather before the loop
+        blk = stacked_gather_constrain(plan, blk, ax)
+    x, aux, _ = _run_stack(cfg, plan, x, blk, ax, positions, moe_layer=cfg.is_moe)
+
+    x = Lx.norm(cfg, x, params["final_ln"])
+    table = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = Lx.unembed(cfg, plan, x, table, transpose=cfg.tie_embeddings)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
+            batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens = batch["tokens"]
+    logits, aux = forward(cfg, plan, params, tokens[:, :-1],
+                          patches=batch.get("patches"))
+    labels = tokens[:, 1:]
+    mask = None
+    if cfg.family == "vlm":  # no next-token loss on image positions
+        mask = (jnp.arange(labels.shape[1]) >= cfg.n_patches)[None, :].astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, labels.shape)
+    ce = Lx.cross_entropy(logits, labels, mask)
+    return ce + cfg.router_aux_weight * aux
+
+
+# -------------------------------------------------------------------- cache
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract KV-cache pytree for the dry-run / serve engine."""
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    fd, Lm = cfg.first_dense, cfg.num_layers - cfg.first_dense
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "k": jax.ShapeDtypeStruct((Lm, batch, cache_len, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((Lm, batch, cache_len, KV, Dh), dt),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    if fd > 0:
+        specs["k0"] = jax.ShapeDtypeStruct((fd, batch, cache_len, KV, Dh), dt)
+        specs["v0"] = jax.ShapeDtypeStruct((fd, batch, cache_len, KV, Dh), dt)
+    return specs
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    out = {"k": ax, "v": ax, "pos": ("batch",)}
+    if cfg.first_dense > 0:
+        out["k0"] = ax
+        out["v0"] = ax
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros(s.shape, s.dtype) for k, s in
+            init_cache_specs(cfg, batch, cache_len).items()}
+
+
+def _decode_layer(cfg: ModelConfig, plan: ShardingPlan, x, lp, kc, vc, pos,
+                  moe_layer: bool):
+    h = Lx.norm(cfg, x, lp["ln1"])
+    h, kc, vc = Lx.decode_attention(cfg, plan, h, lp, "", kc, vc, pos,
+                                    window=cfg.window)
+    x = x + h
+    h = Lx.norm(cfg, x, lp["ln2"])
+    if moe_layer:
+        ffn, _ = moe_ffn(cfg, plan, h, lp, "moe/")
+    else:
+        ffn = Lx.mlp(cfg, plan, h, lp, "")
+    return x + ffn, kc, vc
+
+
+def decode_step(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
+                cache: Dict[str, jax.Array], token: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. token: (B, 1) int32 → (logits (B,V) fp32, new cache)."""
+    specs = decoder_param_specs(cfg)
+    pos = cache["pos"]
+    x = Lx.embed(cfg, plan, params["tok_embed"], token)
+    new_cache = dict(cache)
+
+    if cfg.first_dense > 0:
+        d0 = _slice_params(params, "d0/")
+        a0 = _layer_axes(specs, "d0/")
+
+        def body0(x, xs):
+            lp, kc, vc = xs
+            if not plan.gather_upfront:
+                lp = gather_constrain(plan, lp, a0)
+            x, kc, vc = _decode_layer(cfg, plan, x, lp, kc, vc, pos, False)
+            return x, (kc, vc)
+
+        x, (nk0, nv0) = jax.lax.scan(body0, x, (d0, cache["k0"], cache["v0"]))
+        new_cache["k0"], new_cache["v0"] = nk0, nv0
+
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:
+        blk = stacked_gather_constrain(plan, blk, ax)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x, kc, vc = _decode_layer(cfg, plan, x, lp, kc, vc, pos, cfg.is_moe)
+        return x, (kc, vc)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (blk, cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = nk, nv
+    new_cache["pos"] = pos + 1
+
+    x = Lx.norm(cfg, x, params["final_ln"])
+    table = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = Lx.unembed(cfg, plan, x, table, transpose=cfg.tie_embeddings)
+    return logits[:, 0, :], new_cache
+
+
+def prefill(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
+            tokens: jax.Array, patches: Optional[jax.Array] = None,
+            cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-pass forward + KV-cache collection.
+
+    Returns (last-position logits (B, V) fp32, cache).  K/V are collected as
+    scan outputs of the same stack pass (``collect_kv``) — no second pass.
+    """
+    specs = decoder_param_specs(cfg)
+    B, S = tokens.shape
+    T = cache_len or S
+    x = Lx.embed(cfg, plan, params["tok_embed"], tokens)
+    if cfg.family == "vlm" and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, cfg.n_patches:, :]], axis=1)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, T)
+
+    if cfg.first_dense > 0:
+        d0 = _slice_params(params, "d0/")
+        a0 = _layer_axes(specs, "d0/")
+        if plan.gather_upfront:
+            d0 = stacked_gather_constrain(plan, d0, a0)
+        x, _, (k0, v0) = _run_stack(cfg, plan, x, d0, a0, positions,
+                                    moe_layer=False, collect_kv=True)
+        cache["k0"] = _place(cache["k0"], k0)
+        cache["v0"] = _place(cache["v0"], v0)
+
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:
+        blk = stacked_gather_constrain(plan, blk, ax)
+    x, _, (k, v) = _run_stack(cfg, plan, x, blk, ax, positions,
+                              moe_layer=cfg.is_moe, collect_kv=True)
+    cache["k"] = _place(cache["k"], k)
+    cache["v"] = _place(cache["v"], v)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+
+    x_last = Lx.norm(cfg, x[:, -1:, :], params["final_ln"])
+    table = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = Lx.unembed(cfg, plan, x_last, table, transpose=cfg.tie_embeddings)
+    return logits[:, 0, :], cache
+
+
+def _place(buf: jax.Array, kv: jax.Array) -> jax.Array:
+    """Write (L,B,S,KV,Dh) prefill K/V into the (L,B,T,KV,Dh) cache buffer."""
+    return jax.lax.dynamic_update_slice_in_dim(buf, kv.astype(buf.dtype), 0, axis=2)

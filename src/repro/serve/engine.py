@@ -1,0 +1,160 @@
+"""Serving engine: continuous batching driven by the AMT runtime.
+
+Requests arrive as futures (``submit`` returns immediately, HPX-style
+one-sided semantics); the engine loop runs as a scheduler task and:
+
+1. admits queued requests into free batch slots — each request is prefilled
+   (B=1, exact, its own length) and its cache *migrated into* the batched
+   cache at the slot index (per-slot ``pos`` lets slots advance
+   independently — true continuous batching, no wave barriers);
+2. decodes the whole batch each iteration (one jitted ``decode_step``,
+   donated cache);
+3. resolves a request's future the moment its slot finishes (EOS/max
+   tokens), freeing the slot for the next admission.
+
+The engine's cache is AGAS-registered, so load rebalancing / elastic moves
+(DESIGN.md §5) operate on it like any other global object.  Performance
+counters: ``/serve{engine#0}/requests/{submitted,completed}``,
+``/serve{engine#0}/tokens/generated``, ``/serve{engine#0}/step/duration``.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agas as _agas
+from repro.core import counters as _counters
+from repro.core import scheduler as _sched
+from repro.core.future import Future, Promise
+from repro.models.model import Model
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 4
+    cache_len: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1: never stops early
+
+
+@dataclass
+class _Request:
+    prompt: List[int]
+    max_new: int
+    promise: Promise
+    generated: List[int] = field(default_factory=list)
+
+
+def _cache_batch_axis(name: str) -> int:
+    return 0 if name == "pos" else 1
+
+
+class Engine:
+    def __init__(self, model: Model, params: Dict[str, jax.Array],
+                 scfg: ServeConfig, extra_inputs: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.extra = extra_inputs or {}
+        B = scfg.max_batch
+        cache_specs = model.cache_specs(B, scfg.cache_len,
+                                        enc_len=self.extra.get("enc_len"))
+        self.cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in cache_specs.items()}
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.slots: List[Optional[_Request]] = [None] * B
+        self._queue: "queue.Queue[_Request]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._running = False
+
+        self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+
+        reg = _counters.default()
+        self.c_sub = reg.counter("/serve{engine#0}/requests/submitted")
+        self.c_done = reg.counter("/serve{engine#0}/requests/completed")
+        self.c_tok = reg.counter("/serve{engine#0}/tokens/generated")
+        self.t_step = reg.timer("/serve{engine#0}/step/duration")
+        self.gid = _agas.default().register(self.cache, name=None,
+                                            placement="host-engine")
+
+    def _decode_fn(self, params, cache, token):
+        logits, new_cache = self.model.decode(params, cache, token)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    # ------------------------------------------------------------------ api
+    def submit(self, prompt: List[int], max_new: Optional[int] = None) -> Future:
+        """One-sided request: returns Future[List[int]] of generated ids."""
+        req = _Request(list(prompt), max_new or self.scfg.max_new_tokens, Promise())
+        self._queue.put(req)
+        self.c_sub.increment()
+        self._ensure_running()
+        return req.promise.future()
+
+    def _ensure_running(self) -> None:
+        with self._lock:
+            if not self._running:
+                self._running = True
+                _sched.get_runtime().spawn_raw(self._loop)
+
+    # ----------------------------------------------------------------- loop
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                continue
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            pin = {"tokens": prompt, **{k: v for k, v in self.extra.items()
+                                        if k not in ("enc_len",)}}
+            logits1, cache1 = self._prefill(self.params, pin,
+                                            cache_len=self.scfg.cache_len)
+            first = int(jnp.argmax(logits1, axis=-1)[0])
+            # migrate the single-request cache into slot i of the batch cache
+            self.cache = {
+                k: v.at[(slice(None), i) if _cache_batch_axis(k) == 1 else i].set(
+                    jnp.take(cache1[k], 0, axis=_cache_batch_axis(k)))
+                for k, v in self.cache.items()
+            }
+            self.tokens = self.tokens.at[i, 0].set(first)
+            req.generated.append(first)
+            self.c_tok.increment()
+            self.slots[i] = req
+
+    def _finish(self, i: int) -> None:
+        req = self.slots[i]
+        self.slots[i] = None
+        self.c_done.increment()
+        req.promise.set_value(req.generated)
+
+    def _loop(self) -> None:
+        while True:
+            self._admit()
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+            if not active:
+                with self._lock:
+                    if self._queue.empty():
+                        self._running = False
+                        return
+                continue
+            with self.t_step.time():
+                self.tokens, self.cache = self._decode(self.params, self.cache,
+                                                       self.tokens)
+                toks = np.asarray(self.tokens[:, 0])
+            for i in active:
+                req = self.slots[i]
+                tok = int(toks[i])
+                req.generated.append(tok)
+                self.c_tok.increment()
+                done = len(req.generated) >= req.max_new + 1 or tok == self.scfg.eos_id
+                if done:
+                    self._finish(i)

@@ -1,0 +1,104 @@
+"""Task-based pipeline parallelism: 1F1B from dataflow ordering (DESIGN §5).
+
+The paper's claim in miniature: express the pipeline as a dependency DAG of
+stage tasks and the schedule *emerges* — no hand-written 1F1B state machine,
+no global barrier.  Forward task (s, m) depends on (s−1, m); backward task
+(s, m) depends on (s+1, m)'s cotangent and its own forward residuals; the
+AMT scheduler (work-stealing pool) runs whatever is ready, so bubbles fill
+exactly as in 1F1B the moment resources free up.
+
+Each stage holds its own parameters (= a pipeline rank's weights); the step
+returns per-stage gradients averaged over microbatches.  On a TPU fleet each
+stage task dispatches to that stage's mesh slice — here every stage is a
+jitted function on the local device, which demonstrates ordering and overlap
+of the host plane (and is exactly how a multi-controller deployment would
+drive per-stage meshes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counters as _counters
+from repro.core import scheduler as _sched
+from repro.core.dataflow import dataflow
+from repro.core.future import Future, when_all
+
+
+def pipeline_value_and_grad(
+    stage_fns: Sequence[Callable],  # stage_fns[s](params_s, x) -> y
+    loss_fn: Callable,  # loss_fn(y_last, target_mb) -> scalar
+    stage_params: Sequence[Any],
+    batches: Sequence[Tuple[Any, Any]],  # [(x_mb, target_mb)] microbatches
+) -> Tuple[Future, List[Future]]:
+    """Futurized pipeline step.
+
+    Returns (loss future (mean over microbatches),
+             per-stage gradient futures (mean over microbatches)).
+    """
+    S, M = len(stage_fns), len(batches)
+    rt = _sched.get_runtime()
+    c_tasks = _counters.counter("/pipeline{1f1b}/tasks/cumulative")
+
+    # ---- forward wave: fwd[s][m] = (activation future, vjp closure) -------
+    acts: List[List[Future]] = [[None] * M for _ in range(S)]
+    vjps: List[List[Future]] = [[None] * M for _ in range(S)]
+
+    def fwd_task(s: int, x: Any) -> Tuple[Any, Callable]:
+        c_tasks.increment()
+        y, vjp = jax.vjp(lambda p, xx: stage_fns[s](p, xx), stage_params[s], x)
+        return y, vjp
+
+    for m, (x_mb, _) in enumerate(batches):
+        carry: Any = x_mb
+        for s in range(S):
+            pair = (dataflow(fwd_task, s, carry) if s == 0 else
+                    dataflow(lambda prev, s=s: fwd_task(s, prev[0]), carry))
+            acts[s][m] = pair.then_value(lambda p: p[0])
+            vjps[s][m] = pair.then_value(lambda p: p[1])
+            carry = pair
+
+    # ---- loss + backward wave ---------------------------------------------
+    def loss_task(y: Any, target: Any) -> Tuple[Any, Any]:
+        c_tasks.increment()
+        loss, vjp = jax.vjp(loss_fn, y, target)
+        dy, _ = vjp(jnp.ones_like(loss))
+        return loss, dy
+
+    losses: List[Future] = []
+    grads: List[List[Future]] = [[None] * M for _ in range(S)]
+    for m, (_, tgt) in enumerate(batches):
+        lt = dataflow(loss_task, acts[S - 1][m], tgt)
+        losses.append(lt.then_value(lambda p: p[0]))
+        ct = lt.then_value(lambda p: p[1])  # cotangent entering stage S-1
+        for s in reversed(range(S)):
+            def bwd_task(vjp, dy, s=s):
+                c_tasks.increment()
+                dp, dx = vjp(dy)
+                return dp, dx
+
+            bt = dataflow(bwd_task, vjps[s][m], ct)
+            grads[s][m] = bt.then_value(lambda p: p[0])
+            ct = bt.then_value(lambda p: p[1])
+
+    # ---- reductions (dataflow, no barrier until the caller looks) ----------
+    def mean_tree(*trees: Any) -> Any:
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+
+    loss_fut = dataflow(lambda *ls: sum(ls) / len(ls), *losses)
+    grad_futs = [dataflow(mean_tree, *grads[s]) for s in range(S)]
+    return loss_fut, grad_futs
+
+
+def split_stages(layers: Sequence[Any], n_stages: int) -> List[List[Any]]:
+    """Even-ish contiguous split of layer params into pipeline stages."""
+    k, r = divmod(len(layers), n_stages)
+    out, i = [], 0
+    for s in range(n_stages):
+        n = k + (1 if s < r else 0)
+        out.append(list(layers[i: i + n]))
+        i += n
+    return out

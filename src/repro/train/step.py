@@ -1,0 +1,134 @@
+"""Train/serve step builders: BSP baseline vs futurized vs optimized.
+
+The *step structure* is where the paper's thesis lives (DESIGN.md §2):
+
+- BSP (``bsp`` plan): one macro-batch, params bulk-gathered before the layer
+  loop, gradient reduction at the very end — the global-barrier structure of
+  MPI+X that HPX argues against.
+- Futurized (``futurized`` plan): FSDP per-layer gathers inside the scan,
+  per-layer reduce-scatter in backward, optional microbatch accumulation —
+  fine-grained constraint-based synchronization; XLA overlaps the resulting
+  async collectives with compute exactly like an HPX dataflow graph.
+- Optimized (``optimized`` plan): + bf16-compressed pod-axis gradient
+  reduction and selective remat (beyond-paper, EXPERIMENTS.md §Perf).
+
+All steps donate ``(params, opt_state)`` — the XLA analogue of HPX's
+zero-copy parcel serialization (buffers are aliased, never copied).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.collectives import pod_manual_value_and_grad
+from repro.dist.plan import ShardingPlan
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def make_loss_fn(model: Model) -> Callable:
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    return loss_fn
+
+
+def _microbatch_grads(loss_fn: Callable, params, batch, n_mb: int):
+    """Gradient accumulation over ``n_mb`` microbatches via lax.scan.
+
+    Each microbatch's backward finishes with its own (overlappable)
+    reduce-scatter — the futurized pipeline. Batch dim must divide n_mb.
+    """
+
+    def split(x):
+        return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), None
+
+    (loss_sum, grads_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero_grads), mbs)
+    inv = 1.0 / n_mb
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    mesh=None) -> Callable:
+    """Returns ``step(params, opt_state, batch) → (params, opt_state, metrics)``."""
+    plan = model.plan
+    loss_fn = make_loss_fn(model)
+
+    def step(params, opt_state, batch):
+        if plan.compress_pod_grads and mesh is not None and "pod" in mesh.axis_names:
+            loss, grads = pod_manual_value_and_grad(loss_fn, mesh)(params, batch)
+        elif plan.microbatches > 1:
+            loss, grads = _microbatch_grads(loss_fn, params, batch, plan.microbatches)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, om = adamw.update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, inputs):
+        return model.prefill(params, inputs)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    """Greedy one-token decode (the ``serve_step`` of the decode cells)."""
+
+    def decode_step(params, cache, token):
+        logits, new_cache = model.decode(params, cache, token)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------- shardings
+def train_state_shardings(model: Model, mesh) -> Tuple[Any, Any]:
+    """(param shardings, optimizer-state shardings) for jit in/out."""
+    plan = model.plan
+    specs = model.param_specs()
+    p_sh = plan.param_shardings(specs, mesh)
+    ax = adamw.state_axes(specs)
+    o_sh = {
+        "m": {k: plan.sharding(ax["m"][k], specs[k].shape, mesh) for k in specs},
+        "v": {k: plan.sharding(ax["v"][k], specs[k].shape, mesh) for k in specs},
+        "step": plan.replicated(mesh),
+    }
+    return p_sh, o_sh
+
+
+def batch_shardings(model: Model, mesh, batch_specs: Dict[str, jax.ShapeDtypeStruct]):
+    plan = model.plan
+    axes = model.batch_axes()
+    return {
+        k: plan.sharding(axes.get(k, ("batch",) + (None,) * (len(s.shape) - 1)),
+                         s.shape, mesh)
+        for k, s in batch_specs.items()
+    }
+
+
+def cache_shardings(model: Model, mesh, cache_specs: Dict[str, Any]):
+    plan = model.plan
+    axes = model.cache_axes()
+    return {
+        k: plan.sharding(axes[k], s.shape, mesh) if s.shape else plan.replicated(mesh)
+        for k, s in cache_specs.items()
+    }

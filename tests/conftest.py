@@ -1,0 +1,18 @@
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rt():
+    """Session-wide AMT runtime (hpx::init equivalent)."""
+    import repro.core as core
+
+    runtime = core.init(num_workers=4, policy="local")
+    yield runtime
+    core.finalize()
+
+
+@pytest.fixture()
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,67 @@
+"""Dry-run artifact coherence + roofline arithmetic (reads results/dryrun)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.roofline import analyze, model_flops
+from repro.configs import all_cells
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not RESULTS.exists() or not list(RESULTS.glob("*__futurized.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all)")
+
+
+def _recs(mesh):
+    return {(r["arch"], r["shape"]): r for r in (
+        json.loads(p.read_text()) for p in RESULTS.glob(f"*__{mesh}__futurized.json"))}
+
+
+@pytest.mark.parametrize("mesh,chips", [("pod", 256), ("multipod", 512)])
+def test_every_live_cell_compiled(mesh, chips):
+    recs = _recs(mesh)
+    missing = [c for c in all_cells() if c not in recs]
+    assert not missing, f"cells missing from {mesh} dry-run: {missing}"
+    for (arch, shape), r in recs.items():
+        assert r["n_devices"] == chips
+        assert r["compile_s"] > 0
+        assert r["hlo_flops_total"] > 0, (arch, shape)
+
+
+def test_multipod_cells_cross_dci():
+    """The pod axis must actually shard: train cells reduce grads across
+    pods ⇒ nonzero DCI wire bytes."""
+    recs = _recs("multipod")
+    for (arch, shape), r in recs.items():
+        if r["kind"] == "train":
+            assert r["collectives"]["wire_bytes_dci"] > 0, (arch, shape)
+
+
+def test_roofline_terms_positive_and_bottleneck_valid():
+    for r in _recs("pod").values():
+        a = analyze(r)
+        assert a.compute_s > 0 and a.memory_s > 0
+        assert a.bottleneck in ("compute", "memory", "collective")
+        assert 0 < a.roofline_fraction < 1
+        assert a.step_s == max(a.compute_s, a.memory_s, a.collective_s)
+
+
+def test_model_flops_scales_with_kind():
+    recs = _recs("pod")
+    qt = recs[("qwen25_3b", "train_4k")]
+    qp = recs[("qwen25_3b", "prefill_32k")]
+    # train = 6·N·D, prefill = 2·N·D with equal token counts here
+    assert abs(model_flops(qt) / model_flops(qp) - 3.0) < 1e-6
+
+
+def test_decode_cells_lower_serve_step_not_train():
+    recs = _recs("pod")
+    for (arch, shape), r in recs.items():
+        if shape in ("decode_32k", "long_500k"):
+            assert r["kind"] == "decode"
+            # decode flops orders of magnitude below train flops
+            tr = recs.get((arch, "train_4k"))
+            if tr:
+                assert r["hlo_flops_total"] < tr["hlo_flops_total"] / 50

@@ -1,0 +1,75 @@
+"""AGAS + parcels (HPX P3/P4)."""
+import pytest
+
+import repro.core as core
+from repro.core import agas, parcel
+from repro.core.agas import AGAS
+
+
+def test_register_resolve_roundtrip(rt):
+    a = AGAS(locality=7)
+    gid = a.register({"v": 1}, name="/t/obj")
+    assert a.resolve(gid) == {"v": 1}
+    assert a.resolve("/t/obj") == {"v": 1}
+    assert a.gid_of("/t/obj") == gid
+    assert a.contains(gid) and a.contains("/t/obj")
+
+
+def test_duplicate_name_rejected(rt):
+    a = AGAS()
+    a.register(1, name="/dup")
+    with pytest.raises(KeyError):
+        a.register(2, name="/dup")
+    a.register_name("/dup", 3, replace=True)
+    assert a.resolve("/dup") == 3
+
+
+def test_unregister(rt):
+    a = AGAS()
+    gid = a.register("x", name="/gone")
+    a.unregister(gid)
+    assert not a.contains(gid)
+    assert not a.contains("/gone")
+    with pytest.raises(KeyError):
+        a.resolve(gid)
+
+
+def test_rebind_bumps_generation(rt):
+    a = AGAS()
+    gid = a.register([1, 2], name="/m")
+    g1 = a.rebind(gid, [3, 4])
+    g2 = a.rebind(gid, [5, 6])
+    assert (g1, g2) == (1, 2)
+    assert a.resolve("/m") == [5, 6]  # same name, migrated object
+
+
+def test_names_prefix_listing(rt):
+    a = AGAS()
+    a.register(1, name="/app/x")
+    a.register(2, name="/app/y")
+    a.register(3, name="/other/z")
+    assert a.names("/app/") == ["/app/x", "/app/y"]
+
+
+def test_parcel_apply_executes_at_object(rt):
+    gid = agas.default().register_name("/parcel/target", {"count": 10}, replace=True)
+    fut = parcel.apply(lambda obj, d: obj["count"] + d, "/parcel/target", 5)
+    assert fut.get() == 15
+
+
+def test_parcel_action_decorator(rt):
+    @parcel.action
+    def scale(obj, s):
+        return obj * s
+
+    agas.default().register_name("/parcel/num", 6, replace=True)
+    assert parcel.apply(scale, "/parcel/num", 7).get() == 42
+
+
+def test_parcel_counters_increment(rt):
+    from repro.core import counters
+
+    before = counters.get_value("/parcel{port#0}/count/sent")
+    agas.default().register_name("/parcel/c", 0, replace=True)
+    parcel.apply(lambda o: o, "/parcel/c").get()
+    assert counters.get_value("/parcel{port#0}/count/sent") == before + 1

@@ -1,0 +1,77 @@
+"""C++17-style parallel algorithms: par/vec/seq agree (HPX P6)."""
+import operator
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.core.executor import par, seq, vec
+
+floats = st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                  min_size=1, max_size=200)
+ints = st.lists(st.integers(-1000, 1000), min_size=1, max_size=200)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_reduce_par_matches_seq(rt, xs):
+    assert alg.reduce(par, xs) == alg.reduce(seq, xs) == sum(xs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_sort_par_matches_sorted(rt, xs):
+    assert alg.sort(par, xs) == sorted(xs)
+    assert list(np.asarray(alg.sort(vec, xs))) == sorted(xs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_transform_policies_agree(rt, xs):
+    f = lambda x: 3 * x + 1
+    s = alg.transform(seq, xs, f)
+    p = alg.transform(par, xs, f)
+    v = list(np.asarray(alg.transform(vec, jnp.asarray(xs), f)))
+    assert s == p == v
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_scans_match_numpy(rt, xs):
+    inc = alg.inclusive_scan(seq, xs)
+    assert inc == list(np.cumsum(xs))
+    exc = alg.exclusive_scan(seq, xs, init=0)
+    assert exc == [0] + list(np.cumsum(xs))[:-1]
+    vinc = list(np.asarray(alg.inclusive_scan(vec, jnp.asarray(xs))))
+    assert vinc == inc
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_count_if_and_predicates(rt, xs):
+    even = lambda x: x % 2 == 0
+    n = alg.count_if(par, xs, even)
+    assert n == sum(1 for x in xs if even(x))
+    assert alg.any_of(par, xs, even) == (n > 0)
+    assert alg.all_of(par, xs, even) == (n == len(xs))
+
+
+def test_transform_reduce(rt):
+    xs = list(range(100))
+    assert alg.transform_reduce(par, xs, lambda x: x * x) == sum(x * x for x in xs)
+    assert int(alg.transform_reduce(vec, jnp.arange(100), lambda x: x * x)) == sum(
+        x * x for x in xs)
+
+
+def test_for_each_side_effects(rt):
+    out = []
+    lock_free = [0] * 50
+    alg.for_each(seq, range(50), lambda i: lock_free.__setitem__(i, i * 2))
+    assert lock_free == [2 * i for i in range(50)]
+
+
+def test_chunk_size_override(rt):
+    xs = list(range(1000))
+    assert alg.reduce(par.with_chunk_size(10), xs) == sum(xs)

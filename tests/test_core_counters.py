@@ -1,0 +1,61 @@
+"""APEX-style performance counters (HPX P5, paper §2.4)."""
+import time
+
+from repro.core.counters import Counter, CounterRegistry, Gauge, TimerCounter
+
+
+def test_counter_monotonic():
+    c = Counter("/x")
+    c.increment()
+    c.increment(2.5)
+    assert c.get_value() == 3.5
+    c.reset()
+    assert c.get_value() == 0.0
+
+
+def test_gauge_set():
+    g = Gauge("/g")
+    g.set(7.0)
+    assert g.get_value() == 7.0
+
+
+def test_timer_stats():
+    t = TimerCounter("/t")
+    with t.time():
+        time.sleep(0.01)
+    t.add(0.05)
+    s = t.stats()
+    assert s["count"] == 2
+    assert s["max"] >= 0.05
+    assert s["mean"] > 0
+    assert t.ema is not None
+
+
+def test_registry_query_glob():
+    reg = CounterRegistry()
+    reg.counter("/scheduler{p#0}/tasks/executed").increment(3)
+    reg.counter("/scheduler{p#0}/tasks/stolen").increment(1)
+    reg.gauge("/agas{l#0}/objects/count").set(5)
+    got = dict(reg.query("/scheduler*"))
+    assert got == {"/scheduler{p#0}/tasks/executed": 3.0,
+                   "/scheduler{p#0}/tasks/stolen": 1.0}
+    assert reg.get_value("/agas{l#0}/objects/count") == 5.0
+
+
+def test_registry_callable_counter():
+    reg = CounterRegistry()
+    state = {"n": 0}
+    reg.register_callable("/lazy/value", lambda: state["n"])
+    state["n"] = 9
+    assert reg.get_value("/lazy/value") == 9.0
+
+
+def test_counters_visible_through_agas(rt):
+    """Paper: counters are readable via AGAS under their symbolic name."""
+    from repro.core import agas, counters
+
+    c = counters.default().counter("/visible/via/agas")
+    counters.default().register(c)
+    c.increment(4)
+    resolved = agas.default().resolve("/counters/visible/via/agas")
+    assert resolved.get_value() == 4.0

@@ -1,0 +1,83 @@
+"""Futurization / dataflow DAG execution (HPX P1)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core.dataflow import TaskGraph, dataflow, futurize
+from repro.core.future import make_ready_future
+
+
+def test_dataflow_waits_for_args(rt):
+    a = core.spawn(lambda: 2)
+    b = core.spawn(lambda: 3)
+    c = dataflow(lambda x, y: x * y, a, b)
+    assert c.get() == 6
+
+
+def test_dataflow_nested_containers(rt):
+    a = core.spawn(lambda: 1)
+    c = dataflow(lambda d: d["x"] + d["y"][0], {"x": a, "y": [make_ready_future(2)]})
+    assert c.get() == 3
+
+
+def test_futurize_decorator(rt):
+    @futurize
+    def add(a, b):
+        return a + b
+
+    assert add(add(1, 2), add(3, 4)).get() == 10
+
+
+def test_taskgraph_topological(rt):
+    g = TaskGraph()
+    g.add("a", lambda: 1)
+    g.add("b", lambda x: x + 1, deps=["a"])
+    g.add("c", lambda x: x * 10, deps=["a"])
+    g.add("d", lambda x, y: x + y, deps=["b", "c"])
+    assert g.run()["d"].get() == 12
+
+
+def test_taskgraph_rejects_unknown_dep(rt):
+    g = TaskGraph()
+    with pytest.raises(ValueError):
+        g.add("x", lambda y: y, deps=["missing"])
+
+
+def test_taskgraph_rejects_duplicate(rt):
+    g = TaskGraph()
+    g.add("a", lambda: 1)
+    with pytest.raises(ValueError):
+        g.add("a", lambda: 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=40))
+def test_dataflow_tree_reduction_matches_sum(xs):
+    """Property: a random dataflow reduction tree == plain sum."""
+    rt = core.get_runtime()
+    futs = [make_ready_future(x) for x in xs]
+    while len(futs) > 1:
+        nxt = []
+        for i in range(0, len(futs) - 1, 2):
+            nxt.append(dataflow(lambda a, b: a + b, futs[i], futs[i + 1]))
+        if len(futs) % 2:
+            nxt.append(futs[-1])
+        futs = nxt
+    assert futs[0].get() == sum(xs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 30), st.data())
+def test_random_dag_executes_in_dependency_order(n, data):
+    """Property: every node observes its dependencies' results (values
+    propagate along a random DAG without races)."""
+    g = TaskGraph()
+    g.add("n0", lambda: 1)
+    for i in range(1, n):
+        deps = data.draw(st.lists(
+            st.sampled_from([f"n{j}" for j in range(i)]),
+            min_size=1, max_size=min(i, 4), unique=True))
+        g.add(f"n{i}", lambda *vals: sum(vals) + 1, deps=deps)
+    results = {k: f.get() for k, f in g.run().items()}
+    assert all(v >= 1 for v in results.values())
+    assert results["n0"] == 1

@@ -1,0 +1,83 @@
+"""Futures/promises semantics (HPX P1)."""
+import threading
+import time
+
+import pytest
+
+import repro.core as core
+from repro.core.future import (Future, FutureError, Promise,
+                               make_exceptional_future, make_ready_future,
+                               unwrap, when_all, when_any)
+
+
+def test_promise_future_basic(rt):
+    p = Promise()
+    f = p.future()
+    assert not f.is_ready()
+    p.set_value(42)
+    assert f.is_ready() and f.has_value()
+    assert f.get() == 42
+
+
+def test_promise_single_shot(rt):
+    p = Promise()
+    p.set_value(1)
+    with pytest.raises(FutureError):
+        p.set_value(2)
+
+
+def test_exception_propagates(rt):
+    f = core.spawn(lambda: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        f.get()
+    assert f.has_exception()
+
+
+def test_then_chain(rt):
+    f = core.spawn(lambda: 3)
+    g = f.then_value(lambda x: x * 2).then_value(lambda x: x + 1)
+    assert g.get() == 7
+
+
+def test_then_sees_exception(rt):
+    f = make_exceptional_future(ValueError("boom"))
+    g = f.then(lambda fut: "caught" if fut.has_exception() else "missed")
+    assert g.get() == "caught"
+
+
+def test_when_all_and_any(rt):
+    fs = [core.spawn(lambda i=i: i) for i in range(20)]
+    ready = when_all(fs).get()
+    assert sorted(f.get() for f in ready) == list(range(20))
+    slow = core.spawn(lambda: (time.sleep(0.5), "slow")[1])
+    fast = make_ready_future("fast")
+    assert when_any([slow, fast]).get() == 1
+
+
+def test_when_all_empty(rt):
+    assert when_all([]).get() == []
+
+
+def test_unwrap_nested(rt):
+    v = unwrap({"a": make_ready_future(1),
+                "b": [make_ready_future(2), 3],
+                "c": make_ready_future(make_ready_future(4))})
+    assert v == {"a": 1, "b": [2, 3], "c": 4}
+
+
+def test_get_timeout(rt):
+    p = Promise()
+    with pytest.raises(TimeoutError):
+        p.future().get(timeout=0.05)
+
+
+def test_nested_blocking_does_not_deadlock(rt):
+    """Blocked tasks help along (HPX thread suspension analogue)."""
+
+    def fib(n):
+        if n < 2:
+            return n
+        a = core.spawn(fib, n - 1)
+        return a.get() + fib(n - 2)
+
+    assert core.spawn(fib, 13).get(timeout=60) == 233

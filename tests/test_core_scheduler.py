@@ -1,0 +1,62 @@
+"""Work-stealing scheduler & policies (HPX P2, paper §2.1)."""
+import threading
+import time
+
+import pytest
+
+import repro.core as core
+from repro.core.scheduler import PRIORITY_HIGH, Runtime
+
+
+@pytest.mark.parametrize("policy", ["static", "local", "hierarchical"])
+def test_policies_run_all_tasks(policy):
+    with Runtime(num_workers=3, policy=policy) as rt:
+        futs = [rt.spawn(lambda i=i: i * i) for i in range(50)]
+        assert sorted(f.get() for f in futs) == [i * i for i in range(50)]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        Runtime(num_workers=1, policy="mystery")
+
+
+def test_stealing_happens_under_local_policy():
+    with Runtime(num_workers=4, policy="local", pool_name="steal-test") as rt:
+        # one worker gets all tasks via hint; others must steal
+        futs = [rt.spawn(lambda: time.sleep(0.002), worker_hint=0)
+                for _ in range(64)]
+        for f in futs:
+            f.get()
+        from repro.core import counters
+
+        assert counters.get_value("/scheduler{steal-test}/tasks/stolen") > 0
+
+
+def test_static_policy_never_steals():
+    with Runtime(num_workers=4, policy="static", pool_name="static-test") as rt:
+        futs = [rt.spawn(lambda i=i: i, worker_hint=i % 4) for i in range(40)]
+        for f in futs:
+            f.get()
+        from repro.core import counters
+
+        assert counters.get_value("/scheduler{static-test}/tasks/stolen") == 0
+
+
+def test_high_priority_runs(rt):
+    f = rt.spawn(lambda: "hi", priority=PRIORITY_HIGH)
+    assert f.get() == "hi"
+
+
+def test_counters_track_execution():
+    with Runtime(num_workers=2, pool_name="count-test") as rt:
+        for f in [rt.spawn(lambda: None) for _ in range(10)]:
+            f.get()
+        from repro.core import counters
+
+        assert counters.get_value("/scheduler{count-test}/tasks/executed") >= 10
+        assert counters.get_value("/scheduler{count-test}/tasks/spawned") >= 10
+
+
+def test_oversubscription_many_tasks(rt):
+    futs = [core.spawn(lambda i=i: i) for i in range(2000)]
+    assert sum(f.get() for f in futs) == sum(range(2000))

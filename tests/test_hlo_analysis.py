@@ -1,0 +1,91 @@
+"""Static HLO profiler: collectives, trip counts, dot flops (on synthetic
+HLO text — the dry-run exercises the real thing)."""
+import textwrap
+
+from repro.dist.hlo_analysis import HloModule, parse_collectives
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %cond (arg: (s32[], f32[8,8])) -> pred[] {
+      %arg = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %arg = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %x = f32[8,8] get-tuple-element(%arg), index=1
+      %ar = f32[8,8] all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), use_global_device_ids=true, to_apply=%sum
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+    }
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (p0: f32[8,8], p1: f32[8,16]) -> f32[8,8] {
+      %p0 = f32[8,8] parameter(0)
+      %p1 = f32[8,16] parameter(1)
+      %ag = f32[8,128] all-gather(%p1), channel_id=2, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}, use_global_device_ids=true
+      %d = f32[8,8] dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %init = s32[] constant(0)
+      %tup = (s32[], f32[8,8]) tuple(%init, %d)
+      %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body
+      ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_trip_count_multiplies_loop_collectives():
+    mod = HloModule(HLO, 256)
+    coll = mod.collectives()
+    kinds = {o.kind: o for o in coll.ops}
+    ar = kinds["all-reduce"]
+    assert ar.trip_count == 12
+    ag = kinds["all-gather"]
+    assert ag.trip_count == 1
+    assert ag.group_size == 8
+
+
+def test_all_gather_operand_inferred_from_result():
+    mod = HloModule(HLO, 256)
+    ag = [o for o in mod.collectives().ops if o.kind == "all-gather"][0]
+    # result 8x128 f32 = 4096B over gs=8 → operand 512B
+    assert ag.operand_bytes == 8 * 128 * 4 // 8
+
+
+def test_dot_flops_counts_entry_once():
+    mod = HloModule(HLO, 256)
+    # dot 8x8x8: 2*8*8*8 = 1024 flops, entry multiplier 1
+    assert mod.dot_flops() == 2 * 8 * 8 * 8
+
+
+def test_wire_byte_model():
+    mod = HloModule(HLO, 256)
+    ar = [o for o in mod.collectives().ops if o.kind == "all-reduce"][0]
+    operand = 8 * 8 * 4
+    assert ar.wire_bytes_per_device == 2 * operand * 15 // 16
+
+
+def test_cross_pod_classification():
+    hlo = HLO.replace("replica_groups=[16,16]<=[16,16]T(1,0)",
+                      "replica_groups=[256,2]<=[2,256]T(1,0)")
+    mod = HloModule(hlo, 512)
+    ar = [o for o in mod.collectives().ops if o.kind == "all-reduce"][0]
+    assert ar.crosses_pod
+    assert ar.group_size == 2
+    # and the original data-axis groups on 512 devices stay within a pod:
+    mod2 = HloModule(HLO.replace("<=[16,16]", "<=[32,16]").replace("[16,16]<=", "[32,16]<="), 512)
+    ar2 = [o for o in mod2.collectives().ops if o.kind == "all-reduce"][0]
+    assert not ar2.crosses_pod
+
+
+def test_memory_traffic_positive():
+    assert HloModule(HLO, 256).memory_traffic() > 0

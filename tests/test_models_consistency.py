@@ -1,0 +1,88 @@
+"""Serving-path correctness: prefill + decode must reproduce the full
+forward pass next-token logits (per arch).  MoE archs run with a large
+capacity factor — capacity drops are the one legitimate divergence
+(asserted separately in test_moe.py)."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.plan import get_plan
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.model import build_model
+
+PLAN = get_plan("futurized")
+
+
+def _forward(cfg, params, tokens, pin):
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, PLAN, params, pin["enc"], tokens)[0]
+    if cfg.family == "ssm":
+        return ssm_lm.forward(cfg, PLAN, params, tokens)[0]
+    if cfg.family == "hybrid":
+        return hybrid.forward(cfg, PLAN, params, tokens)[0]
+    return transformer.forward(cfg, PLAN, params, tokens,
+                               patches=pin.get("patches"))[0]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    if cfg.is_moe:
+        cfg = replace(cfg, capacity_factor=64.0)  # no drops → exact
+    model = build_model(cfg, PLAN)
+    params = model.init(rng)
+    B, S = 2, 32
+    tokens = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    pin = {"tokens": tokens[:, :S]}
+    if cfg.family == "vlm":
+        pin["patches"] = jax.random.normal(rng, (B, cfg.n_patches, cfg.d_model),
+                                           jnp.bfloat16)
+    if cfg.family == "encdec":
+        pin["enc"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16)
+
+    logits_p, cache = jax.jit(model.prefill, static_argnames=("cache_len",))(
+        params, pin, cache_len=S + 8)
+    err_p = float(jnp.max(jnp.abs(logits_p - _forward(cfg, params, tokens[:, :S], pin)[:, -1])))
+    assert err_p < 0.05, f"{arch} prefill mismatch {err_p}"
+
+    logits_d, _ = jax.jit(model.decode)(params, cache, tokens[:, S:S + 1])
+    err_d = float(jnp.max(jnp.abs(logits_d - _forward(cfg, params, tokens, pin)[:, -1])))
+    assert err_d < 0.05, f"{arch} decode mismatch {err_d}"
+
+
+def test_multi_step_decode_matches_forward(rng):
+    """Decode 4 tokens autoregressively == forward over the grown sequence."""
+    cfg = get_config("qwen25_3b", smoke=True)
+    model = build_model(cfg, PLAN)
+    params = model.init(rng)
+    B, S, N = 2, 16, 4
+    tokens = jax.random.randint(rng, (B, S + N), 0, cfg.vocab_size)
+    pin = {"tokens": tokens[:, :S]}
+    _, cache = jax.jit(model.prefill, static_argnames=("cache_len",))(
+        params, pin, cache_len=S + N + 2)
+    dec = jax.jit(model.decode)
+    for t in range(N):
+        logits, cache = dec(params, cache, tokens[:, S + t:S + t + 1])
+        full = _forward(cfg, params, tokens[:, :S + t + 1], pin)[:, -1]
+        err = float(jnp.max(jnp.abs(logits - full)))
+        assert err < 0.05, f"step {t}: {err}"
+
+
+def test_windowed_decode_ring_buffer(rng):
+    """Hybrid arch: decoding past the window wraps the ring buffer and still
+    matches the full forward (which sees the same effective window)."""
+    cfg = get_config("recurrentgemma_2b", smoke=True)  # window = 32
+    model = build_model(cfg, PLAN)
+    params = model.init(rng)
+    B, S, N = 1, 32, 6  # prefill exactly one window, then wrap
+    tokens = jax.random.randint(rng, (B, S + N), 0, cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": tokens[:, :S]})
+    dec = jax.jit(model.decode)
+    for t in range(N):
+        logits, cache = dec(params, cache, tokens[:, S + t:S + t + 1])
+        full = _forward(cfg, params, tokens[:, :S + t + 1], {})[:, -1]
+        err = float(jnp.max(jnp.abs(logits - full)))
+        assert err < 0.05, f"wrap step {t}: {err}"

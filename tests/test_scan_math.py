@@ -1,0 +1,74 @@
+"""Property tests: chunked/associative scan formulations == sequential
+oracles (the system's core numerical invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 2),
+       st.integers(0, 2**31 - 1))
+def test_ssd_chunked_matches_sequential(B, nq, G, seed):
+    S = nq * 16
+    H, P, N = 2 * G, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y_ref, h_ref = ref.ssd(x, dt, A, Bm, Cm)
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ssd_decode_continues_prefill_state(seed):
+    """prefill state + one recurrent step == sequential over S+1."""
+    B, S, H, P, G, N = 1, 32, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S + 1, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S + 1, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S + 1, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S + 1, G, N)) * 0.3
+    _, h_prefill = ssd_chunked(x[:, :S], dt[:, :S], A, Bm[:, :S], Cm[:, :S], chunk=16)
+    y1, h1 = ssd_decode_step(h_prefill, x[:, S], dt[:, S], A, Bm[:, S], Cm[:, S])
+    y_ref, h_ref = ref.ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_ref[:, S]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h_ref), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(3, 65), st.integers(0, 2**31 - 1))
+def test_rglru_assoc_scan_matches_sequential(B, S, seed):
+    W = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.2
+    h = rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32))
+    e = ref.rglru(a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(e), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rglru_h0_fold(seed):
+    """Scan with initial state == sequential continuation."""
+    B, S, W = 1, 20, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, 2 * S, W)))
+    b = jax.random.normal(ks[1], (B, 2 * S, W)) * 0.2
+    full = ref.rglru(a, b)
+    h_mid = full[:, S - 1].astype(jnp.float32)
+    second = rglru_scan(a[:, S:].astype(jnp.float32),
+                        b[:, S:].astype(jnp.float32), h0=h_mid)
+    np.testing.assert_allclose(np.asarray(second), np.asarray(full[:, S:]),
+                               atol=1e-5)

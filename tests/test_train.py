@@ -1,0 +1,131 @@
+"""Training semantics: BSP ≡ futurized math, microbatching ≡ full batch,
+loss decreases end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.dist.plan import bsp_plan, futurized_plan, get_plan
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.train import step as step_mod
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def _setup(plan, arch="qwen25_3b"):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = synth_batch(cfg, DataConfig(batch_size=4, seq_len=32), step=0)
+    return model, params, batch
+
+
+def test_bsp_and_futurized_steps_agree():
+    """Same math, different collective schedule ⇒ same numbers on 1 device."""
+    out = {}
+    for plan in (bsp_plan(), futurized_plan()):
+        model, params, batch = _setup(plan)
+        step = jax.jit(step_mod.make_train_step(model, adamw.AdamWConfig(lr=1e-3)))
+        p2, _, m = step(params, adamw.init(params), batch)
+        out[plan.name] = (float(m["loss"]), p2)
+    assert abs(out["bsp"][0] - out["futurized"][0]) < 1e-5
+    for k in out["bsp"][1]:
+        np.testing.assert_allclose(np.asarray(out["bsp"][1][k], np.float32),
+                                   np.asarray(out["futurized"][1][k], np.float32),
+                                   atol=1e-5)
+
+
+def test_microbatched_grads_match_full_batch():
+    model, params, batch = _setup(futurized_plan())
+    loss_fn = step_mod.make_loss_fn(model)
+    l1, g1 = jax.value_and_grad(loss_fn)(params, batch)
+    l2, g2 = step_mod._microbatch_grads(loss_fn, params, batch, 4)
+    assert abs(float(l1) - float(l2)) < 1e-3
+    # bf16 forward => per-microbatch reduction order differs; grads agree to
+    # bf16 accuracy (the fp32 accumulator preserves the sum itself)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k], np.float32),
+                                   np.asarray(g2[k], np.float32),
+                                   atol=2e-2, rtol=5e-2)
+
+
+def test_loss_decreases_over_training(rt):
+    cfg = get_config("starcoder2_3b", smoke=True)
+    model = build_model(cfg, get_plan("futurized"))
+    tr = Trainer(model, adamw.AdamWConfig(lr=1e-2, warmup_steps=5,
+                                          total_steps=40, weight_decay=0.0),
+                 DataConfig(batch_size=4, seq_len=48),
+                 TrainConfig(steps=40, log_every=10))
+    hist = tr.fit()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_grad_clip_bounds_update():
+    model, params, batch = _setup(futurized_plan())
+    cfg_small = adamw.AdamWConfig(lr=1e-3, grad_clip=1e-9)
+    step = jax.jit(step_mod.make_train_step(model, cfg_small))
+    p2, _, m = step(params, adamw.init(params), batch)
+    # with a tiny clip the parameter change is bounded by ~lr·(1+wd·p)
+    delta = max(float(jnp.max(jnp.abs(p2[k] - params[k]))) for k in params)
+    assert delta < 1e-2
+
+
+def test_schedule_warmup_and_decay():
+    c = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(adamw.schedule(c, jnp.asarray(0))) == 0.0
+    assert abs(float(adamw.schedule(c, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(adamw.schedule(c, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+    assert float(adamw.schedule(c, jnp.asarray(55))) < 1.0
+
+
+def test_pod_manual_compressed_grads_small_mesh():
+    """bf16 pod-axis gradient reduction (partial-manual shard_map) compiles
+    and matches the plain path on a tiny host mesh.  (XLA CPU crashes on the
+    512-device version — tracked in EXPERIMENTS §Perf; TPU is the target.)"""
+    import jax
+    import numpy as np
+    from repro.dist.collectives import pod_manual_value_and_grad
+
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1, 1), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"]) ** 2)
+
+    params = {"w": jnp.ones((4, 4))}
+    batch = {"x": jnp.arange(8.0).reshape(2, 4)}
+    with jax.set_mesh(mesh):
+        f = pod_manual_value_and_grad(loss_fn, mesh, compress=True)
+        l1, g1 = jax.jit(f)(params, batch)
+    l2, g2 = jax.value_and_grad(loss_fn)(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               atol=1e-2)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Compressed-sum with error feedback converges to the true sum:
+    Σ dequant(q_t) + final residual == Σ g_t exactly."""
+    import jax
+    from repro.dist.collectives import make_error_feedback
+
+    init, compress = make_error_feedback()
+    key = jax.random.PRNGKey(0)
+    gs = [jax.random.normal(jax.random.fold_in(key, i), (64,)) * 1e-3
+          for i in range(50)]
+    res = init({"g": gs[0]})
+    acc = jnp.zeros((64,), jnp.float32)
+    for g in gs:
+        q, res = compress({"g": g}, res)
+        acc = acc + q["g"].astype(jnp.float32)
+    true = sum(g.astype(jnp.float32) for g in gs)
+    # with residual folded back in, the compressed stream is exact
+    np.testing.assert_allclose(np.asarray(acc + res["g"]), np.asarray(true),
+                               atol=1e-6)
+    # and without it, the drift stays at bf16 scale (bounded, not growing)
+    assert float(jnp.max(jnp.abs(acc - true))) < 1e-4
