@@ -1,0 +1,59 @@
+"""Paper claim: futurization beats BSP by overlapping communication with
+compute.  On a 1×1 host mesh there are no collectives to overlap, so this
+measures the *step structure itself* — the BSP plan's bulk gather + full
+remat vs the futurized per-layer schedule — and records the ratio to
+``results/BENCH_dist.json`` so the perf trajectory is tracked per PR
+(DESIGN.md §7)."""
+import json
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_dist.json"
+
+ARCH = "qwen25_3b"
+STEPS = 8  # timed steps after one compile/warmup step
+
+
+def _step_time_us(plan_name: str) -> float:
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, synth_batch
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+    from repro.optim import adamw
+    from repro.train import step as step_mod
+
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg, get_plan(plan_name))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = adamw.init(params)
+    batch = synth_batch(cfg, DataConfig(batch_size=4, seq_len=64), step=0)
+    step = jax.jit(step_mod.make_train_step(model, adamw.AdamWConfig(lr=1e-3)),
+                   donate_argnums=(0, 1))
+    params, opt_state, m = step(params, opt_state, batch)  # compile + warmup
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        params, opt_state, m = step(params, opt_state, batch)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / STEPS * 1e6
+
+
+def run():
+    rows = []
+    us = {plan: _step_time_us(plan) for plan in ("bsp", "futurized")}
+    ratio = us["bsp"] / us["futurized"] if us["futurized"] else 0.0
+    for plan, t in us.items():
+        rows.append((f"dist/{plan}_step", t, f"{ARCH} smoke 1x1 mesh"))
+    rows.append(("dist/bsp_over_futurized", 0.0, f"{ratio:.2f}x"))
+
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps({
+        "arch": ARCH, "mesh": "1x1", "steps": STEPS,
+        "bsp_us_per_step": round(us["bsp"], 1),
+        "futurized_us_per_step": round(us["futurized"], 1),
+        "bsp_over_futurized": round(ratio, 3),
+    }, indent=1))
+    return rows

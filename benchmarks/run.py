@@ -8,8 +8,9 @@ def main() -> None:
     import repro.core as core
 
     core.init(num_workers=4)
-    from benchmarks import (bench_algorithms, bench_cholesky, bench_efficiency,
-                            bench_overlap, bench_stream, bench_tasks)
+    from benchmarks import (bench_algorithms, bench_cholesky, bench_dist,
+                            bench_efficiency, bench_overlap, bench_stream,
+                            bench_tasks)
 
     suites = [
         ("tasks", bench_tasks),
@@ -18,6 +19,7 @@ def main() -> None:
         ("algorithms", bench_algorithms),
         ("overlap", bench_overlap),
         ("efficiency", bench_efficiency),
+        ("dist", bench_dist),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,127 @@
+"""Version compatibility backfills for older JAX installs.
+
+The codebase is written against the modern JAX sharding surface
+(``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.set_mesh``).  The pinned container ships jax 0.4.37, which predates
+all three, so this module backfills them *once*, at ``import repro`` time.
+Every patch is gated on a ``hasattr`` check: on a current JAX none of this
+runs and the native implementations are used untouched.
+
+What is provided on old JAX:
+
+- ``jax.sharding.AxisType`` — the Auto/Explicit/Manual enum (metadata only
+  here; 0.4.37 meshes are always fully automatic, which is what every
+  caller in this repo asks for).
+- ``jax.make_mesh(..., axis_types=...)`` — wrapper that accepts and drops
+  the keyword.
+- ``jax.set_mesh(mesh)`` — context manager that (a) pushes ``mesh`` onto
+  the active-mesh stack consumed by :func:`repro.dist.plan._active_mesh`
+  and (b) enters the legacy ``with mesh:`` resource environment so that
+  pjit-era machinery sees the same ambient mesh.
+- ``jax.experimental.pallas.tpu.CompilerParams`` — alias of the pre-rename
+  ``TPUCompilerParams`` (kernels are written against the new name).
+
+The active-mesh stack lives here (not in ``repro.dist.plan``) because it
+must exist even when ``jax.set_mesh`` is native; on modern JAX
+:func:`active_mesh` reads the native ``get_abstract_mesh`` state instead
+of the shim stack.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+from typing import Any, List, Optional
+
+import jax
+
+_local = threading.local()
+
+
+def _mesh_stack() -> List[Any]:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+def active_mesh() -> Optional[Any]:
+    """The innermost mesh set via ``jax.set_mesh`` (shimmed or recorded),
+    falling back to the legacy ``with mesh:`` resource env; None if no
+    mesh is active."""
+    stack = _mesh_stack()
+    if stack:
+        return stack[-1]
+    try:  # modern JAX: native jax.set_mesh records the abstract mesh
+        import jax.sharding as jshard
+
+        get_am = getattr(jshard, "get_abstract_mesh", None)
+        if get_am is not None:
+            m = get_am()
+            if m is not None and not getattr(m, "empty", True):
+                return m
+    except Exception:  # noqa: BLE001
+        pass
+    try:  # legacy ambient mesh (``with mesh:``)
+        from jax.interpreters import pxla
+
+        phys = pxla.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return phys
+    except Exception:  # noqa: BLE001 — resource env gone in future JAX
+        pass
+    return None
+
+
+def _install() -> None:
+    import jax.sharding as jshard
+
+    if not hasattr(jshard, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jshard.AxisType = AxisType
+
+    # make_mesh(..., axis_types=...) — 0.4.37 lacks the kwarg
+    try:
+        import inspect
+
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            _native_make_mesh = jax.make_mesh
+
+            def make_mesh(axis_shapes, axis_names, *, devices=None,
+                          axis_types=None):
+                del axis_types  # metadata only on this JAX
+                return _native_make_mesh(axis_shapes, axis_names,
+                                         devices=devices)
+
+            jax.make_mesh = make_mesh
+    except Exception:  # noqa: BLE001
+        pass
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            _mesh_stack().append(mesh)
+            try:
+                with mesh:  # legacy resource env (Mesh is a context manager)
+                    yield mesh
+            finally:
+                _mesh_stack().pop()
+
+        jax.set_mesh = set_mesh
+
+    try:  # pallas: CompilerParams was named TPUCompilerParams pre-0.5
+        import jax.experimental.pallas.tpu as pltpu
+
+        if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+        if not hasattr(pltpu, "MemorySpace") and hasattr(pltpu, "TPUMemorySpace"):
+            pltpu.MemorySpace = pltpu.TPUMemorySpace
+    except Exception:  # noqa: BLE001 — pallas optional on some backends
+        pass
+
+
+_install()

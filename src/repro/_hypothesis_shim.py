@@ -1,0 +1,337 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` library.
+
+The test suite uses a small slice of hypothesis (``given`` / ``settings`` /
+a handful of strategies) for property tests.  The pinned container does not
+ship hypothesis and installing packages is off-limits, so ``tests/conftest.py``
+installs this module under ``sys.modules["hypothesis"]`` **only when the real
+library is absent** — with hypothesis installed, the genuine article wins and
+this file is inert.
+
+Scope (deliberately tiny):
+
+- deterministic example generation (seeded per test name) — no shrinking,
+  no database, no health checks;
+- strategies: ``integers``, ``floats``, ``booleans``, ``just``,
+  ``sampled_from``, ``lists``, ``tuples``, ``one_of``, ``data``;
+- ``@given`` supports positional and keyword strategies and cooperates with
+  pytest fixtures (fixture params keep their place in the exposed
+  signature, strategy params are filled per example);
+- ``@settings(max_examples=..., deadline=...)`` honours ``max_examples``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+__all__ = ["given", "settings", "strategies", "assume", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is silently discarded."""
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:  # accepted, ignored
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+# --------------------------------------------------------------- strategies
+class SearchStrategy:
+    def example_from(self, rnd: random.Random) -> Any:
+        raise NotImplementedError
+
+    # combinators mirroring hypothesis' API
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example_from(self, rnd):
+        return self.fn(self.base.example_from(rnd))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example_from(self, rnd):
+        for _ in range(100):
+            v = self.base.example_from(rnd)
+            if self.pred(v):
+                return v
+        raise _Unsatisfied()
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        self.lo, self.hi = min_value, max_value
+
+    def example_from(self, rnd):
+        # bias toward boundaries now and then, like hypothesis does
+        r = rnd.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rnd.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=False,
+                 allow_infinity=False, width=64):
+        self.lo = -1e6 if min_value is None else min_value
+        self.hi = 1e6 if max_value is None else max_value
+        self.width = width
+
+    def example_from(self, rnd):
+        r = rnd.random()
+        if r < 0.05:
+            v = self.lo
+        elif r < 0.10:
+            v = self.hi
+        elif r < 0.15 and self.lo <= 0.0 <= self.hi:
+            v = 0.0
+        else:
+            v = rnd.uniform(self.lo, self.hi)
+        if self.width == 32:
+            import struct
+
+            v = struct.unpack("f", struct.pack("f", v))[0]
+            v = min(max(v, self.lo), self.hi)
+        return v
+
+
+class _Booleans(SearchStrategy):
+    def example_from(self, rnd):
+        return rnd.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example_from(self, rnd):
+        return self.value
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example_from(self, rnd):
+        return rnd.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size=0, max_size=None,
+                 unique=False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        self.unique = unique
+
+    def example_from(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        out: List[Any] = []
+        seen = set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            v = self.elements.example_from(rnd)
+            attempts += 1
+            if self.unique:
+                key = v if isinstance(v, (int, float, str, bool, tuple, type(None))) else repr(v)
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(v)
+        if len(out) < self.min_size:
+            raise _Unsatisfied()
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *parts: SearchStrategy):
+        self.parts = parts
+
+    def example_from(self, rnd):
+        return tuple(p.example_from(rnd) for p in self.parts)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *options: SearchStrategy):
+        self.options = options
+
+    def example_from(self, rnd):
+        return rnd.choice(self.options).example_from(rnd)
+
+
+class DataObject:
+    """Interactive draws (``st.data()``)."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label: Optional[str] = None):
+        return strategy.example_from(self._rnd)
+
+
+class _Data(SearchStrategy):
+    def example_from(self, rnd):
+        return DataObject(rnd)
+
+
+class _StrategiesModule:
+    """Exposed as both ``hypothesis.strategies`` and ``st`` import alias."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, *, allow_nan=False,
+               allow_infinity=False, width=64, **_ignored):
+        return _Floats(min_value, max_value, allow_nan, allow_infinity, width)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, *, min_size=0, max_size=None, unique=False,
+              **_ignored):
+        return _Lists(elements, min_size, max_size, unique)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Tuples(*parts)
+
+    @staticmethod
+    def one_of(*options):
+        return _OneOf(*options)
+
+    @staticmethod
+    def data():
+        return _Data()
+
+
+strategies = _StrategiesModule()
+
+
+# ------------------------------------------------------------------ runner
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_settings = self  # read by @given (inner or outer position)
+        return fn
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(fn):
+        inner_settings = getattr(fn, "_shim_settings", None)
+        params = list(inspect.signature(fn).parameters)
+        if arg_strategies:
+            # strategies fill the RIGHTMOST positional params (hypothesis rule)
+            n_fix = len(params) - len(arg_strategies)
+            fixture_names = params[:n_fix]
+            strat_names = params[n_fix:]
+        else:
+            fixture_names = [p for p in params if p not in kw_strategies]
+            strat_names = [p for p in params if p in kw_strategies]
+        strat_map = dict(zip(strat_names, arg_strategies)) if arg_strategies \
+            else dict(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) or inner_settings
+            max_examples = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            base = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            for i in itertools.count():
+                if ran >= max_examples or i >= 10 * max_examples:
+                    break
+                rnd = random.Random(base + 0x9E3779B1 * i)
+                drawn = {}
+                try:
+                    for name in strat_names:
+                        drawn[name] = strat_map[name].example_from(rnd)
+                except _Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                except Exception:
+                    print(f"Falsifying example ({fn.__qualname__}): {drawn!r}",
+                          file=sys.stderr)
+                    raise
+                ran += 1
+            if ran == 0 and strat_names:
+                # mirror hypothesis' Unsatisfiable: never silently pass a
+                # property whose body was never executed
+                raise AssertionError(
+                    f"Unable to satisfy assumptions of {fn.__qualname__}: "
+                    f"0 of {max_examples} examples ran")
+            return None
+
+        # pytest must only see the fixture params, not the strategy params
+        wrapper.__signature__ = inspect.Signature([
+            inspect.Parameter(n, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+            for n in fixture_names
+        ])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__  # keep introspection on our signature
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return decorate
+
+
+def install_if_missing() -> bool:
+    """Register this module as ``hypothesis`` unless the real one exists.
+
+    Returns True when the shim was installed."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ImportError:
+        mod = sys.modules[__name__]
+        sys.modules["hypothesis"] = mod
+        sys.modules["hypothesis.strategies"] = strategies  # type: ignore[assignment]
+        return True

@@ -54,7 +54,9 @@ def migrate_to_mesh(gid_or_name, new_mesh, spec_fn, resolver: Optional[_agas.AGA
     """Migrate onto a *different mesh* (elastic scaling).
 
     ``spec_fn(path_free_leaf) -> PartitionSpec`` is usually
-    ``plan.sharding_for`` from :mod:`repro.dist.plan`; we rebuild
+    ``lambda leaf: plan.sharding_for(leaf, new_mesh)`` from
+    :mod:`repro.dist.plan` (bind the TARGET mesh — the divisibility guard
+    must see the destination axis sizes); we rebuild
     NamedShardings against ``new_mesh`` and reshard.
     """
     resolver = resolver or _agas.default()

@@ -1,0 +1,29 @@
+"""repro.dist — distributed execution: sharding plans, pod collectives,
+and static HLO collective analysis.
+
+Three cooperating modules (DESIGN.md §2/§5/§7):
+
+    plan           ShardingPlan + registry (bsp / futurized / optimized /
+                   serve) — logical-axis → mesh-axis resolution
+    collectives    pod-axis manual collectives (shard_map) + error-feedback
+                   gradient compression
+    hlo_analysis   static profiler over post-SPMD HLO text: per-collective
+                   wire bytes (while-loop trip counts applied), dot FLOPs,
+                   HBM traffic — feeds analysis/roofline.py
+"""
+
+from repro.dist import collectives, hlo_analysis, plan
+from repro.dist.plan import (
+    ShardingPlan,
+    bsp_plan,
+    futurized_plan,
+    get_plan,
+    optimized_plan,
+    serve_plan,
+)
+
+__all__ = [
+    "collectives", "hlo_analysis", "plan",
+    "ShardingPlan", "bsp_plan", "futurized_plan", "get_plan",
+    "optimized_plan", "serve_plan",
+]

@@ -1,0 +1,480 @@
+"""Static profiler over post-SPMD HLO text (DESIGN.md §7).
+
+``compiled.cost_analysis()`` counts while-loop bodies **once** and does not
+report collective bytes at all, so the dry-run (``launch/dryrun.py``) and
+the roofline (``analysis/roofline.py``) use this parser instead.  It walks
+the HLO module text of a jitted function and produces:
+
+- a per-collective inventory (:meth:`HloModule.collectives`): operand
+  bytes, ring-model wire bytes per device, group size, loop **trip counts
+  applied**, and an intra-pod (ICI) vs cross-pod (DCI) classification;
+- exact matmul FLOPs (:meth:`HloModule.dot_flops`), trip counts applied;
+- an HBM traffic proxy (:meth:`HloModule.memory_traffic`).
+
+The communication-needs methodology mirrors *HPX+LCI* (Yan et al., 2025):
+classify every transfer the program will issue, then model which ones the
+runtime can overlap.  Shapes in post-SPMD HLO are already per-device, so
+every figure here is per-device too.
+
+Wire-byte model (bidirectional ring, the TPU ICI topology):
+
+    all-reduce          2 · B · (g−1)/g      (reduce-scatter + all-gather)
+    all-gather          B_operand · (g−1)
+    reduce-scatter      B_result  · (g−1)
+    all-to-all          B · (g−1)/g
+    collective-permute  B
+
+with ``B`` the per-device operand bytes and ``g`` the replica-group size.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Devices per pod; groups spanning pods cross the DCI.  Single source of
+# truth is launch/mesh.py (16×16 production pods); fall back if unimportable
+# so this module stays usable on archived HLO without the launch stack.
+try:
+    from repro.launch.mesh import POD_SIZE
+except Exception:  # noqa: BLE001
+    POD_SIZE = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# f32[8,128]{1,0} — dtype, dims, optional layout (ignored)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+# %name = <type> opcode(operands), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+
+_COMP_RE = re.compile(  # params may hold /*index=N*/ comments — match greedily
+    r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _result_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    is_root: bool
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclass
+class CollectiveOp:
+    """One collective instruction, loop trip count attached."""
+
+    kind: str
+    name: str
+    operand_bytes: int
+    result_bytes: int
+    group_size: int
+    trip_count: int
+    crosses_pod: bool
+
+    @property
+    def wire_bytes_per_device(self) -> int:
+        """Ring-model wire bytes for ONE invocation (multiply by
+        ``trip_count`` for the per-step total)."""
+        g = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            return 2 * self.operand_bytes * (g - 1) // g
+        if self.kind == "all-gather":
+            return self.operand_bytes * (g - 1)
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * (g - 1)
+        if self.kind == "all-to-all":
+            return self.operand_bytes * (g - 1) // g
+        return self.operand_bytes  # collective-permute
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return self.wire_bytes_per_device * self.trip_count
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    def count(self) -> int:
+        """Collective launches per step (trip counts applied)."""
+        return sum(o.trip_count for o in self.ops)
+
+    def total_wire(self, crosses_pod: Optional[bool] = None) -> int:
+        return sum(o.total_wire_bytes for o in self.ops
+                   if crosses_pod is None or o.crosses_pod == crosses_pod)
+
+    def total_operand(self) -> int:
+        return sum(o.operand_bytes * o.trip_count for o in self.ops)
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + o.total_wire_bytes
+        return out
+
+
+# ----------------------------------------------------------------- parsing
+def _parse_computations(text: str) -> Tuple[Dict[str, List[Instruction]], str]:
+    """{computation name: instructions}, plus the entry computation name."""
+    comps: Dict[str, List[Instruction]] = {}
+    entry = ""
+    current: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m and stripped.endswith("{"):
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root, name, type_str, opcode, rest = m.groups()
+        # split "operands), attrs" at the matching close paren
+        depth, split = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    split = i
+                    break
+        operand_str, attrs = rest[:split], rest[split + 1:]
+        operands = []
+        for tok in _split_top_level(operand_str):
+            tok = tok.strip()
+            if not tok:
+                continue
+            # operands may be "%name" or "f32[8,8] %name"
+            name_m = re.search(r"%([\w.\-]+)\s*$", tok)
+            operands.append(name_m.group(1) if name_m else tok)
+        comps[current].append(Instruction(
+            name=name, opcode=opcode, type_str=type_str,
+            operands=operands, attrs=attrs, is_root=bool(is_root)))
+    if not entry and comps:
+        entry = next(reversed(comps))
+    return comps, entry
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas not nested in (), {}, or []."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    out.append(s[start:])
+    return out
+
+
+# ----------------------------------------------------------- replica groups
+def _parse_replica_groups(attrs: str, n_devices: int) -> List[List[int]]:
+    """Replica groups in literal ``{{0,1},{2,3}}`` or iota-v2
+    ``[R,C]<=[dims]T(perm)`` form; empty ⇒ one group of all devices."""
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+        attrs)
+    if m:
+        rows, cols = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return ids.reshape(rows, cols).tolist()
+    m = re.search(  # nested literal: {{0,1},{2,3}}
+        r"replica_groups=\{(\{[\d,\s]*\}(?:\s*,\s*\{[\d,\s]*\})*)\}", attrs)
+    if m:
+        return [[int(x) for x in g.replace(" ", "").split(",") if x]
+                for g in re.findall(r"\{([\d,\s]*)\}", m.group(1))]
+    m = re.search(r"replica_groups=\{([\d,\s]*)\}", attrs)
+    if m:
+        body = m.group(1).replace(" ", "")
+        if not body:
+            return [list(range(n_devices))]
+        return [[int(x) for x in body.split(",") if x]]
+    return [list(range(n_devices))]
+
+
+def _crosses_pod(groups: List[List[int]], n_devices: int) -> bool:
+    if n_devices <= POD_SIZE:
+        return False
+    for g in groups:
+        pods = {d // POD_SIZE for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+# -------------------------------------------------------------- trip counts
+def _loop_trip_count(cond: List[Instruction]) -> int:
+    """Trip count of a canonical counted loop: the condition compares the
+    induction variable against an s32 constant with LT/LE.  Returns 1 when
+    the pattern is not recognized (conservative: count the body once)."""
+    consts = {i.name: i for i in cond if i.opcode == "constant"}
+    root = next((i for i in cond if i.is_root), None)
+    if root is None or root.opcode != "compare":
+        return 1
+    direction = "LT"
+    m = re.search(r"direction=(\w+)", root.attrs)
+    if m:
+        direction = m.group(1)
+    for op in root.operands:
+        if op in consts and consts[op].operands:
+            lit = consts[op].operands[0]  # `constant(12)` → "12"
+            if re.fullmatch(r"-?\d+", lit):
+                n = int(lit)
+                return max(n + 1 if direction == "LE" else n, 1)
+    return 1
+
+
+# ------------------------------------------------------------------ module
+class HloModule:
+    """Parsed HLO module text + device count for pod classification.
+
+    ``HloModule(text, n_devices)`` — ``n_devices`` is the total device
+    count the module was compiled for (pods = ``n_devices / 256``).
+    """
+
+    def __init__(self, text: str, n_devices: int):
+        self.text = text
+        self.n_devices = int(n_devices)
+        self._comps, self._entry = _parse_computations(text)
+        self._multipliers = self._computation_multipliers()
+
+    # ---------------------------------------------------------- structure
+    def _call_edges(self, comp: str) -> List[Tuple[str, int]]:
+        """(callee, per-invocation factor) edges of one computation.
+
+        Traversed: while bodies (× trip count), call targets, conditional
+        branches, and generic async-start wrappers (XLA hides the real
+        collective opcode inside the wrapped computation).  Fusion bodies
+        and reducer ``to_apply``s are NOT edges: their internals live in
+        registers, and the fusion/reduce instruction carries the cost.
+        """
+        edges: List[Tuple[str, int]] = []
+        for instr in self._comps.get(comp, ()):
+            if instr.opcode == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+                bm = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+                trip = 1
+                if cm and cm.group(1) in self._comps:
+                    trip = _loop_trip_count(self._comps[cm.group(1)])
+                if bm:
+                    edges.append((bm.group(1), trip))
+                if cm:
+                    edges.append((cm.group(1), 1))
+            elif instr.opcode == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+                if cm:
+                    edges.append((cm.group(1), 1))
+            elif instr.opcode == "conditional" and \
+                    "branch_computations" in instr.attrs:
+                body = instr.attrs.split("branch_computations={")[-1]
+                for cname in re.findall(r"%?([\w.\-]+)", body.split("}")[0]):
+                    edges.append((cname, 1))
+            elif instr.opcode == "async-start":
+                cm = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+                if cm:
+                    edges.append((cm.group(1), 1))
+        return [(c, f) for c, f in edges if c in self._comps]
+
+    def _computation_multipliers(self) -> Dict[str, int]:
+        """How many times each computation runs per step: entry ×1, while
+        bodies × trip count (nested loops multiply), multipliers SUMMED
+        over distinct call sites (the call graph is a DAG)."""
+        order: List[str] = []
+        seen: set = set()
+
+        def topo(comp: str) -> None:  # postorder DFS from the entry
+            if comp in seen:
+                return
+            seen.add(comp)
+            for callee, _f in self._call_edges(comp):
+                topo(callee)
+            order.append(comp)
+
+        topo(self._entry)
+        mult: Dict[str, int] = {self._entry: 1}
+        for comp in reversed(order):  # callers before callees
+            m = mult.get(comp, 0)
+            if not m:
+                continue
+            for callee, factor in self._call_edges(comp):
+                mult[callee] = mult.get(callee, 0) + m * factor
+        return mult
+
+    def _iter_instructions(self):
+        for comp, instrs in self._comps.items():
+            m = self._multipliers.get(comp)
+            if m is None:
+                continue  # unreachable (dead computations, reducers)
+            for instr in instrs:
+                yield comp, m, instr
+
+    # --------------------------------------------------------- collectives
+    def collectives(self) -> CollectiveSummary:
+        ops: List[CollectiveOp] = []
+        for _comp, mult, instr in self._iter_instructions():
+            kind = next((k for k in _COLLECTIVE_KINDS
+                         if instr.opcode == k or instr.opcode == k + "-start"),
+                        None)
+            if kind is None:
+                continue
+            if kind == "collective-permute":
+                pairs = re.findall(r"\{(\d+),(\d+)\}",
+                                   instr.attrs.split("source_target_pairs=")[-1]
+                                   if "source_target_pairs" in instr.attrs
+                                   else "")
+                groups = [[int(a), int(b)] for a, b in pairs] or \
+                    [list(range(min(self.n_devices, 2)))]
+                group_size = 2
+            else:
+                groups = _parse_replica_groups(instr.attrs, self.n_devices)
+                group_size = len(groups[0]) if groups and groups[0] else 1
+            result_bytes = instr.result_bytes
+            if instr.opcode.endswith("-start") and \
+                    instr.type_str.lstrip().startswith("("):
+                # async pairs return (operand alias, result, scratch…); the
+                # result is the largest array component — except for
+                # reduce-scatter, where the operand is the largest and the
+                # result is 1/group_size of it
+                parts = [_shape_bytes(m.group(0))
+                         for m in _SHAPE_RE.finditer(instr.type_str)]
+                if parts:
+                    result_bytes = max(parts)
+                    if kind == "reduce-scatter":
+                        result_bytes //= max(group_size, 1)
+            if kind == "all-gather":
+                operand_bytes = result_bytes // max(group_size, 1)
+            elif kind == "reduce-scatter":
+                operand_bytes = result_bytes * max(group_size, 1)
+            else:
+                operand_bytes = result_bytes
+            ops.append(CollectiveOp(
+                kind=kind, name=instr.name,
+                operand_bytes=operand_bytes, result_bytes=result_bytes,
+                group_size=group_size, trip_count=mult,
+                crosses_pod=_crosses_pod(groups, self.n_devices)))
+        return CollectiveSummary(ops)
+
+    # --------------------------------------------------------------- flops
+    def dot_flops(self) -> int:
+        """Exact matmul FLOPs per device, loop trip counts applied:
+        2 · |result| · |contracting dims| per dot."""
+        shapes: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        for comp, _m, instr in self._iter_instructions():
+            shapes[(comp, instr.name)] = _result_dims(instr.type_str)
+        total = 0
+        for comp, mult, instr in self._iter_instructions():
+            if instr.opcode != "dot":
+                continue
+            result = _result_dims(instr.type_str)
+            lhs = shapes.get((comp, instr.operands[0]), ()) \
+                if instr.operands else ()
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+            contract = 1
+            if m and m.group(1) and lhs:
+                for d in m.group(1).split(","):
+                    di = int(d)
+                    if di < len(lhs):
+                        contract *= lhs[di]
+            # scalar results (fully-contracted dots) have empty dims → 1
+            total += 2 * (int(np.prod(result)) if result else 1) * contract * mult
+        return int(total)
+
+    # -------------------------------------------------------------- memory
+    _TRAFFIC_SKIP = {
+        "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+        "while", "call", "conditional", "iota", "after-all", "partition-id",
+        "replica-id",
+    }
+
+    def memory_traffic(self) -> int:
+        """HBM traffic proxy per device: result bytes of every materializing
+        instruction, trip counts applied (loop bodies dominate a step).
+        In-place updates (dynamic-update-slice) count the update operand,
+        not the whole aliased buffer."""
+        shapes: Dict[Tuple[str, str], int] = {}
+        for comp, _m, instr in self._iter_instructions():
+            shapes[(comp, instr.name)] = instr.result_bytes
+        total = 0
+        for comp, mult, instr in self._iter_instructions():
+            if instr.opcode in self._TRAFFIC_SKIP:
+                continue
+            nbytes = instr.result_bytes
+            if instr.opcode == "dynamic-update-slice" and len(instr.operands) > 1:
+                nbytes = shapes.get((comp, instr.operands[1]), nbytes)
+            elif instr.opcode == "fusion" and "dynamic-update-slice" in instr.name:
+                # in-place-update fusion (XLA names fusions by root op): the
+                # traffic is the update, i.e. the smallest operand
+                op_bytes = [shapes[(comp, o)] for o in instr.operands
+                            if (comp, o) in shapes]
+                if op_bytes:
+                    nbytes = min(min(op_bytes), nbytes)
+            total += nbytes * mult
+        return int(total)
+
+
+# ------------------------------------------------------------- entry points
+def parse_module(text: str, n_devices: int) -> HloModule:
+    """Parse jitted-fn HLO text (``compiled.as_text()``)."""
+    return HloModule(text, n_devices)
+
+
+def parse_collectives(text: str, n_devices: int) -> CollectiveSummary:
+    """Shortcut: the collective inventory of an HLO module."""
+    return HloModule(text, n_devices).collectives()

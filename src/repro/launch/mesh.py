@@ -36,6 +36,8 @@ def make_mesh_shape(shape: Sequence[int], axes: Sequence[str]):
 
 
 # v5e hardware constants for the roofline (EXPERIMENTS.md §Roofline)
+POD_SIZE = 256  # chips per pod (16×16) — dist/hlo_analysis classifies
+                # ICI vs DCI traffic by this boundary
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link (within pod)

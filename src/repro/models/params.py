@@ -24,6 +24,7 @@ Logical axis names (resolved to mesh axes by a ``ShardingPlan``):
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -59,11 +60,15 @@ def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
 
 
 def init_params(specs: Dict[str, ParamSpec], rng: jax.Array) -> Dict[str, jax.Array]:
-    """Deterministic per-path keys: fold the path hash into the root key."""
+    """Deterministic per-path keys: fold the path hash into the root key.
+
+    Uses crc32, not ``hash()`` — Python string hashing is salted per
+    process (PYTHONHASHSEED), which would make init draws differ across
+    processes and elastic restarts."""
     out: Dict[str, jax.Array] = {}
     for path in sorted(specs):
         spec = specs[path]
-        key = jax.random.fold_in(rng, abs(hash(path)) % (2**31))
+        key = jax.random.fold_in(rng, zlib.crc32(path.encode()) % (2**31))
         out[path] = init_param(key, spec)
     return out
 
