@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench smoke
+.PHONY: verify test bench bench-serve smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -14,6 +14,9 @@ test:
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+bench-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serve
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

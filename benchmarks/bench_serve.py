@@ -1,0 +1,136 @@
+"""Serving-stack benchmark: the paged, task-pipelined engine vs the seed
+engine (dense per-slot cache + inline-prefill barrier) on a mixed-length
+workload.
+
+The seed engine pays twice on mixed lengths: every distinct prompt length
+recompiles prefill (dynamic shapes), and every admission stalls the whole
+decode batch (the barrier).  The paged stack buckets prompts to static
+shapes and prefills on PRIORITY_HIGH tasks overlapped with the decode
+continuation chain.  Records tokens/s, p50/p99 request latency, p50 first-
+token latency, the speedup ratio, and the zero-recompile check to
+``results/BENCH_serve.json`` (acceptance: ≥ 1.5× tokens/s, zero decode
+recompiles after warmup, first streamed token before completion).
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_serve.json"
+
+ARCH = "starcoder2_3b"
+MAX_BATCH = 8
+CACHE_LEN = 128
+MAX_NEW = 12
+REQUESTS = 16
+
+
+def _workload(vocab: int, n: int):
+    """Mixed-length prompts (4..60 tokens) — the continuous-batching case."""
+    rng = np.random.default_rng(7)
+    lens = rng.integers(4, 61, size=n)
+    return [rng.integers(1, vocab, size=int(L)).tolist() for L in lens]
+
+
+def _run_engine(model, params, vocab, *, paged: bool, pipelined: bool,
+                name: str, requests: int):
+    from repro.serve.engine import Engine, ServeConfig
+
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                             max_new_tokens=MAX_NEW, page_size=16,
+                             paged=paged, pipeline_admission=pipelined,
+                             name=name))
+    prompts = _workload(vocab, requests)
+    # warmup: one request through, then snapshot the decode compile count
+    eng.submit(prompts[0]).get(timeout=600)
+    compiles_warm = eng.decode_compile_count()
+    # streaming probe: first token must arrive while the request is live
+    ch, fut = eng.submit_stream(prompts[1])
+    tok0 = ch.get(timeout=600)
+    first_before_done = not fut.is_ready()
+    assert [tok0] + list(ch) == fut.get(timeout=600)
+
+    t0 = time.perf_counter()
+    pending = []
+    for p in prompts:
+        pending.append((time.perf_counter(), eng.submit(p)))
+    lat, total_tokens = [], 0
+    for sub_t, fut in pending:
+        out = fut.get(timeout=600)
+        lat.append(time.perf_counter() - sub_t)
+        total_tokens += len(out)
+    wall = time.perf_counter() - t0
+    first = eng.t_first.stats()  # engine-side submit→first-token timer
+    return {
+        "tokens_per_s": total_tokens / wall,
+        "wall_s": wall,
+        "total_tokens": total_tokens,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "mean_first_token_s": first["mean"],
+        "first_token_before_completion": first_before_done,
+        "decode_recompiles_after_warmup": eng.decode_compile_count() - compiles_warm,
+    }
+
+
+def _bench(requests: int = REQUESTS):
+    import jax
+
+    from repro.configs import get_config
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg, get_plan("futurized"))
+    params = model.init(jax.random.PRNGKey(0))
+    # paged first: any process-global warmup then favors the baseline
+    paged = _run_engine(model, params, cfg.vocab_size, paged=True,
+                        pipelined=True, name="bench-paged#0",
+                        requests=requests)
+    seed = _run_engine(model, params, cfg.vocab_size, paged=False,
+                       pipelined=False, name="bench-seed#0",
+                       requests=requests)
+    speedup = (paged["tokens_per_s"] / seed["tokens_per_s"]
+               if seed["tokens_per_s"] else 0.0)
+    return {
+        "arch": ARCH, "max_batch": MAX_BATCH, "cache_len": CACHE_LEN,
+        "max_new": MAX_NEW, "requests": requests,
+        "paged_pipelined": {k: round(v, 4) if isinstance(v, float) else v
+                            for k, v in paged.items()},
+        "seed_baseline": {k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in seed.items()},
+        "speedup_tokens_per_s": round(speedup, 3),
+    }
+
+
+def run(requests: int = REQUESTS):
+    res = _bench(requests)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(res, indent=1))
+    p, s = res["paged_pipelined"], res["seed_baseline"]
+    return [
+        ("serve/paged_tokens_per_s", 1e6 / max(p["tokens_per_s"], 1e-9),
+         f"{p['tokens_per_s']:.2f} tok/s"),
+        ("serve/seed_tokens_per_s", 1e6 / max(s["tokens_per_s"], 1e-9),
+         f"{s['tokens_per_s']:.2f} tok/s"),
+        ("serve/speedup", 0.0, f"{res['speedup_tokens_per_s']:.2f}x"),
+        ("serve/paged_p99_latency", p["p99_latency_s"] * 1e6,
+         f"recompiles={p['decode_recompiles_after_warmup']}"),
+    ]
+
+
+def main() -> None:
+    import repro.core as core
+
+    core.init(num_workers=4)
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+    print(json.dumps(json.loads(OUT.read_text()), indent=1))
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

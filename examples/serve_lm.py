@@ -1,10 +1,13 @@
-"""Batched serving with continuous batching on the AMT runtime.
+"""Batched serving on the paged continuous-batching stack.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Requests are submitted as futures (one-sided, HPX semantics); the engine
-admits them into free slots, prefills each exactly, and decodes the whole
-batch per iteration — slots advance independently (per-slot positions).
+Requests are submitted as futures (one-sided, HPX semantics); prefill runs
+as PRIORITY_HIGH tasks overlapped with the decode continuation chain, KV
+lives in a block-pool paged cache, and every request streams its tokens
+through a `core.Channel` as the slots advance — first token long before
+the request completes.  Two engine replicas sit behind the least-loaded
+router.
 """
 import time
 
@@ -15,7 +18,8 @@ import repro.core as core
 from repro.configs import get_config
 from repro.dist.plan import get_plan
 from repro.models.model import build_model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import SamplingParams, ServeConfig
+from repro.serve.router import Router
 
 
 def main() -> None:
@@ -23,24 +27,33 @@ def main() -> None:
     cfg = get_config("qwen25_3b", smoke=True)
     model = build_model(cfg, get_plan("futurized"))
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params,
-                    ServeConfig(max_batch=4, cache_len=128, max_new_tokens=12))
+    router = Router.replicate(
+        model, params,
+        ServeConfig(max_batch=4, cache_len=128, max_new_tokens=12),
+        replicas=2)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    futures = []
-    for i in range(10):  # 10 requests, 4 slots → continuous batching
+    streams = []
+    for i in range(10):  # 10 requests, 2×4 slots → continuous batching
         prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(3, 24)).tolist()
-        futures.append((prompt, engine.submit(prompt)))
-    for prompt, fut in futures:
+        # even requests greedy, odd requests sampled
+        sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95) if i % 2 \
+            else SamplingParams()
+        streams.append((prompt, sp, *router.submit_stream(prompt, sampling=sp)))
+    for prompt, sp, ch, fut in streams:
+        toks = list(ch)  # arrives token-by-token as the slot advances
         out = fut.get(timeout=600)
-        print(f"prompt[{len(prompt):2d} toks] → {out}")
+        assert toks == out
+        mode = "sampled" if sp.temperature > 0 else "greedy "
+        print(f"{mode} prompt[{len(prompt):2d} toks] → {out}")
     dt = time.perf_counter() - t0
-    total = int(core.counters.get_value("/serve{engine#0}/tokens/generated"))
-    print(f"\n{len(futures)} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s)")
-    print("decode step mean:",
-          f"{core.counters.default().timer('/serve{engine#0}/step/duration').get_value() * 1e3:.1f} ms")
+    total = int(sum(core.counters.get_value(f"/serve{{engine#{i}}}/tokens/generated")
+                    for i in range(2)))
+    print(f"\n10 requests, {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    print("dispatch:", dict(core.counters.query("/serve{router}/dispatch/*")))
+    print("pages in use:",
+          dict(core.counters.query("/serve{engine#*}/pages/in_use")))
     core.finalize()
 
 

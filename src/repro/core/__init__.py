@@ -16,6 +16,8 @@ Surface mirrors HPX:
 from repro.core import agas, algorithms, counters, executor, migration, parcel
 from repro.core.dataflow import TaskGraph, dataflow, futurize
 from repro.core.future import (
+    Channel,
+    ChannelClosed,
     Future,
     FutureError,
     Promise,
@@ -42,6 +44,7 @@ from repro.core.scheduler import (
 __all__ = [
     "agas", "algorithms", "counters", "executor", "migration", "parcel",
     "TaskGraph", "dataflow", "futurize",
+    "Channel", "ChannelClosed",
     "Future", "FutureError", "Promise", "make_exceptional_future",
     "make_ready_future", "unwrap", "wait_all", "when_all", "when_any",
     "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL", "Runtime", "async_",

@@ -181,6 +181,90 @@ class Promise(Generic[T]):
         self._future._set(None, exc)
 
 
+class ChannelClosed(FutureError):
+    """Raised by :meth:`Channel.get` once the channel is closed and drained."""
+
+
+class Channel(Generic[T]):
+    """HPX ``hpx::lcos::channel<T>`` — an ordered multi-value pipe.
+
+    Producers :meth:`set` values; consumers :meth:`get` them FIFO (each
+    ``get`` is backed by a :class:`Future`, so consumers on scheduler
+    workers *help along* instead of blocking the pool).  :meth:`close`
+    ends the stream: buffered values still drain, then ``get`` raises
+    :class:`ChannelClosed` and iteration stops.  The serve engine streams
+    one token per ``set`` and closes on request completion.
+    """
+
+    __slots__ = ("_buf", "_waiters", "_closed", "_lock")
+
+    def __init__(self) -> None:
+        self._buf: List[T] = []
+        self._waiters: List[Promise[T]] = []
+        self._closed = False
+        self._lock = threading.Lock()
+
+    def set(self, value: T) -> None:
+        """Push one value (wakes the oldest waiter, else buffers)."""
+        with self._lock:
+            if self._closed:
+                raise ChannelClosed("set() on closed channel")
+            waiter = self._waiters.pop(0) if self._waiters else None
+            if waiter is None:
+                self._buf.append(value)
+        if waiter is not None:
+            waiter.set_value(value)
+
+    def close(self) -> None:
+        """End the stream. Buffered values remain readable; blocked and
+        future ``get``s observe :class:`ChannelClosed`."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            waiters, self._waiters = self._waiters, []
+        for w in waiters:
+            w.set_exception(ChannelClosed("channel closed"))
+
+    def is_closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def get_future(self) -> Future[T]:
+        """Future for the next value, HPX ``channel::get`` semantics."""
+        promise: Promise[T] = Promise()
+        with self._lock:
+            if self._buf:
+                value, ok = self._buf.pop(0), True
+            elif self._closed:
+                value, ok = None, False
+            else:
+                self._waiters.append(promise)
+                return promise.future()
+        if ok:
+            promise.set_value(value)  # type: ignore[arg-type]
+        else:
+            promise.set_exception(ChannelClosed("channel closed"))
+        return promise.future()
+
+    def get(self, timeout: Optional[float] = None) -> T:
+        return self.get_future().get(timeout)
+
+    def try_get(self):
+        """Non-blocking: (True, value) or (False, None)."""
+        with self._lock:
+            if self._buf:
+                return True, self._buf.pop(0)
+            return False, None
+
+    def __iter__(self):
+        while True:
+            try:
+                yield self.get()
+            except ChannelClosed:
+                return
+
+
 def make_ready_future(value: T) -> Future[T]:
     p: Promise[T] = Promise()
     p.set_value(value)

@@ -1,4 +1,4 @@
-"""Flash-decoding kernel (TPU Pallas): one-token attention over a long KV
+"""Flash-decoding kernels (TPU Pallas): one-token attention over a long KV
 cache, KV-blocked with a running log-sum-exp combine.
 
 Decode attention is memory-bound (the whole cache streams HBM→VMEM once per
@@ -8,8 +8,20 @@ in registers/VMEM.  Grid: (rows, T/block_k) with the KV dim sequential —
 combine that GSPMD emits across *devices* when the cache is
 sequence-sharded (DESIGN.md §5) — same math, one level down.
 
-Layout (from ops.py): q (R, Dh) with R = B·KV·G; k/v (R, T, Dh).
-``length`` masks positions ≥ the current cache fill (ring buffers pass T).
+Two variants share the softmax-combine body:
+
+- :func:`decode_attention_fwd` — dense layout (from ops.py): q (R, Dh) with
+  R = B·KV·G; k/v (R, T, Dh).  ``length`` is *per row* — either a scalar
+  (broadcast fast path, all rows at the same fill) or an (R,) vector
+  (continuous batching: every slot at its own depth).  Masking with one
+  scalar across divergent slots was the seed bug — rows at shallower fill
+  attended over stale/zero KV.
+- :func:`paged_decode_attention_fwd` — paged layout: K/V live in a block
+  pool (P, page, KV, Dh) shared by all requests; each row walks *its own*
+  page list via an SMEM-prefetched page table (the index map reads the
+  table before the DMA is issued, so the gather costs nothing extra — this
+  is "sending work to data" at the memory-system level).  GQA needs no
+  jnp.repeat of the cache: the index map routes each row to its KV head.
 """
 
 from __future__ import annotations
@@ -25,8 +37,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _softmax_accumulate(q, k, v, kpos_base, length, m_scr, l_scr, acc_scr,
+                        *, scale: float):
+    """One KV-block online-softmax update. q (1,Dh); k/v (bk,Dh)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (1, bk)
+    kpos = kpos_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < length, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int):
+                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int,
+                   per_row: bool):
+    r = pl.program_id(0)
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
 
@@ -36,26 +67,15 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    length = len_ref[0]
+    length = len_ref[r] if per_row else len_ref[0]
     k_start = ki * block_k
 
     @pl.when(k_start < length)
     def _body():
-        q = q_ref[...].astype(jnp.float32)  # (1, Dh)
-        k = k_ref[0].astype(jnp.float32)  # (block_k, Dh)
-        v = v_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale  # (1, bk)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos < length, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        _softmax_accumulate(q_ref[...].astype(jnp.float32),
+                            k_ref[0].astype(jnp.float32),
+                            v_ref[0].astype(jnp.float32),
+                            k_start, length, m_scr, l_scr, acc_scr, scale=scale)
 
     @pl.when(ki == nk - 1)
     def _finish():
@@ -65,14 +85,23 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
                          length: jax.Array, *, block_k: int = 512,
                          interpret: bool = False) -> jax.Array:
-    """q: (R, Dh); k/v: (R, T, Dh); length: scalar int32 (valid prefix).
+    """q: (R, Dh); k/v: (R, T, Dh); length: scalar int32 (uniform fill — the
+    fast path: one SMEM word) or (R,) int32 (per-row valid prefix).
 
     Returns (R, Dh). T must be a multiple of block_k (ops.py pads)."""
     R, T, Dh = k.shape
     assert T % block_k == 0, (T, block_k)
+    length = jnp.asarray(length, jnp.int32)
+    per_row = length.ndim >= 1 and length.size > 1
+    if per_row:
+        assert length.shape == (R,), (length.shape, R)
+        len_arg = length
+    else:
+        len_arg = length.reshape(1)
     scale = 1.0 / math.sqrt(Dh)
     grid = (R, T // block_k)
-    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               per_row=per_row)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -92,4 +121,93 @@ def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)
+    )(len_arg, q, k, v)
+
+
+# ------------------------------------------------------------------- paged
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         page_size: int, rows_per_batch: int):
+    r = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[r // rows_per_batch]
+    k_start = ki * page_size
+
+    @pl.when(k_start < length)
+    def _body():
+        _softmax_accumulate(q_ref[...].astype(jnp.float32),
+                            k_ref[0, :, 0].astype(jnp.float32),
+                            v_ref[0, :, 0].astype(jnp.float32),
+                            k_start, length, m_scr, l_scr, acc_scr, scale=scale)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, page_table: jax.Array,
+                               lengths: jax.Array, *, num_kv_heads: int,
+                               interpret: bool = False) -> jax.Array:
+    """Paged flash-decode.
+
+    q: (R, Dh) with R = B·KV·G (KV-major head order, as ops.py flattens);
+    k_pages/v_pages: (P, page, KV, Dh) block pool shared by all requests;
+    page_table: (B, maxp) int32 — page_table[b, j] is the pool page holding
+    tokens [j·page, (j+1)·page) of request b (entries past the fill must be
+    *valid* indices, e.g. 0 — they are skipped, never read);
+    lengths: (B,) int32 valid prefix per request.
+
+    Grid is (R, maxp); the KV walk is sequential per row and the page table
+    + lengths are scalar-prefetched so each block's DMA source address is
+    known up front.  Returns (R, Dh).
+    """
+    P, page_size, KV, Dh = k_pages.shape
+    R = q.shape[0]
+    B, maxp = page_table.shape
+    assert KV == num_kv_heads, (KV, num_kv_heads)
+    assert R % B == 0, (R, B)
+    rows_per_batch = R // B  # KV * G
+    G = rows_per_batch // KV
+    scale = 1.0 / math.sqrt(Dh)
+
+    def kv_index(r, ki, pt, _ln):
+        b = r // rows_per_batch
+        kv = (r // G) % KV
+        return (pt[b, ki], 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=(R, maxp),
+        in_specs=[
+            pl.BlockSpec((1, Dh), lambda r, ki, pt, ln: (r, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh), kv_index),
+            pl.BlockSpec((1, page_size, 1, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, Dh), lambda r, ki, pt, ln: (r, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page_size=page_size,
+                               rows_per_batch=rows_per_batch)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(page_table, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q, k_pages, v_pages)

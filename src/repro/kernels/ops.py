@@ -18,7 +18,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention import (decode_attention_fwd,
+                                            paged_decode_attention_fwd)
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.rglru_scan import rglru_scan_fwd
 from repro.kernels.ssd_scan import ssd_scan_fwd
@@ -68,7 +69,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      length: jax.Array, *, block_k: int = 512,
                      interpret: Optional[bool] = None) -> jax.Array:
-    """q: (B,H,Dh), k/v: (B,T,KV,Dh), length: scalar → (B,H,Dh)."""
+    """q: (B,H,Dh), k/v: (B,T,KV,Dh) → (B,H,Dh).
+
+    ``length`` is the valid cache prefix: a scalar (uniform fill, the
+    non-paged reference fast path) or (B,) per-slot (continuous batching —
+    every slot at its own depth)."""
     if interpret is None:
         interpret = not _on_tpu()
     B, H, Dh = q.shape
@@ -80,9 +85,51 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     block_k = min(block_k, max(128, T))
     kr, _ = _pad_to(kr, 1, block_k)
     vr, _ = _pad_to(vr, 1, block_k)
-    o = decode_attention_fwd(qr, kr, vr, jnp.minimum(length, T),
+    length = jnp.minimum(jnp.asarray(length, jnp.int32), T)
+    if length.ndim == 1:  # (B,) → one entry per kernel row
+        length = jnp.repeat(length, KV * G)
+    o = decode_attention_fwd(qr, kr, vr, length,
                              block_k=block_k, interpret=interpret)
     return o.reshape(B, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, lengths: jax.Array, *,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Paged flash-decode over a block-pool KV cache.
+
+    q: (B,H,Dh); k_pages/v_pages: (P, page, KV, Dh); page_table: (B, maxp)
+    int32 (entries past the fill must be valid pool indices, e.g. 0);
+    lengths: (B,) int32 → (B,H,Dh).  No dense gather — each kernel row
+    walks its own page list via the scalar-prefetched table.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, Dh = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qr = q.reshape(B * KV * G, Dh)
+    o = paged_decode_attention_fwd(qr, k_pages, v_pages, page_table,
+                                   lengths, num_kv_heads=KV,
+                                   interpret=interpret)
+    return o.reshape(B, H, Dh)
+
+
+def gather_paged_kv(k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Materialize per-request dense caches from the block pool.
+
+    k_pages/v_pages: (P, page, KV, Dh), page_table: (B, maxp)
+    → (B, maxp·page, KV, Dh).  The XLA (non-Pallas) decode path and the
+    test oracles use this; the Pallas path never materializes it.
+    """
+    P, page, KV, Dh = k_pages.shape
+    B, maxp = page_table.shape
+    k = jnp.take(k_pages, page_table.reshape(-1), axis=0)
+    v = jnp.take(v_pages, page_table.reshape(-1), axis=0)
+    return (k.reshape(B, maxp * page, KV, Dh),
+            v.reshape(B, maxp * page, KV, Dh))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

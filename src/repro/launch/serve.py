@@ -1,8 +1,9 @@
-"""Serving launcher: batched requests through the continuous-batching engine.
+"""Serving launcher: batched requests through the paged continuous-batching
+serving stack (engine replicas behind the least-loaded router).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --engines 2 --temperature 0.8 --top-k 40
 """
 
 from __future__ import annotations
@@ -25,13 +26,29 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--workers", type=int, default=4)
+    # routing layer
+    ap.add_argument("--engines", type=int, default=1,
+                    help="engine replicas behind the least-loaded router")
+    # cache layer
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--no-paged", action="store_true",
+                    help="dense per-slot cache instead of the block pool")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="seed-style inline prefill (the barrier baseline)")
+    # sampling / streaming
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="consume tokens via per-request channels")
     args = ap.parse_args()
 
     import repro.core as core
     from repro.configs import get_config
     from repro.dist.plan import get_plan
     from repro.models.model import build_model
-    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve.engine import SamplingParams, ServeConfig
+    from repro.serve.router import Router
 
     core.init(num_workers=args.workers)
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -46,20 +63,37 @@ def main() -> None:
         extra["enc"] = jax.numpy.zeros((1, 64, cfg.d_model), jax.numpy.bfloat16)
         extra["enc_len"] = 64
 
-    engine = Engine(model, params,
-                    ServeConfig(max_batch=args.max_batch, cache_len=args.cache_len,
-                                max_new_tokens=args.max_new), extra_inputs=extra)
+    scfg = ServeConfig(max_batch=args.max_batch, cache_len=args.cache_len,
+                       max_new_tokens=args.max_new, page_size=args.page_size,
+                       paged=not args.no_paged,
+                       pipeline_admission=not args.no_pipeline)
+    router = Router.replicate(model, params, scfg, args.engines,
+                              extra_inputs=extra)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    futures = []
-    for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 32)).tolist()
-        futures.append(engine.submit(prompt))
-    outs = [f.get(timeout=600) for f in futures]
+    if args.stream:
+        streams = []
+        for i in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 32)).tolist()
+            streams.append(router.submit_stream(prompt, sampling=sampling))
+        outs = []
+        for ch, fut in streams:
+            toks = list(ch)  # arrives token-by-token as slots advance
+            outs.append(fut.get(timeout=600))
+            assert toks == outs[-1]
+    else:
+        futures = []
+        for i in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 32)).tolist()
+            futures.append(router.submit(prompt, sampling=sampling))
+        outs = [f.get(timeout=600) for f in futures]
     dt = time.perf_counter() - t0
     total_tokens = sum(len(o) for o in outs)
     print(json.dumps({
         "requests": len(outs),
+        "engines": args.engines,
         "generated_tokens": total_tokens,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(total_tokens / dt, 2),

@@ -324,6 +324,72 @@ def decode_attention(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
     return o @ p[f"{prefix}wo"].astype(dt), k_cache, v_cache
 
 
+# ------------------------------------------------------- paged decode attn
+def paged_decode_attention(cfg: ModelConfig, plan: ShardingPlan, x: jax.Array,
+                           p: Dict[str, jax.Array], prefix: str,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, pos: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a *paged* KV cache.
+
+    x: (B, 1, D); k_pages/v_pages: (P, page, KV, Dh) block pool shared by
+    all requests; page_table: (B, maxp) int32 (per-request page lists, 0-
+    padded past the fill — page 0 is the pool's reserved scratch page);
+    pos: (B,) current fill per slot.  The new token's K/V are scattered
+    into page ``page_table[b, pos//page]`` at offset ``pos % page``;
+    attention then walks the row's page list with per-row lengths — either
+    in the paged Pallas kernel (``attn_impl == "pallas"``) or via a dense
+    gather + masked softmax (XLA reference path).
+
+    Pages are per-request, so the scatter destinations are unique across
+    live slots; idle slots all target the scratch page and their output is
+    discarded by the engine.
+    Returns (out (B,1,D), new_k_pages, new_v_pages).
+    """
+    dt = cdtype(cfg)
+    B, _, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    page = k_pages.shape[1]
+    q = x @ p[f"{prefix}wq"].astype(dt)
+    k = x @ p[f"{prefix}wk"].astype(dt)
+    v = x @ p[f"{prefix}wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}bq"].astype(dt)
+        k = k + p[f"{prefix}bk"].astype(dt)
+        v = v + p[f"{prefix}bv"].astype(dt)
+    q = q.reshape(B, KV * G, Dh)
+    k = k.reshape(B, KV, Dh)
+    v = v.reshape(B, KV, Dh)
+    if cfg.rope:
+        q = _rope_single(cfg, q, pos)
+        k = _rope_single(cfg, k, pos)
+    pidx = page_table[jnp.arange(B), pos // page]  # (B,) destination pages
+    off = pos % page
+    k_pages = k_pages.at[pidx, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[pidx, off].set(v.astype(v_pages.dtype))
+    lengths = pos + 1
+
+    from repro.kernels import ops as kops
+
+    if cfg.attn_impl == "pallas":
+        o = kops.paged_decode_attention(q.reshape(B, H, Dh), k_pages, v_pages,
+                                        page_table, lengths)
+        o = o.reshape(B, 1, H * Dh)
+    else:
+        kc, vc = kops.gather_paged_kv(k_pages, v_pages, page_table)
+        T = kc.shape[1]
+        qh = q.reshape(B, KV, G, Dh)
+        s = jnp.einsum("bkgd,btkd->bkgt", qh, kc.astype(dt),
+                       preferred_element_type=jnp.float32) / math.sqrt(Dh)
+        valid = jnp.arange(T)[None, :] < lengths[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(dt), vc.astype(dt))
+        o = o.reshape(B, 1, H * Dh)
+    return o @ p[f"{prefix}wo"].astype(dt), k_pages, v_pages
+
+
 # --------------------------------------------------------------- embedding
 def embed(cfg: ModelConfig, plan: ShardingPlan, table: jax.Array,
           tokens: jax.Array) -> jax.Array:

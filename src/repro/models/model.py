@@ -69,8 +69,11 @@ class Model:
 
     # ----------------------------------------------------------------- serve
     def prefill(self, params, inputs: Dict[str, jax.Array],
-                cache_len: Optional[int] = None):
-        """``cache_len`` is static (jit with static_argnums if passed)."""
+                cache_len: Optional[int] = None,
+                valid_len: Optional[jax.Array] = None):
+        """``cache_len`` is static (jit with static_argnums if passed).
+        ``valid_len`` (traced) supports right-padded prompts — transformer
+        families only (the serve engine's bucketed admission)."""
         cfg, plan = self.cfg, self.plan
         if cfg.family == "encdec":
             return encdec.prefill(cfg, plan, params, inputs["enc"], inputs["tokens"],
@@ -81,7 +84,7 @@ class Model:
             return hybrid.prefill(cfg, plan, params, inputs["tokens"])
         return transformer.prefill(cfg, plan, params, inputs["tokens"],
                                    patches=inputs.get("patches"),
-                                   cache_len=cache_len)
+                                   cache_len=cache_len, valid_len=valid_len)
 
     def decode(self, params, cache, token):
         cfg, plan = self.cfg, self.plan
@@ -92,6 +95,25 @@ class Model:
         if cfg.family == "hybrid":
             return hybrid.decode_step(cfg, plan, params, cache, token)
         return transformer.decode_step(cfg, plan, params, cache, token)
+
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV serving applies to families with a dense KV cache; SSM /
+        hybrid / encdec carry recurrent or ring-buffer state instead."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def decode_paged(self, params, cache, token):
+        """One decode step against a block-pool paged cache
+        (:func:`repro.models.transformer.paged_cache_specs` layout)."""
+        assert self.supports_paged, self.cfg.family
+        return transformer.decode_step_paged(self.cfg, self.plan, params,
+                                             cache, token)
+
+    def paged_cache_specs(self, num_pages: int, page_size: int,
+                          max_batch: int, max_pages_per_req: int):
+        assert self.supports_paged, self.cfg.family
+        return transformer.paged_cache_specs(self.cfg, num_pages, page_size,
+                                             max_batch, max_pages_per_req)
 
     def cache_specs(self, batch: int, cache_len: int, enc_len: Optional[int] = None):
         cfg = self.cfg

@@ -234,6 +234,92 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, jax.Ar
             init_cache_specs(cfg, batch, cache_len).items()}
 
 
+def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                      max_batch: int, max_pages_per_req: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract *paged* KV-cache pytree: a block pool of ``num_pages`` fixed
+    ``page_size`` pages shared by every layer (same page index holds a
+    request's tokens in all layers, vLLM-style), plus per-slot page tables
+    and fill positions.  Memory scales with live tokens, not
+    ``max_batch × cache_len``."""
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    fd, Lm = cfg.first_dense, cfg.num_layers - cfg.first_dense
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "k": jax.ShapeDtypeStruct((Lm, num_pages, page_size, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((Lm, num_pages, page_size, KV, Dh), dt),
+        "page_table": jax.ShapeDtypeStruct((max_batch, max_pages_per_req), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((max_batch,), jnp.int32),
+    }
+    if fd > 0:
+        specs["k0"] = jax.ShapeDtypeStruct((fd, num_pages, page_size, KV, Dh), dt)
+        specs["v0"] = jax.ShapeDtypeStruct((fd, num_pages, page_size, KV, Dh), dt)
+    return specs
+
+
+def _paged_decode_layer(cfg: ModelConfig, plan: ShardingPlan, x, lp, kp, vp,
+                        page_table, pos, moe_layer: bool):
+    h = Lx.norm(cfg, x, lp["ln1"])
+    h, kp, vp = Lx.paged_decode_attention(cfg, plan, h, lp, "", kp, vp,
+                                          page_table, pos)
+    x = x + h
+    h = Lx.norm(cfg, x, lp["ln2"])
+    if moe_layer:
+        ffn, _ = moe_ffn(cfg, plan, h, lp, "moe/")
+    else:
+        ffn = Lx.mlp(cfg, plan, h, lp, "")
+    return x + ffn, kp, vp
+
+
+def decode_step_paged(cfg: ModelConfig, plan: ShardingPlan,
+                      params: Dict[str, jax.Array],
+                      cache: Dict[str, jax.Array], token: jax.Array
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against the paged cache (see paged_cache_specs).
+    token: (B, 1) int32 → (logits (B,V) fp32, new cache)."""
+    specs = decoder_param_specs(cfg)
+    pos = cache["pos"]
+    pt = cache["page_table"]
+    x = Lx.embed(cfg, plan, params["tok_embed"], token)
+    new_cache = dict(cache)
+
+    if cfg.first_dense > 0:
+        d0 = _slice_params(params, "d0/")
+        a0 = _layer_axes(specs, "d0/")
+
+        def body0(x, xs):
+            lp, kp, vp = xs
+            if not plan.gather_upfront:
+                lp = gather_constrain(plan, lp, a0)
+            x, kp, vp = _paged_decode_layer(cfg, plan, x, lp, kp, vp, pt, pos, False)
+            return x, (kp, vp)
+
+        x, (nk0, nv0) = jax.lax.scan(body0, x, (d0, cache["k0"], cache["v0"]))
+        new_cache["k0"], new_cache["v0"] = nk0, nv0
+
+    blk = _slice_params(params, "blk/")
+    ax = _layer_axes(specs, "blk/")
+    if plan.gather_upfront:
+        blk = stacked_gather_constrain(plan, blk, ax)
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        if not plan.gather_upfront:
+            lp = gather_constrain(plan, lp, ax)
+        x, kp, vp = _paged_decode_layer(cfg, plan, x, lp, kp, vp, pt, pos,
+                                        cfg.is_moe)
+        return x, (kp, vp)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (blk, cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = nk, nv
+    new_cache["pos"] = pos + 1
+
+    x = Lx.norm(cfg, x, params["final_ln"])
+    table = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = Lx.unembed(cfg, plan, x, table, transpose=cfg.tie_embeddings)
+    return logits[:, 0, :], new_cache
+
+
 def _decode_layer(cfg: ModelConfig, plan: ShardingPlan, x, lp, kc, vc, pos,
                   moe_layer: bool):
     h = Lx.norm(cfg, x, lp["ln1"])
@@ -295,12 +381,19 @@ def decode_step(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Arra
 
 def prefill(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
             tokens: jax.Array, patches: Optional[jax.Array] = None,
-            cache_len: Optional[int] = None
+            cache_len: Optional[int] = None,
+            valid_len: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Single-pass forward + KV-cache collection.
 
     Returns (last-position logits (B, V) fp32, cache).  K/V are collected as
     scan outputs of the same stack pass (``collect_kv``) — no second pass.
+
+    ``valid_len`` (scalar or (B,) int32) supports right-padded prompts (the
+    serve engine pads to static buckets so admission never recompiles):
+    logits are taken at position ``valid_len - 1`` instead of ``S - 1`` and
+    the cache ``pos`` starts at ``valid_len``.  Causality makes the pad
+    positions inert — no valid token attends to them.
     """
     specs = decoder_param_specs(cfg)
     B, S = tokens.shape
@@ -329,9 +422,16 @@ def prefill(cfg: ModelConfig, plan: ShardingPlan, params: Dict[str, jax.Array],
                               moe_layer=cfg.is_moe, collect_kv=True)
     cache["k"] = _place(cache["k"], k)
     cache["v"] = _place(cache["v"], v)
-    cache["pos"] = jnp.full((B,), S, jnp.int32)
-
-    x_last = Lx.norm(cfg, x[:, -1:, :], params["final_ln"])
+    if valid_len is None:
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        x_last = x[:, -1:, :]
+    else:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B,))
+        cache["pos"] = vl
+        idx = jnp.clip(vl - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(
+            x, idx[:, None, None].astype(jnp.int32), axis=1)
+    x_last = Lx.norm(cfg, x_last, params["final_ln"])
     table = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = Lx.unembed(cfg, plan, x_last, table, transpose=cfg.tie_embeddings)
     return logits[:, 0, :], cache

@@ -1,29 +1,47 @@
-"""Serving engine: continuous batching driven by the AMT runtime.
+"""Serving engine: paged-KV continuous batching on the AMT runtime.
 
-Requests arrive as futures (``submit`` returns immediately, HPX-style
-one-sided semantics); the engine loop runs as a scheduler task and:
+The seed engine ran prefill *inside* the decode loop — a bulk-synchronous
+barrier: every admission stalled every in-flight decode.  This version is
+task-pipelined, HPX-style:
 
-1. admits queued requests into free batch slots — each request is prefilled
-   (B=1, exact, its own length) and its cache *migrated into* the batched
-   cache at the slot index (per-slot ``pos`` lets slots advance
-   independently — true continuous batching, no wave barriers);
-2. decodes the whole batch each iteration (one jitted ``decode_step``,
-   donated cache);
-3. resolves a request's future the moment its slot finishes (EOS/max
-   tokens), freeing the slot for the next admission.
+1. **Admission** — ``submit`` enqueues the request and a ``PRIORITY_HIGH``
+   prefill task is spawned (work-stealing workers pick it up while the
+   decode chain runs).  Prompts are right-padded to static *buckets* so
+   admission never recompiles; ``valid_len`` keeps logits/cache positions
+   exact.  Finished prefills land in a ready queue.
+2. **Decode continuation chain** — each step is a scheduler task that
+   integrates ready prefills into free slots (paged: scatter the prefill
+   KV into block-pool pages; dense fallback: migrate into the slot row),
+   runs one jitted decode+sample step for the whole batch, streams each
+   new token through the request's :class:`~repro.core.future.Channel`,
+   and respawns itself.  No prefill barrier anywhere on the hot path.
+3. **Completion** — EOS / length ends a slot: pages return to the free
+   list, the future resolves with the token list, the stream closes.
 
-The engine's cache is AGAS-registered, so load rebalancing / elastic moves
-(DESIGN.md §5) operate on it like any other global object.  Performance
-counters: ``/serve{engine#0}/requests/{submitted,completed}``,
-``/serve{engine#0}/tokens/generated``, ``/serve{engine#0}/step/duration``.
+Sampling (temperature / top-k / top-p) runs *inside* the jitted step with
+per-slot parameter vectors — admission churn never changes shapes, so after
+warmup the decode step never recompiles.  ``temperature=0`` rows reduce to
+exact argmax (greedy equivalence).
+
+Cache backends: block-pool paged KV (:mod:`repro.serve.kv_cache`) for
+KV-cache families (dense/moe/vlm) — memory ∝ live tokens, per-row lengths
+in the kernel — and the seed's dense per-slot cache for recurrent families
+(ssm/hybrid/encdec).  ``ServeConfig(paged=False, pipeline_admission=False)``
+reproduces the seed engine for A/B benchmarks.
+
+Performance counters: ``/serve{<name>}/requests/{submitted,completed}``,
+``/serve{<name>}/tokens/generated``, ``/serve{<name>}/step/duration``,
+``/serve{<name>}/request/{latency,first_token}``, plus the page-pool
+gauges from :mod:`repro.serve.kv_cache`.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +50,22 @@ import numpy as np
 from repro.core import agas as _agas
 from repro.core import counters as _counters
 from repro.core import scheduler as _sched
-from repro.core.future import Future, Promise
+from repro.core.future import Channel, Future, Promise
 from repro.models.model import Model
+
+_NEG = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls. ``temperature=0`` → greedy (exact
+    argmax, independent of top_k/top_p)."""
+    temperature: float = 0.0
+    top_k: int = 0      # 0 = disabled
+    top_p: float = 1.0  # 1.0 = disabled
+
+
+GREEDY = SamplingParams()
 
 
 @dataclass
@@ -42,20 +74,167 @@ class ServeConfig:
     cache_len: int = 256
     max_new_tokens: int = 32
     eos_id: int = -1  # -1: never stops early
+    # paged cache layer
+    paged: bool = True       # block-pool cache (KV families); dense fallback
+    page_size: int = 16
+    num_pages: int = 0       # 0 → auto: every slot can reach cache_len
+    # engine pipeline
+    pipeline_admission: bool = True  # False → seed-style inline prefill barrier
+    prefill_oversub: int = 2  # prefills in flight beyond free slots
+    idle_timeout: float = 0.05  # blocking queue wait when drained (no hot-spin)
+    # Counters are get-or-create by name: same-named engines *share* them
+    # (the seed's observability contract).  Replicas behind a Router must
+    # use distinct names or load() merges — Router.replicate does this.
+    name: str = "engine#0"
+    seed: int = 0
 
 
 @dataclass
 class _Request:
+    rid: int
     prompt: List[int]
     max_new: int
     promise: Promise
+    sampling: SamplingParams
+    stream: Optional[Channel]
     generated: List[int] = field(default_factory=list)
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
 
 
 def _cache_batch_axis(name: str) -> int:
     return 0 if name == "pos" else 1
 
 
+def sample_logits(logits: jax.Array, key: jax.Array, temp: jax.Array,
+                  topk: jax.Array, topp: jax.Array) -> jax.Array:
+    """Batched sampling, jit-safe with *per-row dynamic* controls.
+
+    logits: (B, V) fp32; temp/topp: (B,) fp32; topk: (B,) int32 (0 = off).
+    Rows with temp <= 0 return exact argmax.  top-k/top-p masks are
+    derived in sorted space (kth value / nucleus cutoff), so k and p vary
+    per row without shape changes → zero recompiles across admissions.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        t = jnp.where(temp > 0, temp, 1.0).astype(jnp.float32)
+        lg = logits.astype(jnp.float32) / t[:, None]
+        srt = jnp.sort(lg, axis=-1)[:, ::-1]  # descending
+        k_eff = jnp.where(topk > 0, topk, V).astype(jnp.int32)
+        kth = jnp.take_along_axis(srt, jnp.clip(k_eff[:, None] - 1, 0, V - 1),
+                                  axis=-1)  # (B, 1) value of the k-th logit
+        lg = jnp.where(lg < kth, _NEG, lg)
+        # nucleus: smallest sorted prefix with mass ≥ top_p (in the top-k set)
+        srt_k = jnp.where(jnp.arange(V)[None, :] < k_eff[:, None], srt, _NEG)
+        p_srt = jax.nn.softmax(srt_k, axis=-1)
+        excl = jnp.cumsum(p_srt, axis=-1) - p_srt
+        ncut = jnp.maximum(jnp.sum((excl < topp[:, None]).astype(jnp.int32),
+                                   axis=-1), 1)
+        cutoff = jnp.take_along_axis(srt_k, (ncut - 1)[:, None], axis=-1)
+        lg = jnp.where(lg < cutoff, _NEG, lg)
+        g = jax.random.gumbel(key, lg.shape, jnp.float32)
+        samp = jnp.argmax(lg + g, axis=-1).astype(jnp.int32)
+        return jnp.where(temp <= 0, greedy, samp)
+
+    # all-greedy batches (the common serving default) skip the sort entirely;
+    # lax.cond keeps it one compile either way
+    return jax.lax.cond(jnp.any(temp > 0), _sampled, lambda _: greedy, None)
+
+
+def _sample_host(logits: np.ndarray, sp: SamplingParams,
+                 rng: np.random.Generator) -> int:
+    """Host-side mirror of :func:`sample_logits` for the B=1 prefill token."""
+    if sp.temperature <= 0:
+        return int(np.argmax(logits))
+    lg = logits.astype(np.float64) / sp.temperature
+    srt = np.sort(lg)[::-1]
+    if sp.top_k > 0:
+        lg = np.where(lg < srt[min(sp.top_k, lg.size) - 1], _NEG, lg)
+        srt = np.where(np.arange(srt.size) < sp.top_k, srt, _NEG)
+    p = np.exp(srt - srt.max())
+    p /= p.sum()
+    excl = np.cumsum(p) - p
+    ncut = max(int((excl < sp.top_p).sum()), 1)
+    lg = np.where(lg < srt[ncut - 1], _NEG, lg)
+    return int(np.argmax(lg + rng.gumbel(size=lg.shape)))
+
+
+# --------------------------------------------------------------- backends
+class _DenseSlots:
+    """Seed-style dense per-slot cache: (L, max_batch, cache_len, KV, Dh)."""
+
+    def __init__(self, model: Model, scfg: ServeConfig,
+                 extra: Dict[str, Any]):
+        specs = model.cache_specs(scfg.max_batch, scfg.cache_len,
+                                  enc_len=extra.get("enc_len"))
+        self.cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+        self.gid = _agas.default().register(self.cache, name=None,
+                                            placement="host-engine")
+
+    def admit(self, slot: int, prefill_cache: Dict[str, jax.Array],
+              length: int) -> bool:
+        # self.cache is the AGAS-registered dict: update keys in place so
+        # the global view stays current (and the zero-init cache is freed)
+        self.cache.update({
+            k: v.at[(slice(None), slot) if _cache_batch_axis(k) == 1 else slot].set(
+                jnp.take(prefill_cache[k], 0, axis=_cache_batch_axis(k)))
+            for k, v in self.cache.items()
+        })
+        return True
+
+    def prepare_step(self, slot: int) -> bool:
+        return True
+
+    def release(self, slot: int) -> None:
+        pass
+
+    def device_cache(self) -> Dict[str, jax.Array]:
+        return self.cache
+
+    def commit(self, new_cache: Dict[str, jax.Array]) -> None:
+        self.cache.update(new_cache)
+
+    def step_bookkeeping(self, active: List[int]) -> None:
+        pass
+
+
+class _PagedSlots:
+    """Block-pool paged cache backend (see :mod:`repro.serve.kv_cache`)."""
+
+    def __init__(self, model: Model, scfg: ServeConfig):
+        from repro.serve.kv_cache import PagedKVCache
+
+        page = scfg.page_size
+        assert scfg.cache_len % page == 0, (scfg.cache_len, page)
+        maxp = scfg.cache_len // page
+        num_pages = scfg.num_pages or (scfg.max_batch * maxp + 1)
+        self.kv = PagedKVCache(model, num_pages=num_pages, page_size=page,
+                               max_batch=scfg.max_batch,
+                               max_pages_per_req=maxp, name=scfg.name)
+        self.gid = self.kv.gid
+
+    def admit(self, slot, prefill_cache, length):
+        return self.kv.admit(slot, prefill_cache, length)
+
+    def prepare_step(self, slot: int) -> bool:
+        return self.kv.ensure_next_token(slot)
+
+    def release(self, slot: int) -> None:
+        self.kv.release(slot)
+
+    def device_cache(self) -> Dict[str, jax.Array]:
+        return self.kv.device_cache()
+
+    def commit(self, new_cache: Dict[str, jax.Array]) -> None:
+        self.kv.update_pools(new_cache)
+
+    def step_bookkeeping(self, active: List[int]) -> None:
+        self.kv.pos[active] += 1
+
+
+# ----------------------------------------------------------------- engine
 class Engine:
     def __init__(self, model: Model, params: Dict[str, jax.Array],
                  scfg: ServeConfig, extra_inputs: Optional[Dict[str, Any]] = None):
@@ -64,48 +243,237 @@ class Engine:
         self.scfg = scfg
         self.extra = extra_inputs or {}
         B = scfg.max_batch
-        cache_specs = model.cache_specs(B, scfg.cache_len,
-                                        enc_len=self.extra.get("enc_len"))
-        self.cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in cache_specs.items()}
-        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.paged = scfg.paged and model.supports_paged
+        self.backend = (_PagedSlots(model, scfg) if self.paged
+                        else _DenseSlots(model, scfg, self.extra))
+        # bucketed (static-shape) prefill needs valid_len (transformer fams)
+        # and belongs to the pipelined stack — the seed-parity baseline keeps
+        # the seed's exact-length prefill (and its per-length recompiles)
+        self._bucketed = model.supports_paged and scfg.pipeline_admission
         self.slots: List[Optional[_Request]] = [None] * B
+        self._tokens = np.zeros((B, 1), np.int32)
+        self._temp = np.zeros((B,), np.float32)
+        self._topk = np.zeros((B,), np.int32)
+        self._topp = np.ones((B,), np.float32)
         self._queue: "queue.Queue[_Request]" = queue.Queue()
+        self._ready: List[Tuple[_Request, Dict[str, jax.Array], int, int]] = []
+        self._inflight_prefills = 0
+        self._work_event = threading.Event()  # prefill completion wakeup
         self._lock = threading.Lock()
         self._running = False
+        self._rid = 0
+        self._step_count = 0
+        self._key = jax.random.PRNGKey(scfg.seed)
 
         self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
 
         reg = _counters.default()
-        self.c_sub = reg.counter("/serve{engine#0}/requests/submitted")
-        self.c_done = reg.counter("/serve{engine#0}/requests/completed")
-        self.c_tok = reg.counter("/serve{engine#0}/tokens/generated")
-        self.t_step = reg.timer("/serve{engine#0}/step/duration")
-        self.gid = _agas.default().register(self.cache, name=None,
-                                            placement="host-engine")
+        n = scfg.name
+        self.c_sub = reg.counter(f"/serve{{{n}}}/requests/submitted")
+        self.c_done = reg.counter(f"/serve{{{n}}}/requests/completed")
+        self.c_tok = reg.counter(f"/serve{{{n}}}/tokens/generated")
+        self.t_step = reg.timer(f"/serve{{{n}}}/step/duration")
+        self.t_latency = reg.timer(f"/serve{{{n}}}/request/latency")
+        self.t_first = reg.timer(f"/serve{{{n}}}/request/first_token")
 
-    def _decode_fn(self, params, cache, token):
-        logits, new_cache = self.model.decode(params, cache, token)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # --------------------------------------------------------------- decode
+    def _decode_fn(self, params, cache, token, key, temp, topk, topp):
+        if self.paged:
+            logits, new_cache = self.model.decode_paged(params, cache, token)
+        else:
+            logits, new_cache = self.model.decode(params, cache, token)
+        nxt = sample_logits(logits, key, temp, topk, topp)[:, None]
         return nxt, new_cache
 
+    def decode_compile_count(self) -> int:
+        """Distinct decode-step compilations (bench asserts this stays at 1
+        after warmup — admission churn must never change step shapes)."""
+        return int(self._decode._cache_size())
+
     # ------------------------------------------------------------------ api
-    def submit(self, prompt: List[int], max_new: Optional[int] = None) -> Future:
-        """One-sided request: returns Future[List[int]] of generated ids."""
-        req = _Request(list(prompt), max_new or self.scfg.max_new_tokens, Promise())
+    def submit(self, prompt: List[int], max_new: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               stream: Optional[Channel] = None) -> Future:
+        """One-sided request → Future[List[int]] of generated ids.
+
+        ``stream``: optional :class:`Channel` — every generated token is
+        ``set()`` the step it is sampled (first token before the request
+        completes) and the channel closes when the request finishes.
+        """
+        with self._lock:
+            self._rid += 1
+            rid = self._rid
+        req = _Request(rid, list(prompt),
+                       self.scfg.max_new_tokens if max_new is None else max_new,
+                       Promise(), sampling or GREEDY, stream,
+                       submit_t=time.perf_counter())
         self._queue.put(req)
         self.c_sub.increment()
         self._ensure_running()
         return req.promise.future()
 
+    def submit_stream(self, prompt: List[int], max_new: Optional[int] = None,
+                      sampling: Optional[SamplingParams] = None
+                      ) -> Tuple[Channel, Future]:
+        ch: Channel = Channel()
+        return ch, self.submit(prompt, max_new, sampling, stream=ch)
+
+    def load(self) -> float:
+        """In-flight requests (queued + prefilling + decoding) — the
+        router's least-loaded dispatch metric."""
+        return self.c_sub.get_value() - self.c_done.get_value()
+
     def _ensure_running(self) -> None:
         with self._lock:
             if not self._running:
                 self._running = True
-                _sched.get_runtime().spawn_raw(self._loop)
+                _sched.get_runtime().spawn_raw(self._step)
 
-    # ----------------------------------------------------------------- loop
-    def _admit(self) -> None:
+    # ------------------------------------------------------------ admission
+    def _bucket_for(self, n: int) -> int:
+        """Smallest power-of-two bucket (≥ page_size) covering n, clamped to
+        cache_len — static prefill shapes, no per-length recompiles."""
+        b = max(self.scfg.page_size, 8)
+        while b < n:
+            b *= 2
+        return min(b, self.scfg.cache_len)
+
+    def _run_prefill(self, req: _Request):
+        """Compute the request's KV cache + first token (any thread)."""
+        prompt = req.prompt
+        if self.model.cfg.family == "vlm" and len(prompt) < self.model.cfg.n_patches:
+            # patches occupy the first n_patches positions; a shorter prompt
+            # would read logits from inside the patch region — fail loudly
+            raise ValueError(f"vlm prompt needs ≥ {self.model.cfg.n_patches} "
+                             f"tokens, got {len(prompt)}")
+        pextra = {k: v for k, v in self.extra.items() if k != "enc_len"}
+        if self._bucketed:
+            bucket = self._bucket_for(len(prompt))
+            assert len(prompt) <= bucket, (len(prompt), self.scfg.cache_len)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, : len(prompt)] = prompt
+            pin = {"tokens": jnp.asarray(toks), **pextra}
+            cache_len = bucket if self.paged else self.scfg.cache_len
+            logits, cache1 = self._prefill(
+                self.params, pin, cache_len=cache_len,
+                valid_len=jnp.asarray([len(prompt)], jnp.int32))
+        else:
+            pin = {"tokens": jnp.asarray(prompt, jnp.int32)[None, :], **pextra}
+            logits, cache1 = self._prefill(self.params, pin,
+                                           cache_len=self.scfg.cache_len)
+        rng = np.random.default_rng((self.scfg.seed << 20) ^ req.rid)
+        tok0 = _sample_host(np.asarray(logits[0], np.float32), req.sampling, rng)
+        return req, cache1, len(prompt), tok0
+
+    def _prefill_task(self, req: _Request) -> None:
+        try:
+            payload = self._run_prefill(req)
+        except BaseException as e:  # noqa: BLE001 — fail the one request
+            with self._lock:
+                self._inflight_prefills -= 1
+            if req.stream is not None:
+                req.stream.close()
+            self.c_done.increment()  # terminated: keep load() = in-flight
+            req.promise.set_exception(e)
+            self._work_event.set()
+            return
+        with self._lock:
+            self._ready.append(payload)
+            self._inflight_prefills -= 1
+        self._work_event.set()
+        self._ensure_running()
+
+    def _pump_prefills(self) -> None:
+        """Spawn PRIORITY_HIGH prefill tasks for queued requests, keeping a
+        bounded oversubscription so integration always has work ready."""
+        while True:
+            with self._lock:
+                active = sum(s is not None for s in self.slots)
+                budget = (self.scfg.max_batch - active
+                          + self.scfg.prefill_oversub
+                          - self._inflight_prefills - len(self._ready))
+            if budget <= 0:
+                return
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            self._spawn_prefill(req)
+
+    def _spawn_prefill(self, req: _Request) -> None:
+        with self._lock:
+            self._inflight_prefills += 1
+        _sched.get_runtime().spawn_raw(lambda: self._prefill_task(req),
+                                       priority=_sched.PRIORITY_HIGH)
+
+    # ---------------------------------------------------------- integration
+    def _emit(self, req: _Request, tok: int) -> None:
+        req.generated.append(tok)
+        self.c_tok.increment()
+        if not req.first_token_t:
+            req.first_token_t = time.perf_counter()
+            self.t_first.add(req.first_token_t - req.submit_t)
+        if req.stream is not None:
+            req.stream.set(tok)
+
+    def _finish(self, i: int) -> None:
+        req = self.slots[i]
+        self.slots[i] = None
+        self.backend.release(i)
+        self._temp[i], self._topk[i], self._topp[i] = 0.0, 0, 1.0
+        self.c_done.increment()
+        self.t_latency.add(time.perf_counter() - req.submit_t)
+        if req.stream is not None:
+            req.stream.close()
+        req.promise.set_value(req.generated)
+
+    def _done_after(self, req: _Request, tok: int) -> bool:
+        return (len(req.generated) >= req.max_new + 1
+                or tok == self.scfg.eos_id)
+
+    def _bind_slot(self, i: int, req: _Request, tok0: int) -> None:
+        """Occupy slot ``i`` with an admitted request and emit its prefill
+        token (shared by the pipelined and inline admission paths)."""
+        self.slots[i] = req
+        self._tokens[i, 0] = tok0
+        self._temp[i] = req.sampling.temperature
+        self._topk[i] = req.sampling.top_k
+        self._topp[i] = req.sampling.top_p
+        self._emit(req, tok0)
+        if self._done_after(req, tok0):
+            self._finish(i)
+
+    def _integrate_ready(self) -> None:
+        while True:
+            free = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if free is None:
+                return
+            with self._lock:
+                if not self._ready:
+                    return
+                payload = self._ready.pop(0)
+            req, cache1, length, tok0 = payload
+            if not self.backend.admit(free, cache1, length):
+                if not any(s is not None for s in self.slots):
+                    # nothing active will ever free pages → fail the request
+                    # instead of wedging the head of the ready queue
+                    if req.stream is not None:
+                        req.stream.close()
+                    req.promise.set_exception(RuntimeError(
+                        f"request {req.rid}: {length} prompt tokens exceed "
+                        f"page-pool capacity"))
+                    self.c_done.increment()
+                    continue
+                with self._lock:  # pool exhausted — retry after completions
+                    self._ready.insert(0, payload)
+                return
+            self._bind_slot(free, req, tok0)
+
+    def _admit_inline(self) -> None:
+        """Seed-style admission: prefill runs inside the decode loop (the
+        barrier).  Kept as the A/B baseline (pipeline_admission=False)."""
+        self._integrate_ready()  # admit-failure retries parked in _ready
         for i, slot in enumerate(self.slots):
             if slot is not None:
                 continue
@@ -113,48 +481,81 @@ class Engine:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 return
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            pin = {"tokens": prompt, **{k: v for k, v in self.extra.items()
-                                        if k not in ("enc_len",)}}
-            logits1, cache1 = self._prefill(self.params, pin,
-                                            cache_len=self.scfg.cache_len)
-            first = int(jnp.argmax(logits1, axis=-1)[0])
-            # migrate the single-request cache into slot i of the batch cache
-            self.cache = {
-                k: v.at[(slice(None), i) if _cache_batch_axis(k) == 1 else i].set(
-                    jnp.take(cache1[k], 0, axis=_cache_batch_axis(k)))
-                for k, v in self.cache.items()
-            }
-            self.tokens = self.tokens.at[i, 0].set(first)
-            req.generated.append(first)
-            self.c_tok.increment()
-            self.slots[i] = req
-
-    def _finish(self, i: int) -> None:
-        req = self.slots[i]
-        self.slots[i] = None
-        self.c_done.increment()
-        req.promise.set_value(req.generated)
-
-    def _loop(self) -> None:
-        while True:
-            self._admit()
-            active = [i for i, s in enumerate(self.slots) if s is not None]
-            if not active:
-                with self._lock:
-                    if self._queue.empty():
-                        self._running = False
-                        return
+            try:
+                req2, cache1, length, tok0 = self._run_prefill(req)
+            except BaseException as e:  # noqa: BLE001 — fail the one request
+                if req.stream is not None:
+                    req.stream.close()
+                self.c_done.increment()
+                req.promise.set_exception(e)
                 continue
-            with self.t_step.time():
-                self.tokens, self.cache = self._decode(self.params, self.cache,
-                                                       self.tokens)
-                toks = np.asarray(self.tokens[:, 0])
-            for i in active:
-                req = self.slots[i]
-                tok = int(toks[i])
-                req.generated.append(tok)
-                self.c_tok.increment()
-                done = len(req.generated) >= req.max_new + 1 or tok == self.scfg.eos_id
-                if done:
-                    self._finish(i)
+            if not self.backend.admit(i, cache1, length):
+                with self._lock:
+                    self._ready.insert(0, (req2, cache1, length, tok0))
+                return
+            self._bind_slot(i, req2, tok0)
+
+    # ----------------------------------------------------------------- loop
+    def _idle_or_stop(self) -> bool:
+        """No active slots: block briefly on the queue (no hot-spin burning a
+        worker) and decide whether the continuation chain ends."""
+        with self._lock:
+            waiting_on_prefill = bool(self._ready) or self._inflight_prefills > 0
+        if waiting_on_prefill:  # integration work is coming — nap, don't spin
+            self._work_event.wait(0.005)
+            self._work_event.clear()
+            return False
+        try:
+            req = self._queue.get(timeout=self.scfg.idle_timeout)
+        except queue.Empty:
+            with self._lock:
+                if (self._queue.empty() and not self._ready
+                        and self._inflight_prefills == 0):
+                    self._running = False  # chain ends; submit() restarts it
+                    return True
+            return False
+        if self.scfg.pipeline_admission:
+            self._spawn_prefill(req)
+        else:
+            self._queue.put(req)  # inline admission pops it next iteration
+        return False
+
+    def _step(self) -> None:
+        """One link of the decode continuation chain."""
+        if self.scfg.pipeline_admission:
+            self._pump_prefills()
+            self._integrate_ready()
+        else:
+            self._admit_inline()
+
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        for i in list(active):
+            if not self.backend.prepare_step(i):  # can't grow: page capacity
+                self._finish(i)
+                active.remove(i)
+
+        if not active:
+            if self._idle_or_stop():
+                return
+            _sched.get_runtime().spawn_raw(self._step)
+            return
+
+        with self.t_step.time():
+            key = jax.random.fold_in(self._key, self._step_count)
+            nxt, new_cache = self._decode(
+                self.params, self.backend.device_cache(),
+                jnp.asarray(self._tokens), key,
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp))
+            self.backend.commit(new_cache)
+            toks = np.asarray(nxt[:, 0])
+        self._step_count += 1
+        self.backend.step_bookkeeping(active)
+        self._tokens[:, 0] = toks
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            self._emit(req, tok)
+            if self._done_after(req, tok):
+                self._finish(i)
+        _sched.get_runtime().spawn_raw(self._step)  # continuation chain

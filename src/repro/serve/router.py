@@ -1,0 +1,80 @@
+"""Multi-engine router: least-loaded dispatch over engine replicas.
+
+Scaling past one engine means scaling past one decode chain: each
+:class:`~repro.serve.engine.Engine` replica owns its own page pool, decode
+continuation chain and performance counters, and the router is the only
+coordination point.  Dispatch follows the message-cost lens of the HPX+LCI
+study (PAPERS.md): the decision reads *locally cached* counters
+(``submitted - completed`` per replica — the engines already publish them)
+so routing a request costs zero extra messages; there is no global queue,
+no barrier, and replicas never talk to each other.  This is the paper's
+"decentralized control flow" one level up from the scheduler.
+
+Replicas share the (read-only) model parameters — on TPU they would be
+distinct meshes or pods; on host they are independent engines interleaving
+on the AMT runtime's workers.
+
+Counters::
+
+    /serve{router}/requests/dispatched           cumulative
+    /serve{router}/dispatch/<engine-name>        cumulative per replica
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import counters as _counters
+from repro.core.future import Channel, Future
+from repro.models.model import Model
+from repro.serve.engine import Engine, SamplingParams, ServeConfig
+
+
+class Router:
+    def __init__(self, engines: List[Engine]):
+        assert engines, "router needs at least one engine"
+        self.engines = engines
+        reg = _counters.default()
+        self.c_dispatched = reg.counter("/serve{router}/requests/dispatched")
+        self._c_per_engine = [
+            reg.counter(f"/serve{{router}}/dispatch/{e.scfg.name}")
+            for e in engines
+        ]
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def replicate(cls, model: Model, params: Dict[str, jax.Array],
+                  scfg: ServeConfig, replicas: int,
+                  extra_inputs: Optional[Dict[str, Any]] = None) -> "Router":
+        """N engine replicas named ``engine#0..N-1`` over shared params."""
+        engines = []
+        for i in range(replicas):
+            cfg_i = ServeConfig(**{**scfg.__dict__, "name": f"engine#{i}"})
+            engines.append(Engine(model, params, cfg_i,
+                                  extra_inputs=extra_inputs))
+        return cls(engines)
+
+    # ------------------------------------------------------------ dispatch
+    def loads(self) -> List[float]:
+        return [e.load() for e in self.engines]
+
+    def pick(self) -> int:
+        """Least-loaded replica (first wins ties — stable under no load)."""
+        loads = self.loads()
+        return min(range(len(loads)), key=lambda i: loads[i])
+
+    def submit(self, prompt: List[int], max_new: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               stream: Optional[Channel] = None) -> Future:
+        i = self.pick()
+        self.c_dispatched.increment()
+        self._c_per_engine[i].increment()
+        return self.engines[i].submit(prompt, max_new, sampling, stream)
+
+    def submit_stream(self, prompt: List[int], max_new: Optional[int] = None,
+                      sampling: Optional[SamplingParams] = None
+                      ) -> Tuple[Channel, Future]:
+        ch: Channel = Channel()
+        return ch, self.submit(prompt, max_new, sampling, stream=ch)

@@ -1,0 +1,67 @@
+"""Channel (hpx::lcos::channel): ordered streaming, close-on-finish."""
+import threading
+
+import pytest
+
+from repro.core.future import Channel, ChannelClosed
+
+
+def test_channel_fifo_ordering():
+    ch = Channel()
+    for i in range(5):
+        ch.set(i)
+    assert [ch.get(timeout=1) for _ in range(5)] == [0, 1, 2, 3, 4]
+
+
+def test_channel_get_future_before_set():
+    ch = Channel()
+    f = ch.get_future()
+    assert not f.is_ready()
+    ch.set(42)
+    assert f.get(timeout=1) == 42
+
+
+def test_channel_close_drains_then_raises():
+    ch = Channel()
+    ch.set(1)
+    ch.set(2)
+    ch.close()
+    assert ch.get(timeout=1) == 1  # buffered values survive close
+    assert ch.get(timeout=1) == 2
+    with pytest.raises(ChannelClosed):
+        ch.get(timeout=1)
+    with pytest.raises(ChannelClosed):
+        ch.set(3)
+
+
+def test_channel_iteration_stops_at_close():
+    ch = Channel()
+    for i in range(3):
+        ch.set(i)
+    ch.close()
+    assert list(ch) == [0, 1, 2]
+
+
+def test_channel_close_wakes_blocked_waiters():
+    ch = Channel()
+    f = ch.get_future()
+    ch.close()
+    assert f.has_exception()
+    with pytest.raises(ChannelClosed):
+        f.get(timeout=1)
+
+
+def test_channel_cross_thread_stream():
+    ch = Channel()
+    got = []
+
+    def consumer():
+        got.extend(ch)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    for i in range(20):
+        ch.set(i)
+    ch.close()
+    t.join(timeout=5)
+    assert got == list(range(20))

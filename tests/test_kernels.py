@@ -58,6 +58,71 @@ def test_decode_attention_sweep(B, T, H, KV, Dh, length, dtype):
                                np.asarray(e, np.float32), atol=_tol(dtype) * 4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_per_row_lengths(dtype):
+    """The seed bug: one scalar length masked every row, so slots at
+    different fill depths attended over stale/zero KV.  A (B,) vector must
+    match the oracle row-by-row."""
+    B, T, H, KV, Dh = 4, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, Dh), dtype)
+    lens = jnp.asarray([1, 17, 100, 256], jnp.int32)
+    o = ops.decode_attention(q, k, v, lens)
+    e = ref.decode_mha(q, k, v, length=lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(e, np.float32), atol=_tol(dtype) * 4)
+    # divergence is real: the scalar path at max(lens) differs on short rows
+    o_scalar = ops.decode_attention(q, k, v, jnp.asarray(256))
+    assert not np.allclose(np.asarray(o, np.float32)[0],
+                           np.asarray(o_scalar, np.float32)[0])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,Dh,page,maxp", [
+    (3, 4, 2, 64, 32, 8),   # GQA
+    (2, 8, 8, 32, 16, 4),   # MHA, small pages
+    (1, 8, 1, 64, 64, 4),   # MQA
+])
+def test_paged_decode_attention_matches_oracle(B, H, KV, Dh, page, maxp, dtype):
+    """Paged kernel walking shuffled per-request page lists == dense oracle."""
+    T = page * maxp
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, Dh), dtype)
+    rng = np.random.default_rng(0)
+    P = B * maxp + 3  # pool with spare pages; page 0 reserved
+    perm = 1 + rng.permutation(P - 1)[: B * maxp].reshape(B, maxp)
+    k_pages = np.zeros((P, page, KV, Dh), np.float32)
+    v_pages = np.zeros((P, page, KV, Dh), np.float32)
+    for b in range(B):
+        for j in range(maxp):
+            k_pages[perm[b, j]] = np.asarray(k[b, j * page:(j + 1) * page], np.float32)
+            v_pages[perm[b, j]] = np.asarray(v[b, j * page:(j + 1) * page], np.float32)
+    lens = jnp.asarray(rng.integers(1, T + 1, size=B), jnp.int32)
+    o = ops.paged_decode_attention(q, jnp.asarray(k_pages, dtype),
+                                   jnp.asarray(v_pages, dtype),
+                                   jnp.asarray(perm, jnp.int32), lens)
+    e = ref.decode_mha(q, k, v, length=lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(e, np.float32), atol=_tol(dtype) * 4)
+
+
+def test_gather_paged_kv_roundtrip():
+    P, page, KV, Dh, B, maxp = 10, 16, 2, 32, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(10), 2)
+    k_pages = jax.random.normal(ks[0], (P, page, KV, Dh))
+    v_pages = jax.random.normal(ks[1], (P, page, KV, Dh))
+    pt = jnp.asarray([[1, 3, 5, 7], [2, 4, 6, 8]], jnp.int32)
+    kg, vg = ops.gather_paged_kv(k_pages, v_pages, pt)
+    assert kg.shape == (B, maxp * page, KV, Dh)
+    np.testing.assert_array_equal(np.asarray(kg[0, :page]), np.asarray(k_pages[1]))
+    np.testing.assert_array_equal(np.asarray(vg[1, page:2 * page]),
+                                  np.asarray(v_pages[4]))
+
+
 @pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
     (1, 128, 2, 16, 1, 16, 32),
     (2, 96, 4, 16, 2, 32, 32),   # GQA-style groups + padding (96 % 32 == 0)

@@ -1,0 +1,186 @@
+"""Paged continuous-batching serving stack: per-slot divergence, page-pool
+reuse, streaming, sampling, routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.future import Channel, ChannelClosed
+from repro.dist.plan import get_plan
+from repro.models.model import build_model
+from repro.serve.engine import Engine, SamplingParams, ServeConfig
+from repro.serve.router import Router
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("starcoder2_3b", smoke=True)
+    model = build_model(cfg, get_plan("futurized"))
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _manual_greedy(model, params, prompt, n):
+    pin = {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]}
+    logits, cache = jax.jit(model.prefill, static_argnames=("cache_len",))(
+        params, pin, cache_len=96)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    dec = jax.jit(model.decode)
+    for _ in range(n):
+        logits, cache = dec(params, cache, jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    return out
+
+
+def _truncate_at_eos(toks, eos):
+    out = []
+    for t in toks:
+        out.append(t)
+        if t == eos:
+            break
+    return out
+
+
+def test_per_slot_length_divergence(rt, served):
+    """Requests with different max_new share the batch; every slot must
+    match its own reference decode (per-row lengths in the kernel)."""
+    cfg, model, params = served
+    prompts = [[5, 6, 7, 8], [100, 3, 50, 2, 9, 11], [42, 7]]
+    new = [2, 7, 4]
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=8))
+    futs = [eng.submit(p, max_new=n) for p, n in zip(prompts, new)]
+    outs = [f.get(timeout=300) for f in futs]
+    for p, n, o in zip(prompts, new, outs):
+        assert o == _manual_greedy(model, params, p, n), (p, n)
+
+
+def test_per_slot_eos_divergence(rt, served):
+    """EOS ends one slot early while its batch-mates continue exactly."""
+    cfg, model, params = served
+    pa, pb = [5, 6, 7, 8], [100, 3, 50, 2, 9, 11]
+    n = 6
+    ra = _manual_greedy(model, params, pa, n)
+    rb = _manual_greedy(model, params, pb, n)
+    # pick an eos whose *first* occurrence in ra is mid-sequence
+    k = next(i for i in range(1, n) if ra[i] not in ra[:i])
+    eos = ra[k]
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=n, eos_id=eos))
+    fa = eng.submit(pa)
+    fb = eng.submit(pb)
+    assert fa.get(timeout=300) == _truncate_at_eos(ra, eos)
+    assert fb.get(timeout=300) == _truncate_at_eos(rb, eos)
+    assert len(fa.get()) == k + 1 < n + 1  # ended early, batch-mate exact
+
+
+def test_paged_free_list_reuse_under_churn(rt, served):
+    """Admission churn cycles pages through the free list: cumulative
+    allocations exceed pool capacity (reuse) and everything returns."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=64,
+                                            max_new_tokens=3, page_size=16,
+                                            name="churn#0"))
+    kv = eng.backend.kv
+    futs = [eng.submit(list(range(1, 2 + i % 17))) for i in range(9)]
+    outs = [f.get(timeout=300) for f in futs]
+    assert all(len(o) == 4 for o in outs)
+    assert kv.pages_in_use() == 0
+    assert kv.free_pages() == kv.num_pages - 1
+    assert eng.c_sub.get_value() - eng.c_done.get_value() == 0
+    from repro.core import counters
+    assert counters.get_value("/serve{churn#0}/pages/allocated") > kv.num_pages - 1
+    assert (counters.get_value("/serve{churn#0}/pages/allocated")
+            == counters.get_value("/serve{churn#0}/pages/freed"))
+
+
+def test_stream_channel_order_and_close(rt, served):
+    """Streamed tokens arrive in generation order, the first before the
+    request completes, and the channel closes on finish."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=16))
+    ch, fut = eng.submit_stream([5, 6, 7, 8])
+    # 16 decode steps (seconds) remain when the first token arrives — wide
+    # margin against scheduler jitter on a loaded CI machine
+    first = ch.get(timeout=300)
+    assert not fut.is_ready(), "first token must stream before completion"
+    rest = list(ch)
+    out = fut.get(timeout=300)
+    assert [first] + rest == out
+    with pytest.raises(ChannelClosed):
+        ch.get(timeout=1)
+
+
+def test_greedy_sampling_equivalence_at_t0(rt, served):
+    """temperature=0 reduces to exact argmax regardless of top-k/top-p."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=5))
+    p = [9, 8, 7, 6]
+    o_plain = eng.submit(p).get(timeout=300)
+    o_t0 = eng.submit(p, sampling=SamplingParams(temperature=0.0, top_k=7,
+                                                 top_p=0.5)).get(timeout=300)
+    assert o_plain == o_t0 == _manual_greedy(model, params, p, 5)
+
+
+def test_sampling_respects_top_k(rt, served):
+    """Sampled tokens with top_k=1 are exactly the greedy sequence (the
+    nucleus of one); higher temperature still yields valid token ids."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=4))
+    p = [5, 6, 7, 8]
+    o_k1 = eng.submit(p, sampling=SamplingParams(temperature=0.7, top_k=1)
+                      ).get(timeout=300)
+    assert o_k1 == _manual_greedy(model, params, p, 4)
+    o_hot = eng.submit(p, sampling=SamplingParams(temperature=1.2, top_k=20)
+                       ).get(timeout=300)
+    assert all(0 <= t < cfg.vocab_size for t in o_hot)
+
+
+def test_router_least_loaded_dispatch(rt, served):
+    """The router reads per-engine in-flight counters and avoids the busy
+    replica."""
+    cfg, model, params = served
+    scfg = ServeConfig(max_batch=2, cache_len=64, max_new_tokens=2)
+    router = Router.replicate(model, params, scfg, 2)
+    e0, e1 = router.engines
+    assert router.pick() == 0  # ties → first
+    e0.c_sub.increment(3)  # fake 3 in-flight requests on replica 0
+    assert e0.load() == 3 and e1.load() == 0
+    assert router.pick() == 1
+    out = router.submit([4, 5, 6]).get(timeout=300)
+    assert len(out) == 3
+    from repro.core import counters
+    assert counters.get_value("/serve{router}/dispatch/engine#1") >= 1
+    assert counters.get_value("/serve{engine#1}/requests/completed") >= 1
+    e0.c_sub.increment(-3)  # restore
+
+
+def test_seed_parity_mode_matches_greedy(rt, served):
+    """The A/B baseline (dense cache + inline-prefill barrier) still
+    produces exact greedy tokens — the bench compares against it."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=96,
+                                            max_new_tokens=4, paged=False,
+                                            pipeline_admission=False))
+    assert not eng.paged
+    p = [11, 12, 13]
+    assert eng.submit(p).get(timeout=300) == _manual_greedy(model, params, p, 4)
+
+
+def test_decode_step_compiles_once(rt, served):
+    """Admission churn (different prompt lengths, sampling params, EOS
+    timings) never changes decode-step shapes: one compile, total."""
+    cfg, model, params = served
+    eng = Engine(model, params, ServeConfig(max_batch=2, cache_len=64,
+                                            max_new_tokens=3))
+    futs = [eng.submit(list(range(1, 2 + i)),
+                       sampling=SamplingParams(temperature=0.5 * (i % 2),
+                                               top_k=i))
+            for i in range(5)]
+    for f in futs:
+        f.get(timeout=300)
+    assert eng.decode_compile_count() == 1
