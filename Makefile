@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-serve smoke
+.PHONY: verify test bench bench-serve bench-algorithms smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -17,6 +17,9 @@ bench:
 
 bench-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serve
+
+bench-algorithms:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_algorithms
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

@@ -7,12 +7,13 @@ import jax.numpy as jnp
 import repro.core as core
 from repro.core import algorithms as alg
 from repro.core.dataflow import TaskGraph, dataflow, futurize
-from repro.core.executor import par, vec
+from repro.core.executor import par, par_task, vec
 
 
 def main() -> None:
-    # hpx::init — bring up the runtime (work-stealing 'local' policy)
-    core.init(num_workers=4, policy="local")
+    # hpx::init — the resource partitioner carves workers into named pools
+    # (compute on "default", host I/O progress on "io")
+    core.init(policy="local", pools={"default": 4, "io": 1})
 
     # 1. futures: wait-free asynchronous execution --------------------------
     f = core.spawn(lambda: 21)
@@ -38,8 +39,13 @@ def main() -> None:
     print("task graph:", graph.run()["c"].get())  # 10
 
     # 3. parallel algorithms with execution policies (C++17 style) ----------
+    #    policies are pure rewrites: .on(executor) binds resources,
+    #    .with_() tunes parameters, par_task returns Futures (two-way)
     data = list(range(1_000))
     print("par reduce:", alg.reduce(par, data))
+    io_bound = par.on(core.get_runtime().get_executor("io")).with_(chunk_size=250)
+    print("reduce on the io pool:", alg.reduce(io_bound, data))
+    print("par_task sort is a Future:", alg.sort(par_task, [3, 1, 2]).get())
     print("vec transform_reduce:",
           int(alg.transform_reduce(vec, jnp.arange(1_000), lambda x: x * x)))
 
@@ -49,8 +55,10 @@ def main() -> None:
                             "/demo/model", 2.0)
     print("parcel result:", fut.get())  # 32.0
 
-    # 5. performance counters (APEX style) ----------------------------------
-    for name, value in core.counters.query("/scheduler{pool#0}/tasks/*"):
+    # 5. performance counters (APEX style, per pool) ------------------------
+    for name, value in core.counters.query("/scheduler{default}/tasks/*"):
+        print(f"counter {name} = {value:.0f}")
+    for name, value in core.counters.query("/scheduler{io}/tasks/executed"):
         print(f"counter {name} = {value:.0f}")
 
     core.finalize()

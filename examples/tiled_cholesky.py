@@ -37,7 +37,7 @@ def main() -> None:
     print(f"N={N} tile={tile} ({n_tiles} tiles) in {dt * 1e3:.1f} ms, "
           f"reconstruction rel err {err:.2e}")
     print("tasks executed:",
-          int(core.counters.get_value("/scheduler{pool#0}/tasks/executed")))
+          int(core.counters.get_value("/scheduler{default}/tasks/executed")))
     core.finalize()
 
 

@@ -4,8 +4,9 @@ Fault-tolerance story (DESIGN.md §5):
 
 - **async save** — ``save_async`` snapshots device arrays to host
   (``jax.device_get`` waits only for the values, not the trainer) and
-  writes .npy files from a scheduler task; the train loop keeps dispatching
-  while I/O runs (overlap, P1/P2).
+  writes .npy files from a task on the resource partitioner's "io" pool;
+  the train loop keeps dispatching while I/O runs (overlap, P1/P2) and
+  disk writes never steal compute-pool slots.
 - **elastic restore** — a checkpoint written on mesh A restores onto mesh B
   with different device count/topology: leaves are loaded host-side and
   ``device_put`` against B's shardings (AGAS migration with the filesystem
@@ -27,7 +28,7 @@ import jax
 import numpy as np
 
 from repro.core import counters as _counters
-from repro.core import scheduler as _sched
+from repro.core import executor as _executor
 from repro.core.future import Future
 
 
@@ -88,13 +89,14 @@ def save(ckpt_dir: Path, step: int, state: Dict[str, Any]) -> Path:
 
 
 def save_async(ckpt_dir: Path, step: int, state: Dict[str, Any]) -> Future:
-    """Snapshot to host now; write from an AMT task (trainer keeps going)."""
+    """Snapshot to host now; write from the resource partitioner's "io"
+    pool (trainer keeps going; disk I/O never steals compute slots)."""
     host = jax.device_get(_flatten(state))  # snapshot before mutation
 
     def _write() -> Path:
         return save(ckpt_dir, step, _unflatten(host))
 
-    return _sched.get_runtime().spawn(_write)
+    return _executor.get_executor("io", fallback="default").async_execute(_write)
 
 
 def latest_step(ckpt_dir: Path) -> Optional[int]:

@@ -15,6 +15,15 @@ Surface mirrors HPX:
 
 from repro.core import agas, algorithms, counters, executor, migration, parcel
 from repro.core.dataflow import TaskGraph, dataflow, futurize
+from repro.core.executor import (
+    ExecutionPolicy,
+    Executor,
+    MeshExecutor,
+    PriorityExecutor,
+    SequencedExecutor,
+    ThreadPoolExecutor,
+    get_executor,
+)
 from repro.core.future import (
     Channel,
     ChannelClosed,
@@ -33,6 +42,7 @@ from repro.core.scheduler import (
     PRIORITY_LOW,
     PRIORITY_NORMAL,
     Runtime,
+    ThreadPool,
     async_,
     current_runtime,
     finalize,
@@ -44,9 +54,12 @@ from repro.core.scheduler import (
 __all__ = [
     "agas", "algorithms", "counters", "executor", "migration", "parcel",
     "TaskGraph", "dataflow", "futurize",
+    "ExecutionPolicy", "Executor", "MeshExecutor", "PriorityExecutor",
+    "SequencedExecutor", "ThreadPoolExecutor", "get_executor",
     "Channel", "ChannelClosed",
     "Future", "FutureError", "Promise", "make_exceptional_future",
     "make_ready_future", "unwrap", "wait_all", "when_all", "when_any",
-    "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL", "Runtime", "async_",
+    "PRIORITY_HIGH", "PRIORITY_LOW", "PRIORITY_NORMAL", "Runtime",
+    "ThreadPool", "async_",
     "current_runtime", "finalize", "get_runtime", "init", "spawn",
 ]

@@ -1,4 +1,4 @@
-"""C++17-style parallel algorithms with execution policies (HPX P6).
+"""C++17-style parallel algorithms over the executor hierarchy (HPX P6).
 
 The paper: C++17 "support for parallel algorithms was added, which
 coincidentally covers the need for data parallel algorithms"; HPX provides
@@ -7,18 +7,26 @@ the reference implementation.  We provide the JAX analogue:
     for_each, transform, reduce, transform_reduce, inclusive_scan,
     exclusive_scan, sort, count_if, all_of/any_of, copy
 
-Each takes an :class:`~repro.core.executor.ExecutionPolicy`:
+Each takes an :class:`~repro.core.executor.ExecutionPolicy`; the policy is
+a pure rewrite object and every lowering dispatches through the bound
+executor's ``bulk_async_execute``:
 
-- ``seq``  — plain Python/jnp loop (specification oracle);
-- ``par``  — chunks dispatched as AMT scheduler tasks (host parallel);
-- ``vec``  — jnp/vmap vectorized;
-- ``mesh`` — input sharded over a mesh axis; the body runs on-device
-  per shard, reductions finish with the matching collective.  This is the
-  device-plane data-parallel executor of DESIGN.md §2.
+- ``seq``      — one chunk on a :class:`SequencedExecutor` (the oracle);
+- ``par``      — chunks on a :class:`ThreadPoolExecutor` (named pool of the
+  resource partitioner; ``par.on(rt.get_executor("io"))`` redirects);
+- ``par_task`` — same lowering, *two-way*: returns a ``Future`` instead of
+  joining (HPX ``par(task)``);
+- ``vec``      — vectorized via ``jax.vmap`` / jnp.  Non-traceable bodies
+  raise instead of silently degrading to a host loop;
+- ``vec.on(MeshExecutor(mesh, axis))`` — device plane: input sharded over a
+  mesh axis, bodies run per shard, reductions finish with the matching
+  collective (DESIGN.md §3.1).
 
-All algorithms return *values* under ``seq``/``vec``/``mesh`` and under
-``par`` as well (they internally join their tasks): parallelism is an
-implementation detail of the algorithm, exactly the C++ standard's stance.
+Under vec/mesh, binary ``op`` arguments must be jax-traceable and combine
+*batched slices elementwise* (``operator.add``, ``operator.mul``,
+``jnp.minimum``, element-batched ``jnp.matmul``, …) — exactly
+``jax.lax.associative_scan``'s combinator contract.  Host-only ops belong
+under ``seq``/``par``; passing them here raises loudly.
 """
 
 from __future__ import annotations
@@ -31,126 +39,242 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import scheduler as _sched
-from repro.core.executor import ExecutionPolicy, par, seq, vec
-from repro.core.future import wait_all
+from repro.core.executor import (
+    ExecutionPolicy,
+    Executor,
+    MeshExecutor,
+    PriorityExecutor,
+    SequencedExecutor,
+    ThreadPoolExecutor,
+    par,
+    par_task,
+    seq,
+    seq_task,
+    vec,
+)
+from repro.core.future import Future, Promise, make_ready_future, when_all
+
+_SEQ_EXEC = SequencedExecutor()
+
+
+# ------------------------------------------------------------------ dispatch
+def _as_policy(policy: Any) -> ExecutionPolicy:
+    if isinstance(policy, ExecutionPolicy):
+        return policy
+    raise TypeError(
+        f"expected an ExecutionPolicy (seq/par/par_task/vec or "
+        f"policy.on(executor)), got {policy!r}")
+
+
+def _mode(policy: ExecutionPolicy) -> str:
+    ex = policy.executor
+    if ex is not None and ex.plane == "device":
+        return "device"
+    if policy.flavor == "vec":
+        return "vec"
+    return "host"
+
+
+def _host_executor(policy: ExecutionPolicy) -> Executor:
+    ex = policy.executor
+    if ex is None:
+        ex = _SEQ_EXEC if policy.flavor == "seq" else ThreadPoolExecutor()
+    if policy.priority is not None:
+        ex = PriorityExecutor(ex, policy.priority)
+    return ex
 
 
 def _chunks(n: int, chunk: int) -> List[tuple]:
     return [(i, min(i + chunk, n)) for i in range(0, n, chunk)]
 
 
-def _default_chunk(policy: ExecutionPolicy, n: int) -> int:
+def _chunk_size(policy: ExecutionPolicy, n: int, ex: Executor) -> int:
+    if policy.flavor == "seq":
+        # sequenced stays sequenced even when bound to a pool executor
+        # (HPX seq.on(exec): one in-order task on that executor)
+        return max(1, n)
     if policy.chunk_size:
         return policy.chunk_size
-    rt = _sched.get_runtime()
-    return max(1, n // (4 * rt.num_workers))
+    p = max(1, ex.parallelism)
+    return max(1, n) if p <= 1 else max(1, n // (4 * p))
+
+
+def _bulk(policy: ExecutionPolicy, n: int,
+          chunk_fn: Callable[[int, int], Any]) -> List[Future]:
+    """Lower a loop of ``n`` iterations to per-chunk executor tasks."""
+    ex = _host_executor(policy)
+    return ex.bulk_async_execute(chunk_fn, _chunks(n, _chunk_size(policy, n, ex)))
+
+
+def _join(policy: ExecutionPolicy, futs: List[Future],
+          combine: Callable[[List[Any]], Any]):
+    """Combine chunk results; under a ``task`` policy the combination is a
+    continuation — posted on the *policy's own executor*, so a workload
+    bound to a named pool never leaks its combine onto another pool."""
+    if policy.task:
+        return _then_on(policy, when_all(futs),
+                        lambda ready: combine([f.get() for f in ready]))
+    return combine([f.get() for f in futs])
+
+
+def _offload(policy: ExecutionPolicy, thunk: Callable[[], Any]):
+    """Produce a vec/device value, honoring the policy bindings: a bound
+    *host* executor runs the whole vectorized dispatch as one task on that
+    pool (``vec.on(rt.get_executor("io"))`` — never silently inline), and
+    ``task`` policies get a Future."""
+    ex = policy.executor
+    if ex is not None and ex.plane == "host":
+        if policy.priority is not None:
+            ex = PriorityExecutor(ex, policy.priority)
+        fut = ex.async_execute(thunk)
+        return fut if policy.task else fut.get()
+    return make_ready_future(thunk()) if policy.task else thunk()
+
+
+class _LoweringError(ValueError):
+    """A vec/mesh lowering violated its contract (already actionable)."""
+
+
+def _traced(name: str, what: str, apply: Callable[[], Any]) -> Any:
+    """Run a jax lowering; translate tracer failures into a loud, actionable
+    error instead of silently degrading to a host loop."""
+    try:
+        return apply()
+    except _LoweringError:
+        raise
+    except (jax.errors.JAXTypeError, jax.errors.TracerArrayConversionError,
+            TypeError, ValueError) as e:
+        raise ValueError(
+            f"{name}: {what} is not usable under the vec/mesh policies — it "
+            f"must be jax-traceable and combine/transform array elements "
+            f"(side effects and Python-only control flow cannot vectorize). "
+            f"Use the seq/par policies for host-only bodies.") from e
+
+
+def _device_ex(policy: ExecutionPolicy) -> MeshExecutor:
+    return policy.executor  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------- for_each
-def for_each(policy: ExecutionPolicy, data: Sequence[Any], fn: Callable[[Any], None]) -> None:
-    if policy.kind in ("seq", "vec"):
-        for x in data:
-            fn(x)
-        return
-    if policy.kind == "par":
-        n = len(data)
-        chunk = _default_chunk(policy, n)
-        rt = _sched.get_runtime()
+def for_each(policy: ExecutionPolicy, data: Sequence[Any],
+             fn: Callable[[Any], Any]) -> Any:
+    """Apply ``fn`` to every element (result discarded).
 
-        def _run(lo: int, hi: int) -> None:
-            for i in range(lo, hi):
-                fn(data[i])
+    Under ``vec``/mesh the body is vectorized with ``jax.vmap`` as a
+    side-effect-free application — a body that cannot trace raises
+    (module contract: no silent sequential fallback).  Host side effects
+    belong under ``seq``/``par``."""
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk() -> None:
+            arr = jnp.asarray(data)
+            if arr.shape[0]:
+                dex = _device_ex(policy) if m == "device" else None
+                out = _traced(
+                    "for_each", f"body {getattr(fn, '__name__', fn)!r}",
+                    (lambda: dex.vmap_apply(fn, arr)) if dex is not None
+                    else (lambda: jax.vmap(fn)(arr)))
+                jax.block_until_ready(out)
+            return None
 
-        wait_all([rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)])
-        return
-    raise ValueError(f"for_each: unsupported policy {policy.kind}")
+        return _offload(policy, thunk)
+
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> None:
+        for i in range(lo, hi):
+            fn(data[i])
+
+    return _join(policy, _bulk(policy, n, _run), lambda parts: None)
 
 
 # ---------------------------------------------------------------- transform
 def transform(policy: ExecutionPolicy, data: Any, fn: Callable[[Any], Any]) -> Any:
-    if policy.kind == "seq":
-        return [fn(x) for x in data]
-    if policy.kind == "vec":
-        return jax.vmap(fn)(jnp.asarray(data))
-    if policy.kind == "par":
-        n = len(data)
-        chunk = _default_chunk(policy, n)
-        rt = _sched.get_runtime()
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                return _traced("transform", "body",
+                               lambda: _device_ex(policy).vmap_apply(fn, arr))
+            return _traced("transform", "body", lambda: jax.vmap(fn)(arr))
 
-        def _run(lo: int, hi: int) -> List[Any]:
-            return [fn(data[i]) for i in range(lo, hi)]
+        return _offload(policy, thunk)
 
-        futs = [rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)]
-        out: List[Any] = []
-        for f in futs:
-            out.extend(f.get())
-        return out
-    if policy.kind == "mesh":
-        arr = jnp.asarray(data)
-        sharding = jax.sharding.NamedSharding(
-            policy.mesh, jax.sharding.PartitionSpec(policy.axis)
-        )
-        arr = jax.device_put(arr, sharding)
-        return jax.jit(jax.vmap(fn), out_shardings=sharding)(arr)
-    raise ValueError(f"transform: unsupported policy {policy.kind}")
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> List[Any]:
+        return [fn(data[i]) for i in range(lo, hi)]
+
+    return _join(policy, _bulk(policy, n, _run),
+                 lambda parts: [x for p in parts for x in p])
 
 
 # ------------------------------------------------------------------- reduce
+def _vec_tree_reduce(name: str, op: Callable, arr):
+    """Pairwise associative fold, vectorized: O(log n) batched ``op`` calls.
+
+    ``op`` must combine equal-length batched slices elementwise (the same
+    contract as :func:`jax.lax.associative_scan`'s combinator)."""
+
+    def _fold():
+        a = arr
+        while a.shape[0] > 1:
+            half = a.shape[0] // 2
+            # combine *adjacent* pairs — (x0⊕x1), (x2⊕x3), … — so operand
+            # order is preserved for associative non-commutative ops
+            combined = op(a[0:2 * half:2], a[1:2 * half:2])
+            if combined.shape != (half,) + a.shape[1:]:
+                raise _LoweringError(
+                    f"op changed the element shape {(half,) + a.shape[1:]} "
+                    f"-> {combined.shape}; it must combine batched slices "
+                    f"elementwise")
+            a = (jnp.concatenate([combined, a[2 * half:]], axis=0)
+                 if a.shape[0] % 2 else combined)
+        return a[0]
+
+    return _traced(name, f"op {op!r}", _fold)
+
+
 def reduce(
     policy: ExecutionPolicy,
     data: Any,
     init: Any = 0,
     op: Callable[[Any, Any], Any] = operator.add,
 ) -> Any:
-    if policy.kind == "seq":
-        acc = init
-        for x in data:
-            acc = op(acc, x)
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if arr.shape[0] == 0:
+                return init
+            if op is operator.add:  # axis=0: elements may be batched arrays
+                total = (_device_ex(policy).sum_total(arr) if m == "device"
+                         else jnp.sum(arr, axis=0))
+            else:
+                total = _vec_tree_reduce("reduce", op, arr)
+            return op(init, total)
+
+        return _offload(policy, thunk)
+
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> Any:
+        acc = data[lo]
+        for i in range(lo + 1, hi):
+            acc = op(acc, data[i])
         return acc
-    if policy.kind == "vec":
-        arr = jnp.asarray(data)
-        if op is operator.add:
-            return init + jnp.sum(arr)
+
+    def _combine(parts: List[Any]) -> Any:
         acc = init
-        for x in arr:  # generic op: no vectorized shortcut
-            acc = op(acc, x)
+        for p in parts:  # op must be associative (C++ requirement)
+            acc = op(acc, p)
         return acc
-    if policy.kind == "par":
-        n = len(data)
-        chunk = _default_chunk(policy, n)
-        rt = _sched.get_runtime()
 
-        def _run(lo: int, hi: int) -> Any:
-            acc = data[lo]
-            for i in range(lo + 1, hi):
-                acc = op(acc, data[i])
-            return acc
-
-        futs = [rt.spawn(_run, lo, hi) for lo, hi in _chunks(n, chunk)]
-        acc = init
-        for f in futs:  # op must be associative (C++ requirement)
-            acc = op(acc, f.get())
-        return acc
-    if policy.kind == "mesh":
-        arr = jnp.asarray(data)
-        mesh, axis = policy.mesh, policy.axis
-        sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
-        arr = jax.device_put(arr, sharding)
-
-        def _body(x):  # per-shard partial + collective finish
-            return jax.lax.psum(jnp.sum(x), axis)
-
-        total = jax.jit(
-            jax.shard_map(
-                _body,
-                mesh=mesh,
-                in_specs=jax.sharding.PartitionSpec(axis),
-                out_specs=jax.sharding.PartitionSpec(),
-            )
-        )(arr)
-        return init + total
-    raise ValueError(f"reduce: unsupported policy {policy.kind}")
+    return _join(policy, _bulk(policy, n, _run), _combine)
 
 
 def transform_reduce(
@@ -160,73 +284,272 @@ def transform_reduce(
     init: Any = 0,
     op: Callable[[Any, Any], Any] = operator.add,
 ) -> Any:
-    if policy.kind == "vec":
-        return init + jnp.sum(jax.vmap(fn)(jnp.asarray(data)))
-    if policy.kind == "mesh":
-        return reduce(policy, transform(policy, data, fn), init=init, op=op)
-    return reduce(policy, [fn(x) for x in data] if policy.kind == "seq" else transform(policy, data, fn), init=init, op=op)
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if arr.shape[0] == 0:
+                return init
+            dex = _device_ex(policy) if m == "device" else None
+            mapped = _traced(
+                "transform_reduce", "body",
+                (lambda: dex.vmap_apply(fn, arr)) if dex is not None
+                else (lambda: jax.vmap(fn)(arr)))
+            if op is operator.add:
+                total = (dex.sum_total(mapped) if dex is not None
+                         else jnp.sum(mapped, axis=0))
+            else:
+                total = _vec_tree_reduce("transform_reduce", op, mapped)
+            return op(init, total)
+
+        return _offload(policy, thunk)
+
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> Any:
+        acc = fn(data[lo])
+        for i in range(lo + 1, hi):
+            acc = op(acc, fn(data[i]))
+        return acc
+
+    def _combine(parts: List[Any]) -> Any:
+        acc = init
+        for p in parts:
+            acc = op(acc, p)
+        return acc
+
+    return _join(policy, _bulk(policy, n, _run), _combine)
 
 
 # -------------------------------------------------------------------- scans
-def inclusive_scan(policy: ExecutionPolicy, data: Any, op: Callable = operator.add) -> Any:
-    if policy.kind in ("vec", "mesh"):
-        arr = jnp.asarray(data)
-        if op is operator.add:
-            return jnp.cumsum(arr)
-        return jax.lax.associative_scan(jax.vmap(op), arr)
+def _local_inclusive(data: Any, op: Callable, lo: int, hi: int) -> List[Any]:
+    """In-order inclusive scan of one chunk (the two-pass scans' pass 1)."""
     out: List[Any] = []
     acc: Optional[Any] = None
-    for x in data:
-        acc = x if acc is None else op(acc, x)
+    for i in range(lo, hi):
+        acc = data[i] if acc is None else op(acc, data[i])
         out.append(acc)
     return out
 
 
-def exclusive_scan(policy: ExecutionPolicy, data: Any, init: Any = 0, op: Callable = operator.add) -> Any:
-    if policy.kind in ("vec", "mesh"):
-        arr = jnp.asarray(data)
-        if op is operator.add:
-            return jnp.concatenate([jnp.asarray([init], dtype=arr.dtype), init + jnp.cumsum(arr)[:-1]])
-    out: List[Any] = []
-    acc = init
-    for x in data:
-        out.append(acc)
-        acc = op(acc, x)
-    return out
+_NO_SEED = object()
+
+
+def _two_pass_scan(ex: Executor, bounds: List[tuple], data: Any, op: Callable,
+                   exclusive: bool, init: Any = _NO_SEED) -> List[Any]:
+    """Shared two-pass parallel scan: local inclusive scans per chunk, a
+    sequential fold of chunk totals into per-chunk offsets (seeded with
+    ``init`` for exclusive scans), then a bulk offset-apply pass."""
+    locals_ = [f.get() for f in ex.bulk_async_execute(
+        lambda lo, hi: _local_inclusive(data, op, lo, hi), bounds)]
+    offsets: List[Any] = [init] * len(bounds)
+    carry = init
+    for c in range(len(bounds) - 1):
+        carry = (locals_[c][-1] if carry is _NO_SEED
+                 else op(carry, locals_[c][-1]))
+        offsets[c + 1] = carry
+
+    def _apply(c: int) -> List[Any]:
+        off = offsets[c]
+        if exclusive:  # chunk c emits [off, off⊕x0, ..., off⊕x_{k-2}]
+            return [off] + [op(off, v) for v in locals_[c][:-1]]
+        if off is _NO_SEED:
+            return locals_[c]
+        return [op(off, v) for v in locals_[c]]
+
+    parts = [f.get() for f in ex.bulk_async_execute(_apply, range(len(bounds)))]
+    return [x for p in parts for x in p]
+
+
+def _assoc_scan(name: str, op: Callable, arr):
+    """``jax.lax.associative_scan`` with the combinator applied directly to
+    batched slices (its documented contract) and loud failure for ops that
+    cannot lower — never a silent host loop."""
+
+    def _scan():
+        out = jax.lax.associative_scan(op, arr)
+        if out.shape != arr.shape:
+            raise _LoweringError(
+                f"op changed the scan shape {arr.shape} -> {out.shape}; it "
+                f"must combine batched slices elementwise")
+        return out
+
+    return _traced(name, f"op {op!r}", _scan)
+
+
+def inclusive_scan(policy: ExecutionPolicy, data: Any,
+                   op: Callable = operator.add) -> Any:
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            if arr.shape[0] == 0:
+                return arr
+            return (jnp.cumsum(arr, axis=0) if op is operator.add
+                    else _assoc_scan("inclusive_scan", op, arr))
+
+        return _offload(policy, thunk)
+
+    if policy.task:  # two-way: run the joining scan as one pool task
+        eager = policy.with_(task=False)
+        return _host_executor(policy).async_execute(
+            lambda: inclusive_scan(eager, data, op))
+
+    n = len(data)
+    ex = _host_executor(policy)
+    chunk = _chunk_size(policy, n, ex)
+    if ex.parallelism <= 1 or chunk >= n:
+        out: List[Any] = []
+        acc: Optional[Any] = None
+        for x in data:
+            acc = x if acc is None else op(acc, x)
+            out.append(acc)
+        return out
+
+    return _two_pass_scan(ex, _chunks(n, chunk), data, op, exclusive=False)
+
+
+def exclusive_scan(policy: ExecutionPolicy, data: Any, init: Any = 0,
+                   op: Callable = operator.add) -> Any:
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            if arr.shape[0] == 0:  # C++: empty exclusive scan writes nothing
+                return arr
+            # promote like the seq oracle would (a float init over int data
+            # yields floats — never silently truncate init to the data
+            # dtype), and broadcast init to the element shape
+            dt = jnp.result_type(arr.dtype, jnp.asarray(init).dtype)
+            arr2 = arr.astype(dt)
+            init_el = jnp.broadcast_to(jnp.asarray(init, dtype=dt),
+                                       arr2.shape[1:])[None]
+            if op is operator.add:
+                return jnp.concatenate(
+                    [init_el, init_el + jnp.cumsum(arr2, axis=0)[:-1]])
+            # scan [init, x0, ..., x_{n-2}]: prefix folds seeded with init
+            ext = jnp.concatenate([init_el, arr2[:-1]])
+            return _assoc_scan("exclusive_scan", op, ext)
+
+        return _offload(policy, thunk)
+
+    if policy.task:
+        eager = policy.with_(task=False)
+        return _host_executor(policy).async_execute(
+            lambda: exclusive_scan(eager, data, init, op))
+
+    n = len(data)
+    ex = _host_executor(policy)
+    chunk = _chunk_size(policy, n, ex)
+    if ex.parallelism <= 1 or chunk >= n:
+        out: List[Any] = []
+        acc = init
+        for x in data:
+            out.append(acc)
+            acc = op(acc, x)
+        return out
+
+    return _two_pass_scan(ex, _chunks(n, chunk), data, op,
+                          exclusive=True, init=init)
 
 
 # --------------------------------------------------------------------- sort
 def sort(policy: ExecutionPolicy, data: Any) -> Any:
-    """Parallel merge-ish sort: chunk-sort on tasks, k-way merge on host."""
-    if policy.kind == "seq":
-        return builtins.sorted(data)
-    if policy.kind in ("vec", "mesh"):
-        return jnp.sort(jnp.asarray(data))
+    """Parallel merge-ish sort: chunk-sort on pool tasks, k-way merge."""
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            return jnp.sort(arr)
+
+        return _offload(policy, thunk)
+
     n = len(data)
-    chunk = _default_chunk(policy, n)
-    rt = _sched.get_runtime()
-    futs = [rt.spawn(lambda lo=lo, hi=hi: builtins.sorted(data[lo:hi])) for lo, hi in _chunks(n, chunk)]
+
+    def _run(lo: int, hi: int) -> List[Any]:
+        return builtins.sorted(data[lo:hi])
+
     import heapq
 
-    return list(heapq.merge(*[f.get() for f in futs]))
+    return _join(policy, _bulk(policy, n, _run),
+                 lambda parts: list(heapq.merge(*parts)))
 
 
 # --------------------------------------------------------------- predicates
-def count_if(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> int:
-    if policy.kind == "vec":
-        return int(jnp.sum(jax.vmap(pred)(jnp.asarray(data))))
-    return int(transform_reduce(policy, data, lambda x: 1 if pred(x) else 0, init=0))
+def count_if(policy: ExecutionPolicy, data: Any,
+             pred: Callable[[Any], Any]) -> Any:
+    policy = _as_policy(policy)
+    body = (  # one lowering: transform_reduce owns the vec/device dispatch
+        (lambda x: jnp.int32(pred(x))) if _mode(policy) in ("vec", "device")
+        else (lambda x: 1 if pred(x) else 0))
+    res = transform_reduce(policy, data, body, init=0)
+    return _then_on(policy, res, int) if policy.task else int(res)
 
 
-def all_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> bool:
-    return count_if(policy, data, pred) == len(data)
+def _then_on(policy: ExecutionPolicy, fut: Future,
+             fn: Callable[[Any], Any]) -> Future:
+    """Continuation on the *policy's* executor (``Future.then`` would land
+    on the global default pool, leaking off the bound pool)."""
+    ex = _host_executor(policy)
+    promise: Promise = Promise()
+
+    def _fire(ready: Future) -> None:
+        def _run() -> None:
+            try:
+                promise.set_value(fn(ready.get()))
+            except BaseException as e:  # noqa: BLE001
+                promise.set_exception(e)
+
+        ex.post(_run)
+
+    fut._on_ready(_fire)
+    return promise.future()
 
 
-def any_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], bool]) -> bool:
-    return count_if(policy, data, pred) > 0
+def _predicate_result(policy: ExecutionPolicy, counted: Any,
+                      check: Callable[[int], bool]):
+    if isinstance(counted, Future):
+        return _then_on(policy, counted, check)
+    return check(counted)
 
 
+def all_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], Any]) -> Any:
+    n = len(data)
+    return _predicate_result(policy, count_if(policy, data, pred),
+                             lambda c: c == n)
+
+
+def any_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], Any]) -> Any:
+    return _predicate_result(policy, count_if(policy, data, pred),
+                             lambda c: c > 0)
+
+
+# --------------------------------------------------------------------- copy
 def copy(policy: ExecutionPolicy, data: Any) -> Any:
-    if policy.kind in ("vec", "mesh"):
-        return jnp.array(jnp.asarray(data), copy=True)
-    return list(data)
+    policy = _as_policy(policy)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            return jnp.array(arr, copy=True)
+
+        return _offload(policy, thunk)
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> List[Any]:
+        return list(data[lo:hi])
+
+    return _join(policy, _bulk(policy, n, _run),
+                 lambda parts: [x for p in parts for x in p])

@@ -151,8 +151,8 @@ class CounterRegistry:
 
     Names follow the HPX convention ``/object{instance}/metric``, e.g.::
 
-        /scheduler{pool#0}/tasks/executed
-        /scheduler{pool#0}/tasks/stolen
+        /scheduler{default}/tasks/executed
+        /scheduler{io}/tasks/stolen
         /agas{root}/objects/count
         /train{step}/duration
         /parcel{port#0}/bytes/sent

@@ -42,12 +42,19 @@ def _collect_futures(obj: Any, out: List[Future]) -> None:
 
 
 def dataflow(fn: Callable[..., Any], *args: Any, priority: Optional[int] = None,
-             **kwargs: Any) -> Future[Any]:
+             executor: Optional[Any] = None, **kwargs: Any) -> Future[Any]:
     """Schedule ``fn(*args)`` once all Future arguments are ready.
 
     Future arguments are replaced by their values (``unwrap``), including
-    inside nested containers — HPX ``hpx::dataflow`` semantics.
+    inside nested containers — HPX ``hpx::dataflow`` semantics.  With
+    ``executor`` the fire task runs on that executor (e.g. a named pool of
+    the resource partitioner) instead of the default pool; ``priority``
+    composes with it (the executor is wrapped in a ``PriorityExecutor``).
     """
+    if executor is not None and priority is not None:
+        from repro.core.executor import PriorityExecutor  # deferred: no cycle
+
+        executor = PriorityExecutor(executor, priority)
     deps: List[Future] = []
     _collect_futures(args, deps)
     _collect_futures(kwargs, deps)
@@ -60,6 +67,9 @@ def dataflow(fn: Callable[..., Any], *args: Any, priority: Optional[int] = None,
             except BaseException as e:  # noqa: BLE001
                 promise.set_exception(e)
 
+        if executor is not None:
+            executor.post(_run)
+            return
         rt = _sched.current_runtime()
         if rt is not None:
             rt.spawn_raw(_run, priority=priority)

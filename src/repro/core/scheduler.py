@@ -1,4 +1,4 @@
-"""Lightweight work-stealing task scheduler (HPX P2, paper §2.1).
+"""Work-stealing task scheduler + resource partitioner (HPX P2, paper §2.1).
 
 The paper's thread manager offers interchangeable scheduling policies:
 
@@ -8,22 +8,37 @@ The paper's thread manager offers interchangeable scheduling policies:
 - ``hierarchical`` a tree of queues — tasks enqueue at the root and
                    *trickle down* as cores fetch work.
 
+HPX's *resource partitioner* carves the machine's processing units into
+**named thread pools** so different concerns never compete for the same
+workers (the HPX+LCI case study keeps communication progress off the
+compute pool).  Ours is :class:`Runtime`: a container of named
+:class:`ThreadPool`\\ s, e.g.::
+
+    rt = init(pools={"default": 4, "io": 1, "prefill": 1})
+    ex = rt.get_executor("io")          # the only public way into a pool
+    ex.async_execute(write_checkpoint)  # host I/O never steals compute slots
+
 TPU adaptation: there are no user-level threads inside an XLA program, so
-this scheduler runs on the *host orchestration plane*: it drives data
-pipeline stages, device-step dispatch (which is async in JAX — the host
-thread returns immediately while the TPU computes), checkpoint I/O and
-serving continuations.  The paper's "oversubscribing execution resources"
-maps to spawning many more logical tasks than workers; blocked tasks
-*help along* (see :meth:`Runtime._help_until`), the analogue of HPX
-suspending a user-level thread instead of an OS thread.
+these pools run on the *host orchestration plane*: they drive data pipeline
+stages, device-step dispatch (which is async in JAX — the host thread
+returns immediately while the TPU computes), checkpoint I/O and serving
+continuations.  The paper's "oversubscribing execution resources" maps to
+launching many more logical tasks than workers; blocked tasks *help along*
+(see :meth:`ThreadPool._help_until`), the analogue of HPX suspending a
+user-level thread instead of an OS thread.
 
-Performance counters published (HPX names, §2.4):
+Performance counters published per pool (HPX names, §2.4)::
 
-    /scheduler{pool#0}/tasks/spawned
-    /scheduler{pool#0}/tasks/executed
-    /scheduler{pool#0}/tasks/stolen
-    /scheduler{pool#0}/tasks/pending        (instantaneous)
-    /scheduler{pool#0}/task/duration        (timer)
+    /scheduler{<pool>}/tasks/spawned
+    /scheduler{<pool>}/tasks/executed
+    /scheduler{<pool>}/tasks/stolen
+    /scheduler{<pool>}/tasks/pending        (instantaneous)
+    /scheduler{<pool>}/task/duration        (timer)
+
+Outside :mod:`repro.core`, tasks reach a pool exclusively through the
+executors of :mod:`repro.core.executor` (``Runtime.get_executor``); the
+``spawn``/``spawn_raw`` entry points here are the runtime's internal
+substrate (enforced by ``tests/test_api_guard.py``).
 """
 
 from __future__ import annotations
@@ -31,7 +46,7 @@ from __future__ import annotations
 import collections
 import random
 import threading
-from typing import Any, Callable, Deque, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.core import counters as _counters
 from repro.core.future import Future, Promise
@@ -42,6 +57,12 @@ PRIORITY_NORMAL = 1
 PRIORITY_HIGH = 2
 
 _POLICIES = ("static", "local", "hierarchical")
+
+DEFAULT_POOL = "default"
+
+# Worker-thread identity: which pool owns the calling thread (module-level so
+# a Runtime can route help-along to whichever of its pools is blocking).
+_tls = threading.local()
 
 
 class _Task:
@@ -62,28 +83,27 @@ class _Task:
             self.promise.set_exception(e)
 
 
-class Runtime:
-    """An HPX-style runtime instance (thread pool + scheduler policy).
+class ThreadPool:
+    """One named worker pool: per-worker queues, stealing, counters.
 
-    Use as a context manager, or via module-level :func:`init`/:func:`finalize`::
-
-        with Runtime(num_workers=4, policy="local") as rt:
-            f = rt.spawn(lambda: 2 + 2)
-            assert f.get() == 4
+    This is the unit the resource partitioner hands out.  Pools are reached
+    through :meth:`Runtime.get_executor`; direct construction is for the
+    runtime (and scheduler micro-benchmarks/tests).
     """
 
     def __init__(
         self,
+        name: str = DEFAULT_POOL,
         num_workers: int = 4,
         policy: str = "local",
-        pool_name: str = "pool#0",
         steal_seed: int = 0,
     ):
         if policy not in _POLICIES:
             raise ValueError(f"unknown scheduling policy {policy!r}; choose from {_POLICIES}")
         self.policy = policy
         self.num_workers = max(1, int(num_workers))
-        self.pool_name = pool_name
+        self.name = name
+        self._runtime: Optional["Runtime"] = None  # owning partitioner, if any
         self._queues: List[Deque[_Task]] = [collections.deque() for _ in range(self.num_workers)]
         self._hi_queue: Deque[_Task] = collections.deque()  # shared high-priority queue
         self._root_queue: Deque[_Task] = collections.deque()  # hierarchical root
@@ -91,20 +111,21 @@ class Runtime:
         self._work_available = threading.Condition(self._lock)
         self._shutdown = False
         self._threads: List[threading.Thread] = []
-        self._tls = threading.local()
         self._rng = random.Random(steal_seed)
-        self._spawn_rr = 0
+        self._rr = 0
 
         reg = _counters.default()
-        p = f"/scheduler{{{pool_name}}}"
+        p = f"/scheduler{{{name}}}"
         self.c_spawned = reg.counter(f"{p}/tasks/spawned")
         self.c_executed = reg.counter(f"{p}/tasks/executed")
         self.c_stolen = reg.counter(f"{p}/tasks/stolen")
+        self.c_failed = reg.counter(f"{p}/tasks/failed")
         self.t_task = reg.timer(f"{p}/task/duration")
         reg.register_callable(f"{p}/tasks/pending", self._pending_count)
 
         for i in range(self.num_workers):
-            t = threading.Thread(target=self._worker, args=(i,), daemon=True, name=f"repro-{pool_name}-w{i}")
+            t = threading.Thread(target=self._worker, args=(i,), daemon=True,
+                                 name=f"repro-{name}-w{i}")
             self._threads.append(t)
             t.start()
 
@@ -129,10 +150,10 @@ class Runtime:
         self._enqueue(_Task(fn, None, priority if priority is not None else PRIORITY_NORMAL), worker_hint)
 
     def on_worker_thread(self) -> bool:
-        return getattr(self._tls, "worker_id", None) is not None
+        return getattr(_tls, "pool", None) is self
 
     def current_worker(self) -> Optional[int]:
-        return getattr(self._tls, "worker_id", None)
+        return getattr(_tls, "worker_id", None) if self.on_worker_thread() else None
 
     def pending(self) -> int:
         return int(self._pending_count())
@@ -146,18 +167,6 @@ class Runtime:
         if wait:
             for t in self._threads:
                 t.join(timeout=10.0)
-        global _runtime
-        with _runtime_lock:
-            if _runtime is self:
-                _runtime = None
-
-    def __enter__(self) -> "Runtime":
-        _set_runtime(self)
-        return self
-
-    def __exit__(self, *exc) -> bool:
-        self.shutdown()
-        return False
 
     # ----------------------------------------------------------- internals
     def _pending_count(self) -> float:
@@ -179,8 +188,8 @@ class Runtime:
                 if wid is None:
                     wid = self.current_worker()  # child tasks stay local (work-first)
                 if wid is None:
-                    wid = self._spawn_rr % self.num_workers
-                    self._spawn_rr += 1
+                    wid = self._rr % self.num_workers
+                    self._rr += 1
                 self._queues[wid % self.num_workers].append(task)
             self._work_available.notify()
 
@@ -215,11 +224,20 @@ class Runtime:
 
     def _run_task(self, task: _Task) -> None:
         with self.t_task.time():
-            task.run()
+            try:
+                task.run()
+            except BaseException:  # noqa: BLE001 — promise-less task raised:
+                # report loudly but never kill the worker (a dead worker on a
+                # 1-worker pool would silently hang every later task)
+                import traceback
+
+                self.c_failed.increment()
+                traceback.print_exc()
         self.c_executed.increment()
 
     def _worker(self, wid: int) -> None:
-        self._tls.worker_id = wid
+        _tls.pool = self
+        _tls.worker_id = wid
         while True:
             with self._lock:
                 task = self._try_pop(wid)
@@ -232,7 +250,8 @@ class Runtime:
 
     def _help_until(self, future: Future, timeout: Optional[float]) -> None:
         """Help-along loop: a worker blocked on ``future`` executes other
-        tasks instead of idling (HPX user-thread suspension analogue)."""
+        tasks from *its own pool* instead of idling (HPX user-thread
+        suspension analogue)."""
         wid = self.current_worker()
         if wid is None:
             return
@@ -260,9 +279,166 @@ class Runtime:
             _time.sleep(0.001)
 
 
+class Runtime:
+    """An HPX-style runtime instance: the resource partitioner's output.
+
+    Holds one or more named :class:`ThreadPool`\\ s.  Use as a context
+    manager, or via module-level :func:`init`/:func:`finalize`::
+
+        with Runtime(pools={"default": 4, "io": 1}) as rt:
+            f = rt.get_executor("io").async_execute(lambda: 2 + 2)
+            assert f.get() == 4
+
+    Single-pool construction (``Runtime(num_workers=4)``) is kept for the
+    scheduler tests/benchmarks; the partitioned form is ``pools={...}``.
+    Pools are reached through :meth:`get_executor` — the queues themselves
+    are not part of the public surface.
+    """
+
+    def __init__(
+        self,
+        num_workers: int = 4,
+        policy: str = "local",
+        pool_name: str = DEFAULT_POOL,
+        steal_seed: int = 0,
+        pools: Optional[Dict[str, int]] = None,
+    ):
+        if pools is None:
+            pools = {pool_name: num_workers}
+        if not pools:
+            raise ValueError("resource partitioner needs at least one pool")
+        self._pools: Dict[str, ThreadPool] = {}
+        self._pool_lock = threading.Lock()
+        self.policy = policy
+        self._default_name = (
+            pool_name if pool_name in pools
+            else (DEFAULT_POOL if DEFAULT_POOL in pools else next(iter(pools)))
+        )
+        for name, n in pools.items():
+            p = ThreadPool(name=name, num_workers=n, policy=policy,
+                           steal_seed=steal_seed)
+            p._runtime = self
+            self._pools[name] = p
+
+    # -------------------------------------------------- resource partitioner
+    def pool_names(self) -> List[str]:
+        with self._pool_lock:
+            return list(self._pools)
+
+    def pool(self, name: str = None, fallback: Optional[str] = None) -> ThreadPool:
+        """Resolve a named pool (``None`` → the default pool).
+
+        ``fallback`` names a pool to use when ``name`` was never partitioned
+        (lets consumers declare an affinity — "io", "prefill" — that
+        degrades gracefully on an unpartitioned runtime); a fallback that is
+        itself unpartitioned resolves to the runtime's default pool."""
+        name = name or self._default_name
+        with self._pool_lock:
+            p = self._pools.get(name)
+            if p is None and fallback is not None:
+                p = (self._pools.get(fallback)
+                     or self._pools.get(self._default_name))
+            if p is None:
+                raise KeyError(
+                    f"no thread pool {name!r} in this runtime (pools: "
+                    f"{sorted(self._pools)}); partition it via "
+                    f"init(pools={{...}}) or Runtime.add_pool")
+            return p
+
+    def add_pool(self, name: str, num_workers: int, policy: Optional[str] = None) -> ThreadPool:
+        """Idempotently add a pool to a live runtime (elastic partitioning).
+
+        Returns the existing pool unchanged if ``name`` is already
+        partitioned — consumers use this to declare the pools they need."""
+        with self._pool_lock:
+            p = self._pools.get(name)
+            if p is None:
+                p = ThreadPool(name=name, num_workers=num_workers,
+                               policy=policy or self.policy)
+                p._runtime = self
+                self._pools[name] = p
+            return p
+
+    def get_executor(self, pool: str = None, priority: Optional[int] = None,
+                     fallback: Optional[str] = None):
+        """The sanctioned entry point to a pool: an executor bound to it.
+
+        Returns a :class:`~repro.core.executor.ThreadPoolExecutor` (wrapped
+        in a :class:`~repro.core.executor.PriorityExecutor` when ``priority``
+        is given)."""
+        from repro.core import executor as _executor  # deferred, avoids cycle
+
+        return _executor.get_executor(pool, priority=priority,
+                                      fallback=fallback, runtime=self)
+
+    # ------------------------------------------- default-pool compatibility
+    @property
+    def pool_name(self) -> str:
+        return self._default_name
+
+    @property
+    def num_workers(self) -> int:
+        return self.pool().num_workers
+
+    def spawn(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Future[Any]:
+        return self.pool().spawn(fn, *args, **kwargs)
+
+    def spawn_raw(self, fn: Callable[[], Any], priority: Optional[int] = None,
+                  worker_hint: Optional[int] = None) -> None:
+        self.pool().spawn_raw(fn, priority=priority, worker_hint=worker_hint)
+
+    def on_worker_thread(self) -> bool:
+        # lock-free hot path: Future.get/wait probe this on every join
+        p = getattr(_tls, "pool", None)
+        return p is not None and p._runtime is self
+
+    def current_worker(self) -> Optional[int]:
+        return getattr(_tls, "worker_id", None) if self.on_worker_thread() else None
+
+    def pending(self) -> int:
+        with self._pool_lock:
+            pools = list(self._pools.values())
+        return sum(p.pending() for p in pools)
+
+    def _help_until(self, future: Future, timeout: Optional[float]) -> None:
+        """Route help-along to whichever of our pools owns the calling
+        worker thread (a blocked io worker helps io, not compute)."""
+        p = getattr(_tls, "pool", None)
+        if p is not None and p._runtime is self:
+            p._help_until(future, timeout)
+
+    def drain(self, timeout: float = 60.0) -> None:
+        with self._pool_lock:
+            pools = list(self._pools.values())
+        for p in pools:
+            p.drain(timeout)
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._pool_lock:
+            pools = list(self._pools.values())
+        for p in pools:
+            p.shutdown(wait=wait)
+        global _runtime
+        with _runtime_lock:
+            if _runtime is self:
+                _runtime = None
+
+    def __enter__(self) -> "Runtime":
+        _set_runtime(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
+
+
 # --------------------------------------------------------------- module api
 _runtime: Optional[Runtime] = None
 _runtime_lock = threading.Lock()
+
+# Pools a bare init() partitions: compute + one host-I/O progress worker
+# (checkpoint writes, prefetch assembly) so I/O never steals compute slots.
+DEFAULT_POOLS = {"io": 1}
 
 
 def _set_runtime(rt: Runtime) -> None:
@@ -271,13 +447,30 @@ def _set_runtime(rt: Runtime) -> None:
         _runtime = rt
 
 
-def init(num_workers: int = 4, policy: str = "local") -> Runtime:
-    """``hpx::init`` — bring up (or return) the global runtime."""
+def init(num_workers: int = 4, policy: str = "local",
+         pools: Optional[Dict[str, int]] = None) -> Runtime:
+    """``hpx::init`` — bring up (or return) the global runtime.
+
+    ``pools`` is the resource-partitioner spec (name → workers), e.g.
+    ``init(pools={"default": 8, "io": 1, "prefill": 2})``, honored exactly
+    as given (an explicit partition never grows hidden pools; consumers
+    with a pool affinity fall back to the runtime's default pool).
+    Omitted, it defaults to ``{"default": num_workers, **DEFAULT_POOLS}``.
+    On an already-running runtime the requested pools are added
+    idempotently (elastic partitioning), never shrunk."""
     global _runtime
     with _runtime_lock:
-        if _runtime is None:
-            _runtime = Runtime(num_workers=num_workers, policy=policy)
-        return _runtime
+        rt = _runtime
+        if rt is None:
+            if pools is None:
+                pools = {DEFAULT_POOL: num_workers, **DEFAULT_POOLS}
+            rt = _runtime = Runtime(policy=policy, pools=pools)
+            return rt
+    # existing runtime: elastic, idempotent partition growth
+    if pools:
+        for name, n in pools.items():
+            rt.add_pool(name, n, policy=policy)
+    return rt
 
 
 def finalize() -> None:
@@ -298,8 +491,11 @@ def get_runtime() -> Runtime:
     return init()
 
 
-def spawn(fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Future[Any]:
-    """``hpx::async`` on the global runtime."""
+def spawn(fn: Callable[..., Any], *args: Any, executor: Any = None,
+          **kwargs: Any) -> Future[Any]:
+    """``hpx::async`` — on ``executor`` when given, else the default pool."""
+    if executor is not None:
+        return executor.async_execute(fn, *args, **kwargs)
     return get_runtime().spawn(fn, *args, **kwargs)
 
 

@@ -2,7 +2,8 @@
 
 Production shape without a dataset dependency: a deterministic PRNG token
 stream (seeded per step — restart-reproducible), host-side batch assembly
-on the AMT scheduler (P2), and a double-buffered prefetch queue so batch
+on the resource partitioner's "io" pool (P2), and a double-buffered
+prefetch queue so batch
 (i+1) is built and transferred while the device runs step i — the paper's
 "overlapping communication and computation" on the host plane.  The
 trainer consumes ``Future[batch]``s (futurization, P1).
@@ -21,7 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import counters as _counters
-from repro.core import scheduler as _sched
+from repro.core import executor as _executor
 from repro.core.future import Future
 
 
@@ -76,25 +77,29 @@ class Prefetcher:
         self.shardings = shardings
         self._pending: Dict[int, Future] = {}
         self._lock = threading.Lock()
+        # Batch assembly is host I/O-plane work: it runs on the resource
+        # partitioner's "io" pool so prefetch never steals compute slots
+        # (fallback: the default pool on unpartitioned runtimes).
+        self._exec = _executor.get_executor("io", fallback="default")
         self.c_built = _counters.counter("/data{pipeline#0}/batches/built")
         self.t_build = _counters.timer("/data{pipeline#0}/build/duration")
 
-    def _spawn(self, step: int) -> Future:
+    def _schedule(self, step: int) -> Future:
         def build():
             with self.t_build.time():
                 b = synth_batch(self.cfg, self.dcfg, step, self.shardings)
             self.c_built.increment()
             return b
 
-        return _sched.get_runtime().spawn(build)
+        return self._exec.async_execute(build)
 
     def get(self, step: int) -> Future:
         with self._lock:
             fut = self._pending.pop(step, None)
             if fut is None:
-                fut = self._spawn(step)
+                fut = self._schedule(step)
             # keep the window full
             for s in range(step + 1, step + 1 + self.dcfg.prefetch):
                 if s not in self._pending:
-                    self._pending[s] = self._spawn(s)
+                    self._pending[s] = self._schedule(s)
         return fut

@@ -50,7 +50,10 @@ def main() -> None:
     from repro.serve.engine import SamplingParams, ServeConfig
     from repro.serve.router import Router
 
-    core.init(num_workers=args.workers)
+    # Resource partition: decode continuations on "default", prefill on its
+    # own pool, host I/O (logging/ckpt) on "io" — capacity goes where the
+    # work is, and I/O can never stall a decode step.
+    core.init(pools={"default": args.workers, "prefill": 2, "io": 1})
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg, get_plan(args.plan))
     params = model.init(jax.random.PRNGKey(0))

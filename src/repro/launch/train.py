@@ -46,7 +46,10 @@ def main() -> None:
     from repro.optim.adamw import AdamWConfig
     from repro.train.trainer import TrainConfig, Trainer
 
-    core.init(num_workers=args.workers, policy=args.scheduler)
+    # Resource partition: compute-plane tasks on "default", prefetch
+    # assembly + checkpoint writes on the single-worker "io" pool.
+    core.init(policy=args.scheduler,
+              pools={"default": args.workers, "io": 1})
     cfg = get_config(args.arch, smoke=args.smoke)
     plan = get_plan(args.plan, **({"microbatches": args.microbatches}
                                   if args.plan != "bsp" and args.microbatches > 1 else {}))

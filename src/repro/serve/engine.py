@@ -4,11 +4,13 @@ The seed engine ran prefill *inside* the decode loop — a bulk-synchronous
 barrier: every admission stalled every in-flight decode.  This version is
 task-pipelined, HPX-style:
 
-1. **Admission** — ``submit`` enqueues the request and a ``PRIORITY_HIGH``
-   prefill task is spawned (work-stealing workers pick it up while the
-   decode chain runs).  Prompts are right-padded to static *buckets* so
-   admission never recompiles; ``valid_len`` keeps logits/cache positions
-   exact.  Finished prefills land in a ready queue.
+1. **Admission** — ``submit`` enqueues the request and a prefill task is
+   posted through a ``PriorityExecutor`` over the dedicated ``prefill``
+   pool of the resource partitioner (falling back to the decode pool at
+   ``PRIORITY_HIGH`` on unpartitioned runtimes), so admissions never steal
+   decode-continuation slots.  Prompts are right-padded to static *buckets*
+   so admission never recompiles; ``valid_len`` keeps logits/cache
+   positions exact.  Finished prefills land in a ready queue.
 2. **Decode continuation chain** — each step is a scheduler task that
    integrates ready prefills into free slots (paged: scatter the prefill
    KV into block-pool pages; dense fallback: migrate into the slot row),
@@ -49,8 +51,9 @@ import numpy as np
 
 from repro.core import agas as _agas
 from repro.core import counters as _counters
-from repro.core import scheduler as _sched
+from repro.core import executor as _executor
 from repro.core.future import Channel, Future, Promise
+from repro.core.scheduler import PRIORITY_HIGH, current_runtime
 from repro.models.model import Model
 
 _NEG = -1e30
@@ -82,6 +85,14 @@ class ServeConfig:
     pipeline_admission: bool = True  # False → seed-style inline prefill barrier
     prefill_oversub: int = 2  # prefills in flight beyond free slots
     idle_timeout: float = 0.05  # blocking queue wait when drained (no hot-spin)
+    # resource partitioning: the decode continuation chain runs on
+    # ``decode_pool``; prefill tasks go to a PriorityExecutor over a
+    # dedicated ``prefill_pool`` (auto-partitioned with ``prefill_workers``
+    # workers; on a runtime without one they fall back to decode_pool at
+    # PRIORITY_HIGH — the pre-partitioner behavior).
+    decode_pool: str = "default"
+    prefill_pool: str = "prefill"
+    prefill_workers: int = 2
     # Counters are get-or-create by name: same-named engines *share* them
     # (the seed's observability contract).  Replicas behind a Router must
     # use distinct names or load() merges — Router.replicate does this.
@@ -268,6 +279,17 @@ class Engine:
         self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
 
+        # Execution resources (HPX resource partitioner): executors are the
+        # only path to scheduler pools.  Pool names resolve lazily at
+        # submission, so engines survive runtime restarts.
+        rt = current_runtime()
+        if rt is not None and scfg.pipeline_admission:
+            rt.add_pool(scfg.prefill_pool, scfg.prefill_workers)
+        self._loop_exec = _executor.get_executor(
+            scfg.decode_pool, fallback=scfg.decode_pool)  # → runtime default
+        self._prefill_exec = _executor.get_executor(
+            scfg.prefill_pool, priority=PRIORITY_HIGH, fallback=scfg.decode_pool)
+
         reg = _counters.default()
         n = scfg.name
         self.c_sub = reg.counter(f"/serve{{{n}}}/requests/submitted")
@@ -328,7 +350,7 @@ class Engine:
         with self._lock:
             if not self._running:
                 self._running = True
-                _sched.get_runtime().spawn_raw(self._step)
+                self._loop_exec.post(self._step)
 
     # ------------------------------------------------------------ admission
     def _bucket_for(self, n: int) -> int:
@@ -385,7 +407,7 @@ class Engine:
         self._ensure_running()
 
     def _pump_prefills(self) -> None:
-        """Spawn PRIORITY_HIGH prefill tasks for queued requests, keeping a
+        """Launch PRIORITY_HIGH prefill tasks for queued requests, keeping a
         bounded oversubscription so integration always has work ready."""
         while True:
             with self._lock:
@@ -399,13 +421,12 @@ class Engine:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 return
-            self._spawn_prefill(req)
+            self._launch_prefill(req)
 
-    def _spawn_prefill(self, req: _Request) -> None:
+    def _launch_prefill(self, req: _Request) -> None:
         with self._lock:
             self._inflight_prefills += 1
-        _sched.get_runtime().spawn_raw(lambda: self._prefill_task(req),
-                                       priority=_sched.PRIORITY_HIGH)
+        self._prefill_exec.post(lambda: self._prefill_task(req))
 
     # ---------------------------------------------------------- integration
     def _emit(self, req: _Request, tok: int) -> None:
@@ -515,7 +536,7 @@ class Engine:
                     return True
             return False
         if self.scfg.pipeline_admission:
-            self._spawn_prefill(req)
+            self._launch_prefill(req)
         else:
             self._queue.put(req)  # inline admission pops it next iteration
         return False
@@ -537,7 +558,7 @@ class Engine:
         if not active:
             if self._idle_or_stop():
                 return
-            _sched.get_runtime().spawn_raw(self._step)
+            self._loop_exec.post(self._step)
             return
 
         with self.t_step.time():
@@ -558,4 +579,4 @@ class Engine:
             self._emit(req, tok)
             if self._done_after(req, tok):
                 self._finish(i)
-        _sched.get_runtime().spawn_raw(self._step)  # continuation chain
+        self._loop_exec.post(self._step)  # continuation chain

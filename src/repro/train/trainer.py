@@ -61,7 +61,9 @@ class Trainer:
         self.data_cfg = data_cfg
         self.tcfg = tcfg
         self.mesh = mesh
-        _sched.get_runtime()  # ensure the AMT runtime is up
+        # Ensure the AMT runtime is up and the I/O plane is partitioned:
+        # prefetch assembly and checkpoint writes run on the "io" pool.
+        _sched.get_runtime().add_pool("io", 1)
 
         self.params = model.init(jax.random.PRNGKey(rng_seed))
         self.opt_state = adamw.init(self.params)

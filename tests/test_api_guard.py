@@ -1,0 +1,48 @@
+"""Lint-style guard: executors are the only sanctioned entry to the pools.
+
+No module outside ``repro/core`` may reach ``scheduler.spawn``/``spawn_raw``
+(or any ``.spawn(`` call) directly — consumers go through the executor
+hierarchy (``Runtime.get_executor`` / ``repro.core.executor``), which is
+what makes pool placement (io/prefill/default) auditable and testable.
+"""
+
+import re
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# scheduler entry points that bypass the executor surface
+_BANNED = re.compile(
+    r"(spawn_raw"                 # fire-and-forget scheduler internal
+    r"|scheduler\.spawn"          # module-level hpx::async
+    r"|_sched\.spawn"
+    r"|\bspawn\s*\("              # rt.spawn(...) / spawn(...)
+    r"|\.spawn\s*\()"
+)
+
+# model/optimizer initializers named *.init are fine; these are the
+# scheduler's own modules where the substrate lives
+_ALLOWED_DIRS = {SRC / "core"}
+
+
+def test_no_scheduler_spawn_outside_core():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if any(parent in _ALLOWED_DIRS for parent in path.parents):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if _BANNED.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "scheduler.spawn/spawn_raw used outside repro/core — route through "
+        "executors (Runtime.get_executor / repro.core.executor):\n"
+        + "\n".join(offenders))
+
+
+def test_guard_matches_known_spellings():
+    for bad in ("rt.spawn(fn)", "scheduler.spawn(fn)", "_sched.spawn_raw(f)",
+                "pool.spawn_raw(cb)", "spawn (fn)"):
+        assert _BANNED.search(bad), bad
+    for ok in ("model.init(key)", "prespawned", "respawn_counter = 1",
+               "executor.async_execute(fn)"):
+        assert not _BANNED.search(ok), ok

@@ -1,13 +1,16 @@
-"""C++17-style parallel algorithms: par/vec/seq agree (HPX P6)."""
+"""C++17-style parallel algorithms: every policy agrees with seq (HPX P6)."""
 import operator
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import algorithms as alg
-from repro.core.executor import par, seq, vec
+from repro.core.executor import (MeshExecutor, mesh_policy, par, par_task,
+                                 seq, seq_task, vec)
+from repro.core.future import Future
 
 floats = st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
                   min_size=1, max_size=200)
@@ -75,3 +78,224 @@ def test_for_each_side_effects(rt):
 def test_chunk_size_override(rt):
     xs = list(range(1000))
     assert alg.reduce(par.with_chunk_size(10), xs) == sum(xs)
+
+
+# ---------------------------------------------------- cross-policy properties
+def _mesh_pol():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    return mesh_policy(mesh)
+
+
+POLICIES = [
+    ("par", lambda: par),
+    ("par_chunked", lambda: par.with_(chunk_size=3)),
+    ("par_task", lambda: par_task),
+    ("seq_task", lambda: seq_task),
+    ("vec", lambda: vec),
+    ("mesh", _mesh_pol),
+]
+
+
+def _val(x):
+    """Materialize a policy result (Future under task policies, jnp array
+    under vec/mesh, list under host) into comparable python values."""
+    if isinstance(x, Future):
+        x = x.get(timeout=300)
+    if x is None or isinstance(x, (bool, int, float)):
+        return x
+    if isinstance(x, (list, tuple)):
+        return [float(v) for v in x]
+    arr = np.asarray(x)
+    return float(arr) if arr.ndim == 0 else [float(v) for v in arr.tolist()]
+
+
+@pytest.mark.parametrize("name,mk", POLICIES)
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(-50, 50), min_size=0, max_size=60))
+def test_every_algorithm_agrees_with_seq_oracle(rt, name, mk, xs):
+    pol = mk()
+    fn = lambda x: 3 * x + 1
+    even = lambda x: x % 2 == 0
+    assert _val(alg.transform(pol, xs, fn)) == _val(alg.transform(seq, xs, fn))
+    assert _val(alg.reduce(pol, xs)) == float(sum(xs))
+    assert _val(alg.transform_reduce(pol, xs, fn)) == float(sum(map(fn, xs)))
+    assert _val(alg.sort(pol, xs)) == [float(v) for v in sorted(xs)]
+    assert _val(alg.count_if(pol, xs, even)) == sum(1 for x in xs if even(x))
+    assert _val(alg.all_of(pol, xs, even)) == all(even(x) for x in xs)
+    assert _val(alg.any_of(pol, xs, even)) == any(even(x) for x in xs)
+    assert _val(alg.copy(pol, xs)) == [float(v) for v in xs]
+    assert _val(alg.inclusive_scan(pol, xs)) == _val(alg.inclusive_scan(seq, xs))
+    assert _val(alg.exclusive_scan(pol, xs, init=7)) == _val(
+        alg.exclusive_scan(seq, xs, init=7))
+
+
+@pytest.mark.parametrize("name,mk", POLICIES)
+@pytest.mark.parametrize("xs", [[], [4]], ids=["empty", "one"])
+def test_edge_inputs_agree(rt, name, mk, xs):
+    pol = mk()
+    fn = lambda x: x * 2
+    assert _val(alg.transform(pol, xs, fn)) == [float(fn(x)) for x in xs]
+    assert _val(alg.reduce(pol, xs, init=5)) == float(5 + sum(xs))
+    assert _val(alg.sort(pol, xs)) == [float(x) for x in xs]
+    assert _val(alg.inclusive_scan(pol, xs)) == [float(v) for v in np.cumsum(xs)]
+    # C++ semantics: an exclusive scan over an empty range writes nothing
+    assert _val(alg.exclusive_scan(pol, xs, init=2)) == ([2.0] if xs else [])
+    assert _val(alg.count_if(pol, xs, lambda x: x > 0)) == len(xs)
+    assert _val(alg.all_of(pol, xs, lambda x: x > 0)) is True  # vacuous on []
+    assert _val(alg.any_of(pol, xs, lambda x: x > 0)) is bool(xs)
+
+
+# -------------------------------------------------------- par_task two-way
+def test_par_task_returns_futures(rt):
+    xs = list(range(64))
+    for res in (alg.transform(par_task, xs, lambda x: x + 1),
+                alg.reduce(par_task, xs),
+                alg.sort(par_task, xs),
+                alg.inclusive_scan(par_task, xs),
+                alg.exclusive_scan(par_task, xs),
+                alg.count_if(par_task, xs, lambda x: x % 3 == 0),
+                alg.all_of(par_task, xs, lambda x: x >= 0),
+                alg.for_each(par_task, xs, lambda x: None),
+                alg.copy(par_task, xs)):
+        assert isinstance(res, Future), res
+        res.get(timeout=300)
+    # eager policies return plain values
+    assert not isinstance(alg.reduce(par, xs), Future)
+    assert not isinstance(alg.transform(vec, xs, lambda x: x), Future)
+
+
+def test_task_futures_carry_exceptions(rt):
+    def boom(x):
+        raise RuntimeError("body failed")
+
+    f = alg.transform(par_task, [1, 2, 3], boom)
+    assert isinstance(f, Future)
+    with pytest.raises(RuntimeError, match="body failed"):
+        f.get(timeout=60)
+
+
+# ------------------------------------------------- scans with generic ops
+GENERIC_OPS = [("mul", operator.mul), ("min", jnp.minimum), ("max", jnp.maximum)]
+
+
+@pytest.mark.parametrize("pname,mk", [("par", lambda: par), ("vec", lambda: vec),
+                                      ("mesh", _mesh_pol)])
+@pytest.mark.parametrize("oname,op", GENERIC_OPS)
+def test_scans_generic_ops_match_seq(rt, pname, mk, oname, op):
+    xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    pol = mk()
+    assert _val(alg.inclusive_scan(pol, xs, op=op)) == pytest.approx(
+        _val(alg.inclusive_scan(seq, xs, op=op)))
+    assert _val(alg.exclusive_scan(pol, xs, init=2.0, op=op)) == pytest.approx(
+        _val(alg.exclusive_scan(seq, xs, init=2.0, op=op)))
+    assert _val(alg.reduce(pol, xs, init=2.0, op=op)) == pytest.approx(
+        _val(alg.reduce(seq, xs, init=2.0, op=op)))
+
+
+def test_exclusive_scan_float_init_over_int_data_promotes(rt):
+    # seq oracle: [0.5, 1.5, 3.5] — vec must promote, never truncate init
+    want = [0.5, 1.5, 3.5]
+    assert alg.exclusive_scan(seq, [1, 2, 3], init=0.5) == want
+    assert _val(alg.exclusive_scan(vec, [1, 2, 3], init=0.5)) == pytest.approx(want)
+    assert _val(alg.exclusive_scan(_mesh_pol(), [1, 2, 3], init=0.5)) == pytest.approx(want)
+
+
+def test_batched_elements_agree_with_seq_oracle(rt):
+    """Elements that are arrays (shape (3,)): the add fast paths must fold
+    along axis 0, not collapse the element dimension."""
+    rng = np.random.default_rng(5)
+    rows = rng.standard_normal((6, 3)).astype(np.float32)
+    want_red = np.asarray(alg.reduce(seq, list(rows), init=0.0))
+    want_inc = np.stack(alg.inclusive_scan(seq, list(rows)))
+    for pol in (vec, _mesh_pol()):
+        got_red = np.asarray(alg.reduce(pol, rows, init=0.0))
+        assert got_red.shape == (3,)
+        np.testing.assert_allclose(got_red, want_red, rtol=1e-5)
+        got_inc = np.asarray(alg.inclusive_scan(pol, rows))
+        assert got_inc.shape == (6, 3)
+        np.testing.assert_allclose(got_inc, want_inc, rtol=1e-5)
+        got_exc = np.asarray(alg.exclusive_scan(pol, rows, init=0.0))
+        want_exc = np.stack([np.zeros(3, np.float32)] + list(want_inc[:-1]))
+        assert got_exc.shape == (6, 3)
+        np.testing.assert_allclose(got_exc, want_exc, rtol=1e-5)
+
+
+def test_task_combine_and_vec_offload_respect_bound_pool(rt):
+    """A policy bound to a named pool keeps *all* its work there: the task
+    combine continuation and the vec dispatch both land on that pool."""
+    from repro.core import counters
+
+    def executed(pool):
+        return counters.get_value(f"/scheduler{{{pool}}}/tasks/executed")
+
+    io_ex = rt.get_executor("io", fallback="default")
+    before = executed("io")
+    res = alg.sort(par_task.on(io_ex), [3, 1, 2]).get(timeout=60)
+    assert res == [1, 2, 3]
+    rt.drain(timeout=30)
+    after_task = executed("io")
+    assert after_task > before + 1  # chunks AND the combine ran on io
+    out = alg.transform(vec.on(io_ex), np.arange(8.0), lambda x: x * 2)
+    assert list(np.asarray(out)) == [2.0 * i for i in range(8)]
+    assert executed("io") > after_task  # vec dispatch offloaded to io
+
+
+def test_reduce_non_commutative_op_preserves_order(rt):
+    """Associative but non-commutative op (batched matmul): the vec/mesh
+    tree-fold must combine adjacent pairs, matching the seq fold order."""
+    rng = np.random.default_rng(3)
+    for n in (2, 3, 5, 8):  # even and odd lengths hit both fold branches
+        mats = [rng.standard_normal((2, 2)).astype(np.float32) for _ in range(n)]
+        want = np.eye(2, dtype=np.float32)
+        for m in mats:
+            want = want @ m
+        got = alg.reduce(vec, np.stack(mats), init=jnp.eye(2), op=jnp.matmul)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4), n
+        got_mesh = alg.reduce(_mesh_pol(), np.stack(mats), init=jnp.eye(2),
+                              op=jnp.matmul)
+        np.testing.assert_allclose(np.asarray(got_mesh), want, rtol=2e-4)
+
+
+def test_seq_on_executor_stays_sequenced(rt):
+    """HPX seq.on(exec): still sequenced, just on that executor — bodies
+    must observe in-order execution even when bound to a pool."""
+    out = []
+    pol = seq.on(rt.get_executor("default")).with_(chunk_size=5)
+    alg.for_each(pol, range(100), out.append)
+    assert out == list(range(100))
+    # order-sensitive associative op: string concat must stay in order
+    letters = [chr(ord("a") + i % 26) for i in range(60)]
+    assert alg.reduce(pol, letters, init="") == "".join(letters)
+
+
+def test_vec_scan_non_traceable_op_is_loud(rt):
+    host_only = lambda a, b: a if float(a) > float(b) else b  # concretizes
+    with pytest.raises(ValueError, match="vec/mesh"):
+        alg.inclusive_scan(vec, [1.0, 2.0, 3.0], op=host_only)
+    with pytest.raises(ValueError, match="vec/mesh"):
+        alg.exclusive_scan(vec, [1.0, 2.0, 3.0], init=0.0, op=host_only)
+    with pytest.raises(ValueError, match="vec/mesh"):
+        alg.reduce(vec, [1.0, 2.0, 3.0], op=host_only)
+    # shape-changing op: combines slices but not elementwise — also loud
+    with pytest.raises(ValueError, match="elementwise"):
+        alg.reduce(vec, [1.0, 2.0, 3.0, 4.0], op=lambda a, b: jnp.stack([a, b]))
+
+
+# ----------------------------------------------------------- vec for_each
+def test_for_each_vec_vectorizes_traceable_bodies(rt):
+    # module contract: traceable bodies lower through jax.vmap (no host loop)
+    calls = []
+
+    def body(x):
+        calls.append(1)  # traced exactly once, not once per element
+        return x * 2.0
+
+    assert alg.for_each(vec, np.arange(64.0), body) is None
+    assert len(calls) == 1, "body was traced, not looped per element"
+
+
+def test_for_each_vec_non_traceable_raises(rt):
+    out = []
+    with pytest.raises(ValueError, match="seq/par"):
+        alg.for_each(vec, [1, 2, 3], lambda x: out.append(int(x)))
+    assert out == []  # nothing silently executed sequentially

@@ -1,0 +1,298 @@
+"""Executor hierarchy + resource partitioner (HPX P6/P2).
+
+Covers the executor protocol (post/async_execute/sync_execute/
+bulk_async_execute), named-pool routing with per-pool counters, pool
+isolation (a saturated "io" pool cannot delay a PRIORITY_HIGH task on
+"default"), the legacy ExecutionPolicy(kind=...) deprecation shim, and the
+consumer contracts (serve prefill / data prefetch / checkpoint writes on
+their designated pools).
+"""
+
+import threading
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import counters
+from repro.core.executor import (
+    ExecutionPolicy,
+    Executor,
+    MeshExecutor,
+    PriorityExecutor,
+    SequencedExecutor,
+    ThreadPoolExecutor,
+    get_executor,
+    mesh_policy,
+    par,
+    vec,
+)
+from repro.core.future import Future
+from repro.core.scheduler import PRIORITY_HIGH, Runtime
+
+
+def _executed(pool: str) -> float:
+    try:
+        return counters.get_value(f"/scheduler{{{pool}}}/tasks/executed")
+    except KeyError:
+        return 0.0
+
+
+# ----------------------------------------------------------- executor protocol
+def test_sequenced_executor_runs_inline():
+    ex = SequencedExecutor()
+    tid = []
+    f = ex.async_execute(lambda: tid.append(threading.get_ident()) or 41)
+    assert f.is_ready() and f.get() == 41
+    assert tid == [threading.get_ident()]
+    assert ex.sync_execute(lambda a, b: a + b, 20, 22) == 42
+
+
+def test_sequenced_executor_captures_exceptions():
+    f = SequencedExecutor().async_execute(lambda: 1 / 0)
+    assert f.has_exception()
+    with pytest.raises(ZeroDivisionError):
+        f.get()
+
+
+def test_threadpool_executor_async_and_bulk(rt):
+    ex = ThreadPoolExecutor("default")
+    assert ex.async_execute(lambda a: a * 2, 21).get() == 42
+    futs = ex.bulk_async_execute(lambda lo, hi: list(range(lo, hi)),
+                                 [(0, 3), (3, 5)])
+    assert [f.get() for f in futs] == [[0, 1, 2], [3, 4]]
+    assert ex.parallelism == rt.pool().num_workers
+
+
+def test_threadpool_executor_post_fire_and_forget(rt):
+    done = threading.Event()
+    ThreadPoolExecutor("default").post(done.set)
+    assert done.wait(5.0)
+
+
+def test_post_exception_does_not_kill_the_worker():
+    """A raising fire-and-forget task must be reported (tasks/failed), not
+    take down the worker — on a 1-worker pool a dead worker would hang
+    every subsequent task forever."""
+    with Runtime(pools={"lone": 1}, pool_name="lone") as rt:
+        ex = rt.get_executor("lone")
+        ex.post(lambda: 1 / 0)
+        # the pool must still make progress afterwards
+        assert ex.async_execute(lambda: "alive").get(timeout=10.0) == "alive"
+        assert counters.get_value("/scheduler{lone}/tasks/failed") >= 1
+
+
+def test_priority_executor_jumps_the_queue():
+    with Runtime(pools={"solo": 1}, pool_name="solo") as rt:
+        started = threading.Event()
+        release = threading.Event()
+        order = []
+        ex = rt.get_executor("solo")
+        hi = rt.get_executor("solo", priority=PRIORITY_HIGH)
+        assert isinstance(hi, PriorityExecutor)
+        # head task occupies the single worker while we enqueue the race
+        ex.post(lambda: (started.set(), release.wait(10.0)))
+        assert started.wait(5.0)
+        normals = [ex.async_execute(lambda i=i: order.append(("n", i)))
+                   for i in range(4)]
+        urgent = hi.async_execute(lambda: order.append(("hi", 0)))
+        release.set()
+        urgent.get(timeout=10.0)
+        [f.get(timeout=10.0) for f in normals]
+        assert order[0] == ("hi", 0)  # high priority ran before the backlog
+
+
+def test_mesh_executor_is_device_plane():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    ex = MeshExecutor(mesh, "data")
+    assert ex.plane == "device"
+    out = np.asarray(ex.vmap_apply(lambda x: x * 2, np.arange(8)))
+    assert list(out) == [2 * i for i in range(8)]
+    assert int(ex.sum_total(np.arange(8))) == 28
+
+
+# ------------------------------------------------------- resource partitioner
+def test_partitioner_creates_named_pools_with_counters():
+    with Runtime(pools={"default": 2, "io": 1, "prefill": 1}) as rt:
+        assert set(rt.pool_names()) == {"default", "io", "prefill"}
+        before = {p: _executed(p) for p in ("default", "io", "prefill")}
+        assert rt.get_executor("io").async_execute(lambda: "io").get() == "io"
+        assert rt.get_executor("prefill").async_execute(lambda: "pf").get() == "pf"
+        assert _executed("io") == before["io"] + 1
+        assert _executed("prefill") == before["prefill"] + 1
+        assert _executed("default") == before["default"]
+
+
+def test_get_executor_unknown_pool_raises_without_fallback():
+    with Runtime(pools={"default": 1}) as rt:
+        with pytest.raises(KeyError):
+            rt.get_executor("nope").async_execute(lambda: 1).get()
+        assert rt.get_executor("nope", fallback="default").async_execute(
+            lambda: 1).get() == 1
+
+
+def test_add_pool_is_idempotent_elastic_partitioning():
+    with Runtime(pools={"default": 1}) as rt:
+        p1 = rt.add_pool("late", 2)
+        p2 = rt.add_pool("late", 5)  # no resize: same pool back
+        assert p1 is p2 and p1.num_workers == 2
+        assert rt.get_executor("late").async_execute(lambda: 9).get() == 9
+
+
+def test_init_partitions_default_and_io_pools():
+    # module-level init() must partition an io plane even unconfigured
+    rt = core.get_runtime()
+    names = set(rt.pool_names())
+    assert "default" in names and "io" in names
+
+
+def test_explicit_partition_is_honored_exactly():
+    """init(pools={...}) without a 'default' entry must not grow hidden
+    pools; affinity consumers fall back to the runtime's default pool."""
+    with Runtime(pools={"compute": 2}, pool_name="compute") as rt:
+        assert rt.pool_names() == ["compute"]
+        assert rt.pool().name == "compute"
+        # "io"/"default" affinity degrades to the default pool, not KeyError
+        assert rt.get_executor("io", fallback="default").async_execute(
+            lambda: 1).get() == 1
+
+
+def test_priority_wrapped_post_failure_stays_loud():
+    """post() through a PriorityExecutor must report like a plain post —
+    never an exception parked in an unread Future."""
+    with Runtime(pools={"pp": 1}, pool_name="pp") as rt:
+        before = counters.get_value("/scheduler{pp}/tasks/failed")
+        rt.get_executor("pp", priority=PRIORITY_HIGH).post(lambda: 1 / 0)
+        assert rt.get_executor("pp").async_execute(lambda: "ok").get(
+            timeout=10.0) == "ok"
+        assert counters.get_value("/scheduler{pp}/tasks/failed") == before + 1
+
+
+def test_pool_isolation_io_saturation_cannot_delay_default():
+    """A saturated 1-worker io pool must not delay PRIORITY_HIGH work on
+    the compute pool (the partitioner's whole point)."""
+    with Runtime(pools={"default": 2, "io": 1}) as rt:
+        release = threading.Event()
+        io_ex = rt.get_executor("io")
+        io_futs = [io_ex.async_execute(lambda: release.wait(10.0))
+                   for _ in range(8)]  # io backlog >> its capacity
+        t0 = time.perf_counter()
+        hi = rt.get_executor("default", priority=PRIORITY_HIGH)
+        assert hi.async_execute(lambda: "fast").get(timeout=5.0) == "fast"
+        latency = time.perf_counter() - t0
+        release.set()
+        [f.get(timeout=30.0) for f in io_futs]
+        assert latency < 1.0, f"io backlog leaked into default: {latency:.3f}s"
+
+
+# ------------------------------------------------------------- policy objects
+def test_policies_are_pure_rewrites():
+    p = par.with_(chunk_size=64, priority=PRIORITY_HIGH)
+    assert (p.chunk_size, p.priority) == (64, PRIORITY_HIGH)
+    assert par.chunk_size is None and par.priority is None  # original untouched
+    assert par.with_(task=True).task and not par.task
+    with pytest.raises(AttributeError):
+        par.chunk_size = 3
+
+
+def test_policy_on_executor_binds_resources(rt):
+    before = _executed("io")
+    bound = par.on(rt.get_executor("io", fallback="default"))
+    from repro.core import algorithms as alg
+
+    assert alg.reduce(bound, list(range(100))) == sum(range(100))
+    assert _executed("io") > before  # chunks ran on the bound pool
+
+
+def test_legacy_kind_spelling_warns_and_maps():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p = ExecutionPolicy(kind="par", chunk_size=7)
+    assert p.flavor == "par" and p.chunk_size == 7
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_legacy_mesh_spellings_warn_and_map():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p1 = ExecutionPolicy("mesh", mesh=mesh, axis="data")
+        p2 = par.on(mesh)  # raw mesh instead of an executor
+    assert p1.kind == p2.kind == "mesh"
+    assert isinstance(p1.executor, MeshExecutor)
+    assert isinstance(p2.executor, MeshExecutor)
+    assert p1.mesh is mesh and p1.axis == "data"  # legacy readers
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) >= 2
+    # modern spelling warns nothing
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        p3 = mesh_policy(mesh)
+        p4 = vec.on(MeshExecutor(mesh, "data"))
+    assert p3.kind == p4.kind == "mesh"
+    assert not [x for x in w2 if issubclass(x.category, DeprecationWarning)]
+
+
+def test_unknown_flavor_rejected():
+    with pytest.raises(ValueError):
+        ExecutionPolicy("warp")
+
+
+# ---------------------------------------------------------- consumer routing
+def test_async_and_dataflow_accept_executor(rt):
+    io_ex = rt.get_executor("io", fallback="default")
+    before = _executed("io")
+    assert core.async_(lambda a: a + 1, 41, executor=io_ex).get() == 42
+    f = core.dataflow(lambda a, b: a * b,
+                      core.async_(lambda: 6, executor=io_ex), 7,
+                      executor=io_ex)
+    assert f.get() == 42
+    assert _executed("io") >= before + 2
+
+
+def test_prefetcher_builds_on_io_pool(rt):
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, Prefetcher
+
+    cfg = get_config("qwen25_3b", smoke=True)
+    before = _executed("io")
+    pf = Prefetcher(cfg, DataConfig(batch_size=2, seq_len=16, prefetch=1))
+    batch = pf.get(0).get(timeout=60)
+    assert batch["tokens"].shape == (2, 17)
+    rt.drain(timeout=30)
+    assert _executed("io") > before, "prefetch ran off the io pool"
+
+
+def test_checkpoint_write_runs_on_io_pool(rt, tmp_path):
+    from repro.checkpoint import ckpt
+
+    before = _executed("io")
+    state = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    out = ckpt.save_async(tmp_path, 3, state).get(timeout=60)
+    assert (out / "manifest.json").exists()
+    assert _executed("io") > before, "checkpoint write ran off the io pool"
+
+
+def test_engine_prefill_runs_on_prefill_pool(rt):
+    from repro.configs import get_config
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config("starcoder2_3b", smoke=True)
+    model = build_model(cfg, get_plan("serve"))
+    params = model.init(jax.random.PRNGKey(0))
+    grt = core.get_runtime()  # whatever runtime is live right now
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=2, cache_len=64, max_new_tokens=3,
+                             name="engine#pools"))
+    assert "prefill" in grt.pool_names()  # engine partitioned its pool
+    before_pf = _executed("prefill")
+    before_def = _executed("default")
+    outs = [f.get(timeout=300) for f in
+            [eng.submit([i + 1, i + 2, i + 3]) for i in range(4)]]
+    assert all(len(o) == 4 for o in outs)
+    assert _executed("prefill") >= before_pf + 4, "prefill off its pool"
+    assert _executed("default") > before_def  # decode chain on compute pool
