@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-serve bench-algorithms smoke
+.PHONY: verify test bench bench-serve bench-algorithms bench-net smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -20,6 +20,9 @@ bench-serve:
 
 bench-algorithms:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_algorithms
+
+bench-net:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_net
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

@@ -1,0 +1,302 @@
+"""Multi-locality runtime benchmark: parcel round-trip latency, remote
+action throughput, zero-copy array bandwidth, and the headline the
+subsystem exists for — router tokens/s over 2 OS-process localities vs 1.
+
+The router comparison uses a deliberately *CPU-bound, GIL-holding*
+synthetic engine (pure-Python hash loop per token): the workload class a
+single Python process cannot scale past one core no matter how many
+scheduler workers it has.  Both configurations run TWO engines behind the
+least-loaded router; only the placement differs:
+
+- **1 locality**  — both engines in this process (one GIL: the ceiling);
+- **2 localities** — one engine here + one on a worker locality reached
+  over the parcelport (two processes, two GILs).
+
+Acceptance (ISSUE 4): 2-locality tokens/s ≥ 1.6× 1-locality.  Because a
+wall-clock ratio can never beat what the host actually grants two
+concurrent processes (shared/oversubscribed CI boxes are often far below
+2.0), the bench first *measures* that ceiling through the stack itself
+(``_host_parallel_ceiling``) and records speedup, ceiling, and their
+ratio (parallel efficiency ≈ how much of the achievable parallelism the
+runtime delivers).  Clients are closed-loop so least-loaded routing
+adapts instead of freezing a 50/50 split.  Results →
+``results/BENCH_net.json``.  Real-model multi-locality serving is
+exercised by ``launch/serve.py --localities N`` and the net test suite;
+XLA already releases the GIL + multithreads, so the synthetic engine is
+the honest carrier of the claim, not a stand-in for it.
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_net.json"
+
+LOCALITIES = 2
+ROUND_TRIPS = 200
+THROUGHPUT_ACTIONS = 256
+ARRAY_MB = 8
+CPU_REQUESTS = 32
+CPU_MAX_NEW = 8
+CPU_WORK = 60_000  # hash-loop iterations per generated token
+
+
+# ------------------------------------------------------- CPU-bound engine
+class CPUEngine:
+    """GIL-bound token generator with the Engine submit/load protocol, so
+    both LocalHandle and serve.router.RemoteEngine can front it."""
+
+    def __init__(self, name: str, work: int = CPU_WORK):
+        self.name = name
+        self.work = work
+        self._load = 0
+
+    def generate(self, prompt, max_new):
+        h, out = len(prompt), []
+        for _ in range(max_new):
+            for i in range(self.work):  # pure-Python: holds the GIL
+                h = (h * 1103515245 + i + 12345) & 0x7FFFFFFF
+            out.append(h & 0x3FF)
+        return out
+
+    def submit(self, prompt, max_new=None, sampling=None, stream=None):
+        from repro.core.future import make_ready_future
+
+        self._load += 1
+        try:
+            return make_ready_future(
+                self.generate(prompt, max_new or CPU_MAX_NEW))
+        finally:
+            self._load -= 1
+
+    def load(self):
+        return float(self._load)
+
+
+class LocalHandle:
+    """In-process async front for a CPUEngine (router engine protocol)."""
+
+    def __init__(self, engine: CPUEngine):
+        import repro.core as core
+
+        self.engine = engine
+        self.name = engine.name
+        self._ex = core.get_runtime().get_executor("default")
+        self._inflight = 0
+
+    def submit(self, prompt, max_new=None, sampling=None, stream=None):
+        import threading
+
+        if not hasattr(self, "_lock"):
+            self._lock = threading.Lock()
+        with self._lock:
+            self._inflight += 1
+        fut = self._ex.async_execute(self.engine.generate, prompt,
+                                     max_new or CPU_MAX_NEW)
+
+        def dec(_f):
+            with self._lock:
+                self._inflight -= 1
+
+        fut.on_ready(dec)
+        return fut
+
+    def load(self):
+        return float(self._inflight)
+
+
+def _spawn_cpu_engine(rt, name, work):
+    """Runs at a worker locality: register a CPUEngine in its AGAS."""
+    from benchmarks.bench_net import CPUEngine
+    from repro.core import agas
+    from repro.net.locality import _gid_key
+
+    gid = agas.default().register(CPUEngine(name, work),
+                                  name=f"/engines/{name}")
+    return list(_gid_key(gid))
+
+
+def _echo_bytes(rt, arr):
+    return arr
+
+
+def _burn(rt, iters):
+    h = 0
+    for i in range(iters):
+        h = (h * 1103515245 + i + 12345) & 0x7FFFFFFF
+    return h
+
+
+def _host_parallel_ceiling():
+    """What THIS host actually gives two GIL-bound processes, measured
+    through the stack itself: the same burn run at locality 0 and
+    locality 1, sequentially vs concurrently.  Shared/oversubscribed CI
+    boxes often deliver well under 2.0 — the router speedup below must be
+    read against this ceiling, not against an assumed one."""
+    import repro.core as core
+    from repro.net import remote as _remote
+
+    iters = CPU_WORK * CPU_MAX_NEW * 4
+    ex = core.get_runtime().get_executor("default")
+    _remote.run_on(1, _burn, 1000).get(timeout=60)  # warm the path
+    t0 = time.perf_counter()
+    ex.async_execute(_burn, None, iters).get(timeout=600)
+    _remote.run_on(1, _burn, iters).get(timeout=600)
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    here = ex.async_execute(_burn, None, iters)
+    there = _remote.run_on(1, _burn, iters)
+    here.get(timeout=600)
+    there.get(timeout=600)
+    t_par = time.perf_counter() - t0
+    return t_seq / t_par
+
+
+def _router_tokens_per_s(handles, requests=CPU_REQUESTS, clients=8):
+    """Closed-loop clients (submit-on-completion) through the least-loaded
+    router — throughput self-balances toward the faster replica."""
+    import threading
+
+    from repro.serve.router import Router
+
+    router = Router(handles)
+    for h in handles:  # untimed warmup: lazy imports, caches, route state
+        h.submit(list(range(8)), max_new=1).get(timeout=600)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 512, size=8).tolist() for _ in range(requests)]
+    counts = []
+
+    def client(k):
+        for j in range(k, requests, clients):
+            counts.append(len(router.submit(prompts[j]).get(timeout=600)))
+
+    threads = [threading.Thread(target=client, args=(k,), daemon=True)
+               for k in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return sum(counts) / wall, wall, sum(counts)
+
+
+def _bench():
+    import repro.core as core
+    from repro import net as rnet
+    from repro.core.agas import GID
+    from repro.net import remote as _remote
+    from repro.serve.router import RemoteEngine
+
+    pools = {"default": 4, "io": 1}
+    net = rnet.bootstrap(LOCALITIES, pools=pools, worker_pools=pools)
+    try:
+        # -- parcel round-trip latency (tiny payload) ---------------------
+        rnet.run_on(1, _echo_bytes, b"warm").get(timeout=60)
+        t0 = time.perf_counter()
+        for _ in range(ROUND_TRIPS):
+            rnet.run_on(1, _echo_bytes, b"x").get(timeout=60)
+        rt_us = (time.perf_counter() - t0) / ROUND_TRIPS * 1e6
+
+        # -- remote-action throughput (overlapped) ------------------------
+        t0 = time.perf_counter()
+        futs = [rnet.run_on(1, _echo_bytes, i)
+                for i in range(THROUGHPUT_ACTIONS)]
+        assert sorted(f.get(timeout=120) for f in futs) == \
+            list(range(THROUGHPUT_ACTIONS))
+        actions_per_s = THROUGHPUT_ACTIONS / (time.perf_counter() - t0)
+
+        # -- zero-copy array bandwidth (round trip) -----------------------
+        arr = np.random.default_rng(0).integers(
+            0, 255, size=ARRAY_MB * 1024 * 1024, dtype=np.uint8)
+        rnet.run_on(1, _echo_bytes, arr[:1024]).get(timeout=60)  # warm
+        t0 = time.perf_counter()
+        back = rnet.run_on(1, _echo_bytes, arr).get(timeout=120)
+        wall = time.perf_counter() - t0
+        assert back[0] == arr[0] and back[-1] == arr[-1]
+        mb_per_s = 2 * ARRAY_MB / wall  # there and back
+
+        # -- what can this host even do? (two GIL-bound processes) --------
+        ceiling = _host_parallel_ceiling()
+
+        # -- router throughput: 1 locality (two local engines, one GIL) ---
+        local = [LocalHandle(CPUEngine("cpu#0a")),
+                 LocalHandle(CPUEngine("cpu#0b"))]
+        tps_1loc, wall_1, total_1 = _router_tokens_per_s(local)
+
+        # -- router throughput: 2 localities (local + remote engine) ------
+        key = _remote.run_on(1, _spawn_cpu_engine, "cpu#1",
+                             CPU_WORK).get(timeout=120)
+        mixed = [LocalHandle(CPUEngine("cpu#0")),
+                 RemoteEngine(net, 1, GID(*key), "cpu#1")]
+        tps_2loc, wall_2, total_2 = _router_tokens_per_s(mixed)
+        remote_share = dict(core.counters.query(
+            "/serve{router}/dispatch/cpu#1"))
+        speedup = tps_2loc / tps_1loc
+        return {
+            "localities": LOCALITIES,
+            "parcel_round_trip_us": round(rt_us, 1),
+            "remote_actions_per_s": round(actions_per_s, 1),
+            "array_round_trip_MB_per_s": round(mb_per_s, 1),
+            "router_cpu_bound": {
+                "requests": CPU_REQUESTS, "max_new": CPU_MAX_NEW,
+                "work_per_token": CPU_WORK,
+                "tokens_per_s_1_locality": round(tps_1loc, 1),
+                "tokens_per_s_2_localities": round(tps_2loc, 1),
+                "wall_s_1_locality": round(wall_1, 3),
+                "wall_s_2_localities": round(wall_2, 3),
+                "speedup_2_localities": round(speedup, 3),
+                "remote_dispatch_share": sum(remote_share.values())
+                / CPU_REQUESTS,
+                # honest context: wall-clock speedup cannot beat what the
+                # host gives two concurrent processes (shared CI boxes are
+                # often well under 2.0); efficiency is speedup / ceiling
+                "host_two_process_ceiling": round(ceiling, 3),
+                "parallel_efficiency": round(min(speedup / ceiling, 1.0), 3)
+                if ceiling > 0 else 0.0,
+                "target_1_6x_met": bool(speedup >= 1.6),
+            },
+        }
+    finally:
+        net.shutdown()
+
+
+def run():
+    res = _bench()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(res, indent=1))
+    rb = res["router_cpu_bound"]
+    return [
+        ("net/parcel_round_trip", res["parcel_round_trip_us"],
+         f"{res['remote_actions_per_s']:.0f} actions/s overlapped"),
+        ("net/array_round_trip", 0.0,
+         f"{res['array_round_trip_MB_per_s']:.0f} MB/s ({ARRAY_MB}MB x2)"),
+        ("net/router_1loc_cpu", 1e6 / max(rb["tokens_per_s_1_locality"], 1e-9),
+         f"{rb['tokens_per_s_1_locality']:.1f} tok/s"),
+        ("net/router_2loc_cpu", 1e6 / max(rb["tokens_per_s_2_localities"], 1e-9),
+         f"{rb['tokens_per_s_2_localities']:.1f} tok/s"),
+        ("net/router_speedup", 0.0,
+         f"{rb['speedup_2_localities']:.2f}x (host 2-proc ceiling "
+         f"{rb['host_two_process_ceiling']:.2f}x; efficiency "
+         f"{rb['parallel_efficiency']:.0%})"),
+    ]
+
+
+def main() -> None:
+    import repro.core as core
+
+    # run through the canonically-imported module, not __main__: worker
+    # localities resolve actions by dotted module name
+    from benchmarks import bench_net as canonical
+
+    core.init(num_workers=4)
+    for name, us, derived in canonical.run():
+        print(f"{name},{us:.2f},{derived}")
+    print(json.dumps(json.loads(OUT.read_text()), indent=1))
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

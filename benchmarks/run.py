@@ -9,8 +9,8 @@ def main() -> None:
 
     core.init(num_workers=4)
     from benchmarks import (bench_algorithms, bench_cholesky, bench_dist,
-                            bench_efficiency, bench_overlap, bench_serve,
-                            bench_stream, bench_tasks)
+                            bench_efficiency, bench_net, bench_overlap,
+                            bench_serve, bench_stream, bench_tasks)
 
     suites = [
         ("tasks", bench_tasks),
@@ -21,6 +21,7 @@ def main() -> None:
         ("efficiency", bench_efficiency),
         ("dist", bench_dist),
         ("serve", bench_serve),
+        ("net", bench_net),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,14 +1,21 @@
 """Batched serving on the paged continuous-batching stack.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py                  # one process
+    PYTHONPATH=src python examples/serve_lm.py --localities 2   # two processes
 
 Requests are submitted as futures (one-sided, HPX semantics); prefill runs
 as PRIORITY_HIGH tasks overlapped with the decode continuation chain, KV
 lives in a block-pool paged cache, and every request streams its tokens
 through a `core.Channel` as the slots advance — first token long before
-the request completes.  Two engine replicas sit behind the least-loaded
-router.
+the request completes.  Engine replicas sit behind the least-loaded router.
+
+With ``--localities 2`` the replicas are real OS processes: locality 0
+(this process, the AGAS root) serves alongside a worker locality reached
+over the parcelport.  Remote submissions return plain futures (token
+channels are per-process), and per-locality token counters are read back
+across the wire at the end — both localities serve.
 """
+import argparse
 import time
 
 import jax
@@ -23,37 +30,78 @@ from repro.serve.router import Router
 
 
 def main() -> None:
-    core.init(num_workers=4)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--localities", type=int, default=1,
+                    help=">1 spreads engines over OS-process localities")
+    args = ap.parse_args()
+
+    scfg = ServeConfig(max_batch=4, cache_len=128, max_new_tokens=12)
     cfg = get_config("qwen25_3b", smoke=True)
-    model = build_model(cfg, get_plan("futurized"))
-    params = model.init(jax.random.PRNGKey(0))
-    router = Router.replicate(
-        model, params,
-        ServeConfig(max_batch=4, cache_len=128, max_new_tokens=12),
-        replicas=2)
+    if args.localities > 1:
+        from repro import net as rnet
+
+        pools = {"default": 4, "prefill": 2, "io": 1}
+        net = rnet.bootstrap(args.localities, pools=pools, worker_pools=pools)
+        router = Router.over_localities(net, "qwen25_3b", scfg, smoke=True,
+                                        plan="serve")
+    else:
+        net = None
+        core.init(num_workers=4)
+        model = build_model(cfg, get_plan("futurized"))
+        params = model.init(jax.random.PRNGKey(0))
+        router = Router.replicate(model, params, scfg, replicas=2)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    streams = []
-    for i in range(10):  # 10 requests, 2×4 slots → continuous batching
-        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(3, 24)).tolist()
-        # even requests greedy, odd requests sampled
-        sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95) if i % 2 \
-            else SamplingParams()
-        streams.append((prompt, sp, *router.submit_stream(prompt, sampling=sp)))
-    for prompt, sp, ch, fut in streams:
-        toks = list(ch)  # arrives token-by-token as the slot advances
-        out = fut.get(timeout=600)
-        assert toks == out
-        mode = "sampled" if sp.temperature > 0 else "greedy "
-        print(f"{mode} prompt[{len(prompt):2d} toks] → {out}")
-    dt = time.perf_counter() - t0
-    total = int(sum(core.counters.get_value(f"/serve{{engine#{i}}}/tokens/generated")
-                    for i in range(2)))
-    print(f"\n10 requests, {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
-    print("dispatch:", dict(core.counters.query("/serve{router}/dispatch/*")))
-    print("pages in use:",
-          dict(core.counters.query("/serve{engine#*}/pages/in_use")))
+    if net is None:
+        streams = []
+        for i in range(10):  # 10 requests, 2×4 slots → continuous batching
+            prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(3, 24)).tolist()
+            # even requests greedy, odd requests sampled
+            sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95) if i % 2 \
+                else SamplingParams()
+            streams.append((prompt, sp, *router.submit_stream(prompt, sampling=sp)))
+        for prompt, sp, ch, fut in streams:
+            toks = list(ch)  # arrives token-by-token as the slot advances
+            out = fut.get(timeout=600)
+            assert toks == out
+            mode = "sampled" if sp.temperature > 0 else "greedy "
+            print(f"{mode} prompt[{len(prompt):2d} toks] → {out}")
+        dt = time.perf_counter() - t0
+        total = int(sum(core.counters.get_value(f"/serve{{engine#{i}}}/tokens/generated")
+                        for i in range(2)))
+        print(f"\n10 requests, {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+        print("dispatch:", dict(core.counters.query("/serve{router}/dispatch/*")))
+        print("pages in use:",
+              dict(core.counters.query("/serve{engine#*}/pages/in_use")))
+    else:
+        from repro import net as rnet
+
+        # mixed batch: greedy and sampled prompts, futures only (one-sided)
+        futures = []
+        for i in range(12):
+            prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(3, 24)).tolist()
+            sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95) if i % 2 \
+                else SamplingParams()
+            futures.append((prompt, sp, router.submit(prompt, sampling=sp)))
+        total = 0
+        for prompt, sp, fut in futures:
+            out = fut.get(timeout=600)
+            total += len(out)
+            mode = "sampled" if sp.temperature > 0 else "greedy "
+            print(f"{mode} prompt[{len(prompt):2d} toks] → {out}")
+        dt = time.perf_counter() - t0
+        print(f"\n12 requests, {total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+        print("dispatch:", dict(core.counters.query("/serve{router}/dispatch/*")))
+        per_loc = {}
+        for loc in range(args.localities):
+            toks = dict(rnet.query_counters(
+                loc, "/serve{engine*}/tokens/generated"))
+            per_loc[f"locality#{loc}"] = sum(toks.values())
+        print("tokens by locality:", per_loc)
+        assert all(v > 0 for v in per_loc.values()), \
+            "every locality should have served tokens"
+        net.shutdown()
     core.finalize()
 
 

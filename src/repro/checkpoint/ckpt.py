@@ -14,6 +14,13 @@ Fault-tolerance story (DESIGN.md §5):
 - **integrity** — manifest with step, per-leaf shape/dtype and config
   fingerprint; ``latest_step`` scans for resumable checkpoints, torn writes
   are detected by the manifest being written last.
+- **by GID, across localities** — ``save_gid`` snapshots any AGAS object
+  (local *or* on another locality: the state travels home over the
+  parcelport) and records its identity in ``agas.json``; ``restore_gid``
+  installs the state on any chosen locality under the original symbolic
+  name, re-publishing through the root AGAS table.  This is what lets an
+  engine be respawned on a fresh locality: the filesystem is just another
+  parcelport with infinite latency.
 """
 
 from __future__ import annotations
@@ -108,6 +115,78 @@ def latest_step(ckpt_dir: Path) -> Optional[int]:
         if (p / "manifest.json").exists():
             steps.append(int(p.name.split("_")[1]))
     return max(steps) if steps else None
+
+
+def save_gid(ckpt_dir: Path, step: int, target: Any,
+             timeout: float = 120.0) -> Path:
+    """Save an AGAS-registered object's state by GID or symbolic name.
+
+    A locally-resolvable target is snapshotted in-process; otherwise the
+    multi-locality runtime (``repro.net``) resolves the owner through the
+    root AGAS table and fetches a host copy over the parcelport.  The
+    checkpoint directory gains an ``agas.json`` recording the GID and name
+    so ``restore_gid`` can re-install the object under its old identity.
+    """
+    from repro.core import agas as _agas
+
+    a = _agas.default()
+    name: Optional[str] = target if isinstance(target, str) else None
+    if a.contains(target):
+        rec = a.record(target)
+        state, gid, name = rec.obj, rec.gid, rec.name
+    else:
+        from repro import net as _net
+
+        _net.require()
+        meta = _net.describe(target, timeout=timeout)
+        gid = _agas.GID(*meta["gid"])
+        name = name if name is not None else meta["name"]
+        # describe cached the resolution: the fetch goes straight to the owner
+        state = _net.fetch(gid, timeout=timeout)
+    out = save(ckpt_dir, step, state)
+    (out / "agas.json").write_text(json.dumps(
+        {"gid": [gid.locality, gid.seq], "name": name}))
+    return out
+
+
+def restore_gid(ckpt_dir: Path, step: Optional[int] = None,
+                locality: Optional[int] = None,
+                timeout: float = 120.0) -> Tuple[int, Any]:
+    """Restore a ``save_gid`` checkpoint onto ``locality`` (default: here).
+
+    The state is registered (or rebound) under the checkpoint's symbolic
+    name at the target locality — publishing through the root AGAS table —
+    and the *new* GID is returned: the object was re-homed, so it carries
+    the identity of the locality that now owns it (elastic respawn, not
+    resurrection of a dead process's address space)."""
+    from repro.core import agas as _agas
+
+    step, state = restore(ckpt_dir, step)
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    meta_path = d / "agas.json"
+    meta = json.loads(meta_path.read_text()) if meta_path.exists() else {}
+    name = meta.get("name")
+
+    from repro import net as _net
+
+    net = _net.current()
+    if locality is not None and net is None:
+        raise RuntimeError(
+            f"restore_gid(locality={locality}) needs a multi-locality "
+            "runtime: call repro.net.bootstrap(n) first")
+    if net is None or locality is None or locality == net.locality:
+        a = _agas.default()
+        if name is not None and a.contains(name):
+            gid = a.gid_of(name)
+            a.rebind(gid, state)
+        else:
+            gid = a.register(state, name=name)
+        return step, gid
+    from repro.net import remote as _remote
+
+    key = _net.run_on(locality, _remote._install_state, name,
+                      state).get(timeout=timeout)
+    return step, _agas.GID(*key)
 
 
 def restore(ckpt_dir: Path, step: Optional[int] = None,

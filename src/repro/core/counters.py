@@ -215,14 +215,17 @@ class CounterRegistry:
         return c.get_value()
 
     def query(self, pattern: str) -> List[Tuple[str, float]]:
-        """Glob query, HPX ``--hpx:print-counter`` style: ``/scheduler*``."""
+        """Glob query, HPX ``--hpx:print-counter`` style: ``/scheduler*``.
+
+        The ``(name, counter)`` pairs are copied under the lock, then
+        evaluated outside it: ``get_value`` may run a callable counter that
+        takes other locks or registers further counters (pump threads do),
+        so evaluating while holding the registry lock would deadlock or
+        die with "dict changed size during iteration"."""
         with self._lock:
-            names = sorted(self._counters)
-        return [
-            (n, self._counters[n].get_value())
-            for n in names
-            if fnmatch.fnmatch(n, pattern)
-        ]
+            items = [(n, self._counters[n]) for n in sorted(self._counters)
+                     if fnmatch.fnmatch(n, pattern)]
+        return [(n, c.get_value()) for n, c in items]
 
     def names(self) -> List[str]:
         with self._lock:
@@ -234,9 +237,13 @@ class CounterRegistry:
                 if hasattr(c, "reset"):
                     c.reset()
 
-    def snapshot(self) -> Dict[str, float]:
-        with self._lock:
-            return {n: c.get_value() for n, c in self._counters.items()}
+    def snapshot(self, pattern: str = "*") -> Dict[str, float]:
+        """Consistent point-in-time copy: membership is fixed under the
+        lock, values are read outside it (see :meth:`query` for why).  This
+        is also the payload of the remote-snapshot action — a locality's
+        counters are read across the parcelport via
+        ``repro.net.query_counters``."""
+        return dict(self.query(pattern))
 
 
 class _CallableCounter:

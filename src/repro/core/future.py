@@ -121,7 +121,14 @@ class Future(Generic[T]):
 
     # -- composition ------------------------------------------------------
     def _on_ready(self, cb: Callable[["Future[T]"], None]) -> None:
-        """Run ``cb(self)`` when ready (immediately if already ready)."""
+        """Run ``cb(self)`` when ready (immediately if already ready).
+
+        The callback NEVER runs under the future's lock — neither from
+        ``_set`` (completion) nor from the already-ready fast path here —
+        so a callback may itself call ``get``/``then``/``on_ready`` on this
+        future without deadlocking.  This is what makes the callback a safe
+        remote-completion hook: the net layer forwards results over the
+        parcelport from inside one."""
         run_now = False
         with self._cond:
             if self._state is FutureState.PENDING:
@@ -130,6 +137,14 @@ class Future(Generic[T]):
                 run_now = True
         if run_now:
             cb(self)
+
+    def on_ready(self, cb: Callable[["Future[T]"], None]) -> None:
+        """Public completion hook (value *or* exception): ``cb(self)`` runs
+        exactly once, on the completing thread (or inline when already
+        ready), outside the future's lock.  Unlike :meth:`then` it spawns
+        no task — use it for cheap bookkeeping (counter updates, result
+        forwarding); use ``then`` for real continuations."""
+        self._on_ready(cb)
 
     def then(self, fn: Callable[["Future[T]"], U], priority: Optional[int] = None) -> "Future[U]":
         """HPX ``future::then`` — attach a continuation, get a new future.
@@ -179,6 +194,16 @@ class Promise(Generic[T]):
 
     def set_exception(self, exc: BaseException) -> None:
         self._future._set(None, exc)
+
+    def set_from(self, ready: "Future[T]") -> None:
+        """Copy a *ready* future's outcome (value or exception) into this
+        promise — the completion relay used when a result crosses a retry
+        loop or the parcelport (remote completion)."""
+        exc = ready.exception()
+        if exc is not None:
+            self._future._set(None, exc)
+        else:
+            self._future._set(ready._value, None)
 
 
 class ChannelClosed(FutureError):

@@ -37,7 +37,14 @@ from repro.core.future import Future
 
 
 class ActionRegistry:
-    """Named action table (HPX: ``HPX_REGISTER_ACTION``)."""
+    """Named action table (HPX: ``HPX_REGISTER_ACTION``).
+
+    Resolution is *lazy across processes*: a worker locality receiving a
+    parcel for an action it has never imported resolves the dotted default
+    name (``module.qualname``) by importing the module — the action-table
+    analogue of HPX's registration macros running at static-init time in
+    every locality's binary.
+    """
 
     def __init__(self) -> None:
         self._actions: Dict[str, Callable[..., Any]] = {}
@@ -53,7 +60,57 @@ class ActionRegistry:
 
     def resolve(self, name: str) -> Callable[..., Any]:
         with self._lock:
-            return self._actions[name]
+            fn = self._actions.get(name)
+        if fn is not None:
+            return fn
+        self._import_defining_module(name)
+        with self._lock:
+            fn = self._actions.get(name)
+        if fn is not None:
+            return fn
+        # plain module-level function (registered ad hoc at the sender, so
+        # no decorator ran here): walk module attributes by qualname
+        fn = self._locate_by_qualname(name)
+        if fn is not None:
+            self.register(fn, name)
+            return fn
+        raise KeyError(f"unknown action: {name!r}")
+
+    def _locate_by_qualname(self, name: str) -> Optional[Callable[..., Any]]:
+        import sys
+
+        parts = name.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            mod = sys.modules.get(".".join(parts[:cut]))
+            if mod is None:
+                continue
+            obj: Any = mod
+            try:
+                for attr in parts[cut:]:
+                    obj = getattr(obj, attr)
+            except AttributeError:
+                continue
+            if callable(obj):
+                return obj
+        return None
+
+    def _import_defining_module(self, name: str) -> None:
+        """Import the longest module prefix of ``module.qualname`` so the
+        ``@action`` decorators at its top level run and self-register."""
+        import importlib
+
+        parts = name.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            modname = ".".join(parts[:cut])
+            try:
+                importlib.import_module(modname)
+                return
+            except ModuleNotFoundError as e:
+                missing_is_target = e.name and (
+                    modname == e.name or modname.startswith(e.name + "."))
+                if not missing_is_target:
+                    raise  # a real dependency failure inside the module
+                continue  # qualname segment, not a module — try shorter
 
     def names(self):
         with self._lock:
@@ -105,9 +162,20 @@ class ParcelPort:
         self.c_actions = reg.counter(f"/parcel{{{name}}}/actions/executed")
 
     def send(self, parcel: Parcel) -> Future[Any]:
-        """Deliver a parcel: resolve target, run action where the data is."""
+        """Deliver a parcel: resolve target, run action where the data is.
+
+        With a multi-locality runtime up (:mod:`repro.net`), a parcel whose
+        target does not resolve locally is handed to the installed remote
+        route — the transport resolves the owning locality through the
+        distributed AGAS tier and ships the invocation over the parcelport.
+        """
         self.c_sent.increment()
         resolver = self.resolver
+        route = _remote_route
+        if route is not None and not resolver.contains(parcel.target):
+            remote_future = route(parcel)
+            if remote_future is not None:
+                return remote_future
 
         def _deliver() -> Any:
             rec = resolver.record(parcel.target)
@@ -125,6 +193,16 @@ class ParcelPort:
 
 _port: Optional[ParcelPort] = None
 _port_lock = threading.Lock()
+
+# Remote transport hook, installed by repro.net when localities are real
+# processes: fn(parcel) -> Future | None (None = "target is local after all").
+_remote_route = None
+
+
+def set_remote_route(fn) -> None:
+    """Install/uninstall (``None``) the cross-locality delivery path."""
+    global _remote_route
+    _remote_route = fn
 
 
 def default_port() -> ParcelPort:

@@ -1,9 +1,12 @@
 """Serving launcher: batched requests through the paged continuous-batching
-serving stack (engine replicas behind the least-loaded router).
+serving stack (engine replicas behind the least-loaded router), optionally
+spread over multiple OS-process localities.
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
       --requests 8 --max-new 16 --engines 2 --temperature 0.8 --top-k 40
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
+      --requests 12 --max-new 16 --localities 2
 """
 
 from __future__ import annotations
@@ -28,7 +31,11 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     # routing layer
     ap.add_argument("--engines", type=int, default=1,
-                    help="engine replicas behind the least-loaded router")
+                    help="engine replicas behind the least-loaded router "
+                         "(single-locality mode)")
+    ap.add_argument("--localities", type=int, default=1,
+                    help="OS-process localities; >1 bootstraps repro.net "
+                         "and runs one engine per locality")
     # cache layer
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--no-paged", action="store_true",
@@ -42,36 +49,43 @@ def main() -> None:
     ap.add_argument("--stream", action="store_true",
                     help="consume tokens via per-request channels")
     args = ap.parse_args()
+    if args.localities > 1 and args.stream:
+        ap.error("--stream is per-process (channels cannot cross localities);"
+                 " use --localities 1")
+    if args.localities > 1 and args.engines != 1:
+        ap.error("--engines is single-locality replication; with "
+                 "--localities N the topology is one engine per locality")
 
     import repro.core as core
     from repro.configs import get_config
     from repro.dist.plan import get_plan
     from repro.models.model import build_model
     from repro.serve.engine import SamplingParams, ServeConfig
-    from repro.serve.router import Router
+    from repro.serve.router import Router, default_extra_inputs
 
     # Resource partition: decode continuations on "default", prefill on its
-    # own pool, host I/O (logging/ckpt) on "io" — capacity goes where the
-    # work is, and I/O can never stall a decode step.
-    core.init(pools={"default": args.workers, "prefill": 2, "io": 1})
+    # own pool, host I/O (logging/ckpt/parcel pumps) on "io" — capacity goes
+    # where the work is, and I/O can never stall a decode step.
+    pools = {"default": args.workers, "prefill": 2, "io": 1}
+    core.init(pools=pools)
     cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg, get_plan(args.plan))
-    params = model.init(jax.random.PRNGKey(0))
-
-    extra = {}
-    if cfg.family == "vlm":
-        extra["patches"] = jax.numpy.zeros((1, cfg.n_patches, cfg.d_model),
-                                           jax.numpy.bfloat16)
-    if cfg.family == "encdec":
-        extra["enc"] = jax.numpy.zeros((1, 64, cfg.d_model), jax.numpy.bfloat16)
-        extra["enc_len"] = 64
 
     scfg = ServeConfig(max_batch=args.max_batch, cache_len=args.cache_len,
                        max_new_tokens=args.max_new, page_size=args.page_size,
                        paged=not args.no_paged,
                        pipeline_admission=not args.no_pipeline)
-    router = Router.replicate(model, params, scfg, args.engines,
-                              extra_inputs=extra)
+    net = None
+    if args.localities > 1:
+        from repro import net as rnet
+
+        net = rnet.bootstrap(args.localities, pools=pools, worker_pools=pools)
+        router = Router.over_localities(net, args.arch, scfg,
+                                        smoke=args.smoke, plan=args.plan)
+    else:
+        model = build_model(cfg, get_plan(args.plan))
+        params = model.init(jax.random.PRNGKey(0))
+        router = Router.replicate(model, params, scfg, args.engines,
+                                  extra_inputs=default_extra_inputs(cfg))
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(0)
@@ -94,14 +108,26 @@ def main() -> None:
         outs = [f.get(timeout=600) for f in futures]
     dt = time.perf_counter() - t0
     total_tokens = sum(len(o) for o in outs)
-    print(json.dumps({
+    report = {
         "requests": len(outs),
-        "engines": args.engines,
+        "engines": len(router.engines),
+        "localities": args.localities,
         "generated_tokens": total_tokens,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(total_tokens / dt, 2),
         "counters": dict(core.counters.query("/serve*")),
-    }, indent=1))
+    }
+    if net is not None:
+        from repro import net as rnet
+
+        # per-locality serving counters, read across the parcelport
+        report["per_locality_tokens"] = {
+            f"locality#{loc}": dict(rnet.query_counters(
+                loc, "/serve{engine*}/tokens/generated"))
+            for loc in range(args.localities)
+        }
+        net.shutdown()
+    print(json.dumps(report, indent=1))
     core.finalize()
 
 

@@ -1,0 +1,45 @@
+"""repro.net — the multi-locality runtime: localities as OS processes.
+
+The subsystem that makes "locality" mean what the paper means (§2.2–2.3):
+a separate runtime instance reached only through parcels.
+
+    bootstrap(n)            fork n-1 worker runtimes; caller = AGAS root
+    apply_remote(a, gid)    one-sided invoke where the object lives
+    run_on(loc, fn, ...)    invoke against a locality's runtime itself
+    migrate_remote(gid, L)  move an object; GID stays valid (gen bump)
+    query_counters(loc, p)  a locality's performance counters, via parcel
+    fetch(gid)              host snapshot of a (remote) object's state
+    current() / require()   the process's NetRuntime, if bootstrapped
+
+Layering: :mod:`repro.net.parcelport` moves zero-copy frames,
+:mod:`repro.net.locality` runs the per-process endpoint + bootstrap, and
+:mod:`repro.net.remote` adds the distributed AGAS tier on top.  This
+package is the *only* place in the tree allowed to open sockets or start
+processes (enforced by ``tests/test_api_guard.py``).
+"""
+
+from repro.net.locality import (
+    ROOT,
+    Locality,
+    NetRuntime,
+    UnknownGid,
+    bootstrap,
+    current,
+    require,
+)
+from repro.net.parcelport import PortClosed
+from repro.net.remote import (
+    apply_remote,
+    describe,
+    fetch,
+    migrate_remote,
+    query_counters,
+    run_on,
+)
+
+__all__ = [
+    "ROOT", "Locality", "NetRuntime", "UnknownGid", "PortClosed",
+    "bootstrap", "current", "require",
+    "apply_remote", "describe", "fetch", "migrate_remote", "query_counters",
+    "run_on",
+]

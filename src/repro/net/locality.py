@@ -1,0 +1,578 @@
+"""Localities as real OS processes (HPX §2.2: the unit of distribution).
+
+Until this subsystem, a "locality" in this repo was a sharding — every
+parcel, AGAS record and migration lived inside one OS process.  Here
+:func:`bootstrap` makes localities *processes*: it forks ``n-1`` worker
+runtimes (``multiprocessing`` spawn — never ``fork``, which would duplicate
+live scheduler threads mid-lock) and wires every worker to locality 0 over
+the parcelport.  Locality 0 is the **AGAS root**: it owns the authoritative
+GID → owner-locality table (see :mod:`repro.net.remote`) and acts as the
+frame switch for worker↔worker traffic (hub-and-spoke, the LCI study's
+"put the progress engine where the wires meet").
+
+Topology::
+
+        locality#1 ──┐
+        locality#2 ──┤── locality#0 (root: AGAS table + frame switch)
+        locality#3 ──┘
+         each: NetRuntime + AMT scheduler + parcelport connection
+
+Every process runs the full single-process stack (scheduler pools,
+executors, AGAS, counters) plus one :class:`NetRuntime`:
+
+- **send side** — ``send_parcel(dst, action, target, args)`` allocates a
+  sequence number, parks a :class:`~repro.core.future.Promise` in the
+  pending table and enqueues a frame; the returned Future is completed by
+  the matching result frame (the remote-completion path).
+- **receive side** — the parcelport's receive pump posts parcel execution
+  into the scheduler's "io" pool (a blocked action helps along, so nested
+  remote calls cannot deadlock the pool) and completes pending promises
+  inline for result frames.
+- **integration** — ``bootstrap`` installs the AGAS hook (registrations
+  publish to the root table) and the core parcel remote-route, so
+  ``repro.core.parcel.apply`` transparently crosses process boundaries.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import agas as _agas
+from repro.core import counters as _counters
+from repro.core import executor as _executor
+from repro.core import parcel as _parcel
+from repro.core.future import Future, Promise
+from repro.net import parcelport as _pp
+
+ROOT = 0
+
+_GidKey = Tuple[int, int]  # (locality, seq) — the wire form of a GID
+
+
+@dataclass(frozen=True)
+class Locality:
+    """Handle to one locality (HPX ``hpx::naming::id_type`` of a locality)."""
+
+    id: int
+
+    def __repr__(self) -> str:
+        return f"locality#{self.id}"
+
+
+class UnknownGid(RuntimeError):
+    """The target GID does not resolve at the locality that was asked.
+
+    Carried across the wire as the stale-resolution signal: the caller
+    invalidates its cached placement and re-resolves through the root
+    (generation-based invalidation — see ``repro.net.remote``).
+    """
+
+    @property
+    def key(self) -> _GidKey:
+        return self.args[0]
+
+    @property
+    def locality(self) -> int:
+        return self.args[1]
+
+
+def _gid_key(gid: _agas.GID) -> _GidKey:
+    return (gid.locality, gid.seq)
+
+
+class NetRuntime:
+    """Per-process endpoint of the multi-locality runtime."""
+
+    def __init__(self, locality: int, n_localities: int):
+        self.locality = locality
+        self.n_localities = n_localities
+        self._conns: Dict[int, _pp.Connection] = {}
+        # seq → (promise, destination locality): the dst lets a dead-peer
+        # notification fail exactly the calls that can no longer complete
+        self._pending: Dict[int, Tuple[Promise, int]] = {}
+        self._pending_lock = threading.Lock()
+        self._seq = itertools.count(1)
+        self._stop = threading.Event()
+        self._procs: List[Any] = []  # root only: worker Process handles
+        self._hook_installed = False
+
+        # distributed-AGAS state (root: authoritative; workers: cache only)
+        self._table: Dict[_GidKey, Tuple[int, int]] = {}  # key → (owner, gen)
+        self._names: Dict[str, _GidKey] = {}
+        self._table_lock = threading.Lock()
+        self._cache: Dict[_GidKey, Tuple[int, int]] = {}
+        self._name_cache: Dict[str, _GidKey] = {}
+        self._cache_lock = threading.Lock()
+
+        # parcels execute on the "io" pool (falling back to the default
+        # pool on unpartitioned runtimes); help-along keeps blocked actions
+        # from wedging it.  Executors are the only sanctioned pool entry.
+        self._exec = _executor.get_executor("io", fallback="default")
+
+        reg = _counters.default()
+        p = f"/net{{locality#{locality}}}"
+        self.c_actions = reg.counter(f"{p}/actions/executed")
+        self.c_forwarded = reg.counter(f"{p}/parcels/forwarded")
+        self.c_stale = reg.counter(f"{p}/resolutions/stale")
+        self.c_cache_hits = reg.counter(f"{p}/resolutions/cache_hits")
+        self.c_root_lookups = reg.counter(f"{p}/resolutions/root_lookups")
+
+    # ------------------------------------------------------------- topology
+    @property
+    def localities(self) -> List[Locality]:
+        return [Locality(i) for i in range(self.n_localities)]
+
+    def is_root(self) -> bool:
+        return self.locality == ROOT
+
+    # ------------------------------------------------------------ send side
+    def send_parcel(self, dst: int, action_name: str,
+                    target: Optional[_GidKey], args: Tuple[Any, ...] = (),
+                    kwargs: Optional[Dict[str, Any]] = None,
+                    want_result: bool = True) -> Optional[Future]:
+        """One-sided invoke on locality ``dst``: run ``action`` against the
+        object at ``target`` (``None`` → the destination's NetRuntime).
+        Returns the result Future, or ``None`` for fire-and-forget."""
+        if not (0 <= dst < self.n_localities):
+            raise ValueError(f"no such locality: {dst}")
+        kwargs = kwargs or {}
+        promise: Optional[Promise] = Promise() if want_result else None
+
+        if dst == self.locality:  # local shortcut — no wire, no pending slot
+            self._exec.post(self._execute_local, action_name, target,
+                            args, kwargs, promise)
+            return promise.future() if promise else None
+
+        seq = 0
+        if want_result:
+            seq = next(self._seq)
+            with self._pending_lock:
+                self._pending[seq] = (promise, dst)
+
+        header = {"t": _pp.PARCEL, "src": self.locality, "dst": dst,
+                  "seq": seq, "a": action_name,
+                  "g": list(target) if target is not None else None}
+        try:
+            self._route_to(dst).send(header, (args, kwargs))
+        except BaseException:
+            # ANY send-side failure (port closed, unpicklable args, frame
+            # too large) surfaces synchronously — reclaim the pending slot
+            # or it leaks for the runtime's lifetime
+            if seq:
+                with self._pending_lock:
+                    self._pending.pop(seq, None)
+            raise
+        return promise.future() if promise else None
+
+    def _route_to(self, dst: int) -> _pp.Connection:
+        conn = self._conns.get(dst)
+        if conn is None:
+            conn = self._conns.get(ROOT)  # workers reach peers via the root
+        if conn is None or conn.closed:
+            raise _pp.PortClosed(f"no route to locality#{dst}")
+        return conn
+
+    # --------------------------------------------------------- receive side
+    def _on_frame(self, header: Dict[str, Any], frame: memoryview,
+                  conn: _pp.Connection) -> None:
+        """Receive-pump entry: forward, execute, or complete."""
+        t, dst = header["t"], header.get("dst", self.locality)
+        if dst != self.locality and t in (_pp.PARCEL, _pp.RESULT):
+            # root as frame switch: worker↔worker traffic hops through here
+            self.c_forwarded.increment()
+            try:
+                self._route_to(dst).send_chunks(_pp.forward_chunks(frame))
+            except _pp.PortClosed:
+                if t == _pp.PARCEL and header.get("seq"):
+                    self._send_result(header, None,
+                                      _pp.PortClosed(f"locality#{dst} is down"))
+            return
+        if t == _pp.PARCEL:
+            try:
+                payload = _pp.decode_payload(header, _pp.frame_rest(frame))
+            except BaseException as e:  # noqa: BLE001 — tell the sender
+                if header.get("seq"):
+                    self._send_result(header, None, RuntimeError(
+                        f"locality#{self.locality} could not decode parcel "
+                        f"args for action {header.get('a')!r}: {e!r}"))
+                return
+            args, kwargs = payload if payload is not None else ((), {})
+            self._exec.post(self._execute_parcel, header, args, kwargs)
+        elif t == _pp.RESULT:
+            # pop BEFORE decoding: a payload that fails to unpickle (e.g.
+            # an exception class not importable here) must fail the caller
+            # immediately, not leave it blocked until its own timeout
+            with self._pending_lock:
+                entry = self._pending.pop(header["seq"], None)
+            if entry is None:
+                return
+            promise = entry[0]
+            try:
+                payload = _pp.decode_payload(header, _pp.frame_rest(frame))
+            except BaseException as e:  # noqa: BLE001
+                promise.set_exception(RuntimeError(
+                    f"result from locality#{header.get('src')} could not "
+                    f"be decoded: {e!r}"))
+                return
+            if header.get("ok"):
+                promise.set_value(payload)
+            else:
+                promise.set_exception(payload)
+        elif t == _pp.BYE:
+            self._stop.set()
+
+    def _resolve_target(self, target: Optional[_GidKey]) -> Any:
+        if target is None:
+            return self
+        gid = _agas.GID(*target)
+        resolver = _agas.default()
+        if not resolver.contains(gid):
+            raise UnknownGid(tuple(target), self.locality)
+        return resolver.resolve(gid)
+
+    def _execute_parcel(self, header: Dict[str, Any], args: Tuple[Any, ...],
+                        kwargs: Dict[str, Any]) -> None:
+        """Run one decoded parcel on a pool worker; reply if a result is
+        wanted.  Never raises — failures travel back as result frames."""
+        try:
+            target = header.get("g")
+            obj = self._resolve_target(tuple(target) if target else None)
+            fn = _parcel._registry.resolve(header["a"])
+            value, exc = fn(obj, *args, **kwargs), None
+            self.c_actions.increment()
+        except BaseException as e:  # noqa: BLE001 — ship it back
+            value, exc = None, e
+            if isinstance(e, UnknownGid):
+                self.c_stale.increment()
+        if header.get("seq"):
+            self._send_result(header, value, exc)
+        elif exc is not None:
+            import traceback
+
+            traceback.print_exception(type(exc), exc, exc.__traceback__)
+
+    def _execute_local(self, action_name: str, target: Optional[_GidKey],
+                       args: Tuple[Any, ...], kwargs: Dict[str, Any],
+                       promise: Optional[Promise]) -> None:
+        try:
+            obj = self._resolve_target(target)
+            fn = _parcel._registry.resolve(action_name)
+            value = fn(obj, *args, **kwargs)
+            self.c_actions.increment()
+            if promise is not None:
+                promise.set_value(value)
+        except BaseException as e:  # noqa: BLE001
+            if promise is not None:
+                promise.set_exception(e)
+
+    def _send_result(self, req_header: Dict[str, Any], value: Any,
+                     exc: Optional[BaseException]) -> None:
+        reply = {"t": _pp.RESULT, "src": self.locality,
+                 "dst": req_header["src"], "seq": req_header["seq"]}
+        chunks = _pp.encode_result_payload(reply, value, exc)
+        try:
+            if req_header["src"] == self.locality:
+                raise _pp.PortClosed("result loop")  # unreachable by design
+            self._route_to(req_header["src"]).send_chunks(chunks)
+        except _pp.PortClosed:
+            pass  # requester is gone; nothing to tell
+
+    # ------------------------------------------------ distributed AGAS tier
+    # Root-side authoritative table.  Workers call these through the
+    # _root_* actions in repro.net.remote; the root's own AGAS hook calls
+    # them directly (no wire hop at the root).
+    def publish_local(self, key: _GidKey, owner: int, generation: int,
+                      name: Optional[str]) -> int:
+        with self._table_lock:
+            cur = self._table.get(key)
+            if cur is not None and cur[1] > generation:
+                return cur[1]  # stale publish raced a newer one: keep newest
+            self._table[key] = (owner, generation)
+            if name is not None:
+                self._names[name] = key
+            return generation
+
+    def unpublish_local(self, key: _GidKey, owner: int) -> bool:
+        """Drop ``key`` only while ``owner`` still owns it (an unregister
+        racing a migration must not erase the new owner's entry)."""
+        with self._table_lock:
+            cur = self._table.get(key)
+            if cur is None or cur[0] != owner:
+                return False
+            del self._table[key]
+            for n, k in list(self._names.items()):
+                if k == key:
+                    del self._names[n]
+            return True
+
+    def lookup_local(self, key: _GidKey) -> Tuple[int, int]:
+        with self._table_lock:
+            cur = self._table.get(key)
+        if cur is None:
+            raise UnknownGid(tuple(key), self.locality)
+        return cur
+
+    def lookup_name_local(self, name: str) -> _GidKey:
+        with self._table_lock:
+            key = self._names.get(name)
+        if key is None:
+            raise KeyError(f"AGAS root: name not published: {name!r}")
+        return key
+
+    # Per-locality resolution cache (generation-based invalidation).
+    def cache_get(self, key: _GidKey) -> Optional[Tuple[int, int]]:
+        with self._cache_lock:
+            hit = self._cache.get(key)
+        if hit is not None:
+            self.c_cache_hits.increment()
+        return hit
+
+    def cache_put(self, key: _GidKey, owner: int, generation: int) -> None:
+        with self._cache_lock:
+            cur = self._cache.get(key)
+            if cur is None or generation >= cur[1]:
+                self._cache[key] = (owner, generation)
+
+    def cache_invalidate(self, key: _GidKey) -> None:
+        with self._cache_lock:
+            self._cache.pop(key, None)
+            for name, k in list(self._name_cache.items()):
+                if k == key:
+                    del self._name_cache[name]
+
+    def name_cache_get(self, name: str) -> Optional[_GidKey]:
+        with self._cache_lock:
+            return self._name_cache.get(name)
+
+    def name_cache_put(self, name: str, key: _GidKey) -> None:
+        with self._cache_lock:
+            self._name_cache[name] = key
+
+    # ------------------------------------------------------------ AGAS hook
+    def _agas_hook(self, event: str, rec: _agas.AgasRecord) -> None:
+        """Publish local AGAS mutations to the root table.
+
+        Counter registrations (names under ``/counters``) stay local —
+        they are read remotely via the counter-snapshot action instead of
+        being mirrored (thousands of entries, zero cross-process readers
+        of the *objects*)."""
+        name = rec.name
+        if name is not None and name.startswith("/counters"):
+            return
+        from repro.net import remote as _remote
+
+        key = _gid_key(rec.gid)
+        if event in ("register", "rebind"):
+            if self.is_root():
+                self.publish_local(key, self.locality, rec.generation, name)
+            else:
+                self.send_parcel(ROOT, _remote.ROOT_PUBLISH, None,
+                                 (list(key), self.locality, rec.generation,
+                                  name)).get(timeout=60)
+        elif event == "unregister":
+            if self.is_root():
+                self.unpublish_local(key, self.locality)
+            else:
+                self.send_parcel(ROOT, _remote.ROOT_UNPUBLISH, None,
+                                 (list(key), self.locality),
+                                 want_result=False)
+
+    def _install(self) -> None:
+        _agas.default().add_hook(self._agas_hook)
+        self._hook_installed = True
+        from repro.net import remote as _remote
+
+        _parcel.set_remote_route(lambda p: _remote.route_parcel(self, p))
+        _set_current(self)
+        # publish objects registered before the net came up (root only
+        # mutates its own table; workers usually boot before registering)
+        for rec in _agas.default():
+            self._agas_hook("register", rec)
+
+    # ------------------------------------------------------------- shutdown
+    def shutdown(self, timeout: float = 30.0) -> None:
+        """Tear down the net: BYE every worker, join processes, uninstall."""
+        if self.is_root():
+            for dst, conn in list(self._conns.items()):
+                if not conn.closed:
+                    try:
+                        conn.send({"t": _pp.BYE, "src": self.locality,
+                                   "dst": dst, "seq": 0})
+                    except _pp.PortClosed:
+                        pass
+            for proc in self._procs:
+                proc.join(timeout=timeout)
+            for proc in self._procs:
+                if proc.is_alive():
+                    proc.terminate()
+                    proc.join(timeout=5.0)
+        for conn in list(self._conns.values()):
+            conn.close()
+        if self._hook_installed:
+            _agas.default().remove_hook(self._agas_hook)
+            self._hook_installed = False
+        _parcel.set_remote_route(None)
+        with self._pending_lock:
+            pending, self._pending = dict(self._pending), {}
+        for promise, _dst in pending.values():
+            try:
+                promise.set_exception(_pp.PortClosed("net runtime shut down"))
+            except Exception:  # noqa: BLE001 — already completed
+                pass
+        _clear_current(self)
+
+    def _fail_pending_for(self, dst: Optional[int], reason: str) -> None:
+        """Fail in-flight calls that can no longer complete (``None`` =
+        every destination — the worker losing its root link)."""
+        with self._pending_lock:
+            doomed = [seq for seq, (_p, d) in self._pending.items()
+                      if dst is None or d == dst]
+            entries = [self._pending.pop(seq) for seq in doomed]
+        for promise, _d in entries:
+            try:
+                promise.set_exception(_pp.PortClosed(reason))
+            except Exception:  # noqa: BLE001 — already completed
+                pass
+
+    def _on_conn_close(self, conn: _pp.Connection) -> None:
+        if not self.is_root() and conn.peer_id == ROOT:
+            # root went away: nothing in flight can ever complete
+            self._fail_pending_for(None, "lost connection to the root")
+            self._stop.set()
+        elif self.is_root():
+            # a worker died: fail fast the calls routed to it (new sends
+            # already raise PortClosed synchronously)
+            self._fail_pending_for(conn.peer_id,
+                                   f"locality#{conn.peer_id} went away")
+
+
+# ------------------------------------------------------------ current() api
+_current: Optional[NetRuntime] = None
+_current_lock = threading.Lock()
+
+
+def _set_current(net: NetRuntime) -> None:
+    global _current
+    with _current_lock:
+        if _current is not None:
+            raise RuntimeError("a multi-locality runtime is already up")
+        _current = net
+
+
+def _clear_current(net: NetRuntime) -> None:
+    global _current
+    with _current_lock:
+        if _current is net:
+            _current = None
+
+
+def current() -> Optional[NetRuntime]:
+    return _current
+
+
+def require() -> NetRuntime:
+    net = current()
+    if net is None:
+        raise RuntimeError(
+            "no multi-locality runtime: call repro.net.bootstrap(n) first")
+    return net
+
+
+# ---------------------------------------------------------------- bootstrap
+def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
+              worker_pools: Optional[Dict[str, int]] = None,
+              timeout: float = 120.0) -> NetRuntime:
+    """Bring up an ``n_localities``-process runtime; the caller becomes
+    locality 0 (AGAS root).  Returns the root :class:`NetRuntime`.
+
+    ``pools`` partitions the *root* scheduler (``core.init`` semantics),
+    ``worker_pools`` every worker's.  Workers are spawned (never forked)
+    so no live thread or lock state is duplicated; each worker imports the
+    stack fresh, pins its AGAS locality id, and dials home.
+    """
+    import multiprocessing as _mp
+
+    import repro.core as core
+
+    if n_localities < 1:
+        raise ValueError("need at least one locality")
+    core.init(pools=pools)
+    net = NetRuntime(ROOT, n_localities)
+    if n_localities == 1:  # degenerate but useful: uniform API, no workers
+        net._install()
+        return net
+
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(n_localities)
+    listener.settimeout(timeout)
+    port = listener.getsockname()[1]
+
+    ctx = _mp.get_context("spawn")
+    for lid in range(1, n_localities):
+        proc = ctx.Process(target=_worker_main,
+                           args=(lid, n_localities, port, worker_pools),
+                           daemon=True, name=f"repro-locality-{lid}")
+        proc.start()
+        net._procs.append(proc)
+
+    try:
+        for _ in range(n_localities - 1):
+            sock, _addr = listener.accept()
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock.settimeout(timeout)  # bounded handshake read
+            frame = _pp.read_frame(sock)
+            header, _ = _pp.decode_frame(frame)
+            if header["t"] != _pp.HELLO:
+                raise RuntimeError(f"expected HELLO, got {header['t']!r}")
+            peer = header["src"]
+            sock.settimeout(None)
+            net._conns[peer] = _pp.Connection(sock, ROOT, peer, net._on_frame,
+                                              on_close=net._on_conn_close)
+    except BaseException as e:
+        # ANY handshake failure (timeout, stray client sending garbage,
+        # corrupt frame) must reap the already-spawned workers — they would
+        # otherwise idle for the parent's lifetime
+        net.shutdown()
+        if isinstance(e, (OSError, socket.timeout)):
+            raise RuntimeError(
+                f"bootstrap: workers failed to dial home within "
+                f"{timeout}s") from e
+        raise
+    finally:
+        listener.close()
+    net._install()
+    return net
+
+
+def _worker_main(locality_id: int, n_localities: int, port: int,
+                 pools: Optional[Dict[str, int]]) -> None:
+    """Entry point of a worker locality (runs in the spawned process)."""
+    from repro.core import agas as agas_mod
+
+    agas_mod.set_default_locality(locality_id)
+    import repro.core as core
+
+    core.init(pools=dict(pools) if pools else {"default": 2, "io": 1})
+    sock = socket.create_connection(("127.0.0.1", port), timeout=60)
+    sock.settimeout(None)  # connect timeout only — an idle wire is healthy
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    net = NetRuntime(locality_id, n_localities)
+    # HELLO must be the first frame on the wire: send it raw, before the
+    # Connection's pumps exist, so the root's handshake read can't race.
+    for chunk in _pp.encode_frame({"t": _pp.HELLO, "src": locality_id,
+                                   "dst": ROOT, "seq": 0}):
+        sock.sendall(chunk)
+    net._conns[ROOT] = _pp.Connection(sock, locality_id, ROOT, net._on_frame,
+                                      on_close=net._on_conn_close)
+    net._install()
+    net._stop.wait()
+    net.shutdown()
+    core.finalize()
+    os._exit(0)  # skip atexit: daemon threads are already winding down

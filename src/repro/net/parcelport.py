@@ -1,0 +1,312 @@
+"""Parcelport — the byte-moving layer of the multi-locality runtime.
+
+HPX's parcelport is the pluggable transport that ships serialized parcels
+between localities (the HPX+LCI study in PAPERS.md shows this layer is the
+decisive factor for AMT scalability).  Ours moves length-prefixed frames
+over stream sockets between OS processes on one host:
+
+    frame := u32 total | u32 header_len | header | body | buffer*      (BE)
+
+- **header** — small msgpack map (pickle fallback when msgpack is absent):
+  frame type (``parcel`` / ``result`` / ``hello`` / ``bye``), source and
+  destination locality ids, a sequence number correlating results to
+  pending promises, the action name + target GID for parcels, and the
+  lengths of the out-of-band buffers.
+- **body** — pickle protocol 5 of the payload (``(args, kwargs)`` for a
+  parcel, the value or exception for a result) with ``buffer_callback``
+  extracting every contiguous array buffer *out of band*.
+- **buffers** — the raw array bytes, written straight from the source
+  buffers (no copy into the pickle stream) and, on receive, reconstructed
+  from memoryview slices of the single frame read (no copy out of it).
+  This is the zero-copy fast path for host ``numpy`` / ``jax.Array``
+  payloads — the C++ runtime's zero-copy serialization [Biddiscombe et
+  al. 2017] at the pickle5 level.
+
+Each :class:`Connection` runs a *send pump* (queue + writer thread: action
+workers never block on socket writes, frames never interleave) and a
+*receive pump* (reader thread that reassembles frames and hands them to
+the runtime, which posts parcel execution into the scheduler's "io" pool).
+
+Counters, per connection (HPX ``/parcelport{...}`` naming)::
+
+    /net{locality#L/peer#P}/parcels/sent        cumulative
+    /net{locality#L/peer#P}/parcels/received    cumulative
+    /net{locality#L/peer#P}/bytes/sent          cumulative
+    /net{locality#L/peer#P}/bytes/received      cumulative
+"""
+
+from __future__ import annotations
+
+import collections
+import io
+import pickle
+import socket
+import struct
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import counters as _counters
+
+try:  # msgpack headers when available (smaller + faster), pickle otherwise
+    import msgpack as _msgpack
+except ImportError:  # pragma: no cover - container ships msgpack
+    _msgpack = None
+
+_U32 = struct.Struct(">I")
+
+# Frame types
+PARCEL = "parcel"
+RESULT = "result"
+HELLO = "hello"
+BYE = "bye"
+
+_NO_PAYLOAD = object()
+
+
+class PortClosed(ConnectionError):
+    """The peer went away (EOF / reset) or the port was closed locally."""
+
+
+# ------------------------------------------------------------------- codec
+def _encode_header(header: Dict[str, Any]) -> bytes:
+    if _msgpack is not None:
+        return _msgpack.packb(header, use_bin_type=True)
+    return pickle.dumps(header, protocol=5)
+
+
+def _decode_header(data: bytes) -> Dict[str, Any]:
+    if _msgpack is not None:
+        return _msgpack.unpackb(data, raw=False)
+    return pickle.loads(data)
+
+
+def _to_host(obj: Any) -> Any:
+    """Swap ``jax.Array`` leaves for host numpy views ahead of pickling.
+
+    ``np.asarray`` on a committed CPU ``jax.Array`` aliases the device
+    buffer (no copy); numpy arrays then serialize out-of-band via pickle5.
+    Only walks containers when jax is already imported — light processes
+    never pay the import.
+    """
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return obj
+
+    import numpy as np
+
+    def walk(x: Any) -> Any:
+        if isinstance(x, jax.Array):
+            return np.asarray(x)
+        if isinstance(x, tuple) and hasattr(x, "_fields"):  # NamedTuple
+            return type(x)(*(walk(v) for v in x))
+        if isinstance(x, (list, tuple)):
+            return type(x)(walk(v) for v in x)
+        if isinstance(x, dict):
+            return {k: walk(v) for k, v in x.items()}
+        return x
+
+    return walk(obj)
+
+
+def encode_frame(header: Dict[str, Any], payload: Any = _NO_PAYLOAD) -> List[Any]:
+    """Serialize one frame into a chunk list ready for vectored send.
+
+    The returned chunks are ``[prefix+header+body, buffer0, buffer1, ...]``
+    where each buffer is a zero-copy view of the original array memory.
+    """
+    buffers: List[pickle.PickleBuffer] = []
+    if payload is _NO_PAYLOAD:
+        body = b""
+    else:
+        body = pickle.dumps(_to_host(payload), protocol=5,
+                            buffer_callback=buffers.append)
+    views = [b.raw() for b in buffers]
+    header = dict(header)
+    header["blens"] = [v.nbytes for v in views]
+    header["bodylen"] = len(body)
+    hdr = _encode_header(header)
+    total = 4 + len(hdr) + len(body) + sum(v.nbytes for v in views)
+    head = io.BytesIO()
+    head.write(_U32.pack(total))
+    head.write(_U32.pack(len(hdr)))
+    head.write(hdr)
+    head.write(body)
+    return [head.getvalue(), *views]
+
+
+def decode_frame(frame: memoryview) -> Tuple[Dict[str, Any], memoryview]:
+    """Split a received frame (sans the u32 total prefix) into
+    ``(header, rest)`` where ``rest`` covers body+buffers."""
+    hlen = _U32.unpack_from(frame, 0)[0]
+    header = _decode_header(bytes(frame[4:4 + hlen]))
+    return header, frame[4 + hlen:]
+
+
+def frame_rest(frame: memoryview) -> memoryview:
+    """Body+buffers view of a frame whose header was already decoded."""
+    hlen = _U32.unpack_from(frame, 0)[0]
+    return frame[4 + hlen:]
+
+
+def forward_chunks(frame: memoryview) -> List[Any]:
+    """Re-frame a received frame for forwarding (root → worker switch):
+    the payload bytes are never re-encoded, just re-prefixed."""
+    return [_U32.pack(frame.nbytes), frame]
+
+
+def decode_payload(header: Dict[str, Any], rest: memoryview) -> Any:
+    """Unpickle the body against in-place buffer views (zero-copy)."""
+    bodylen = header.get("bodylen", 0)
+    if not bodylen:
+        return None
+    body = rest[:bodylen]
+    bufs, off = [], bodylen
+    for n in header.get("blens", ()):
+        bufs.append(rest[off:off + n])
+        off += n
+    return pickle.loads(body, buffers=bufs)
+
+
+def encode_result_payload(header: Dict[str, Any], value: Any,
+                          exc: Optional[BaseException]) -> List[Any]:
+    """Encode a result frame, degrading unpicklable values/exceptions to a
+    picklable ``RuntimeError`` so the caller always gets *an* outcome."""
+    header = dict(header)
+    header["ok"] = exc is None
+    payload = value if exc is None else exc
+    try:
+        return encode_frame(header, payload)
+    except Exception as e:  # noqa: BLE001 — unpicklable result
+        header["ok"] = False
+        return encode_frame(header, RuntimeError(
+            f"unpicklable {'result' if exc is None else 'exception'} "
+            f"from action {header.get('a')!r}: {payload!r} ({e})"))
+
+
+# -------------------------------------------------------------- connection
+def read_exact(sock: socket.socket, n: int) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise PortClosed("peer closed the connection")
+        got += k
+    return buf
+
+
+def read_frame(sock: socket.socket) -> memoryview:
+    """Blocking read of one length-prefixed frame (without the prefix)."""
+    total = _U32.unpack(bytes(read_exact(sock, 4)))[0]
+    return memoryview(read_exact(sock, total))
+
+
+class Connection:
+    """One socket to one peer locality: send pump + receive pump.
+
+    ``on_frame(header, frame, conn)`` runs on the receive-pump thread; it
+    must stay cheap (the runtime posts parcel execution into the
+    scheduler's "io" pool and completes result promises inline).
+    """
+
+    def __init__(self, sock: socket.socket, local_id: int, peer_id: int,
+                 on_frame: Callable[[Dict[str, Any], memoryview, "Connection"], None],
+                 on_close: Optional[Callable[["Connection"], None]] = None):
+        self.sock = sock
+        self.local_id = local_id
+        self.peer_id = peer_id
+        self._on_frame = on_frame
+        self._on_close = on_close
+        self._closed = False
+        self._sendq: "collections.deque[List[Any]]" = collections.deque()
+        self._send_cv = threading.Condition()
+
+        reg = _counters.default()
+        p = f"/net{{locality#{local_id}/peer#{peer_id}}}"
+        self.c_parcels_sent = reg.counter(f"{p}/parcels/sent")
+        self.c_parcels_recv = reg.counter(f"{p}/parcels/received")
+        self.c_bytes_sent = reg.counter(f"{p}/bytes/sent")
+        self.c_bytes_recv = reg.counter(f"{p}/bytes/received")
+
+        self._sender = threading.Thread(
+            target=self._send_pump, daemon=True,
+            name=f"repro-net-{local_id}-send-{peer_id}")
+        self._receiver = threading.Thread(
+            target=self._recv_pump, daemon=True,
+            name=f"repro-net-{local_id}-recv-{peer_id}")
+        self._sender.start()
+        self._receiver.start()
+
+    # ----------------------------------------------------------------- send
+    def send(self, header: Dict[str, Any], payload: Any = _NO_PAYLOAD) -> None:
+        self.send_chunks(encode_frame(header, payload))
+
+    def send_chunks(self, chunks: List[Any]) -> None:
+        """Enqueue pre-encoded chunks (also the root's forwarding path)."""
+        with self._send_cv:
+            if self._closed:
+                raise PortClosed(f"connection to locality#{self.peer_id} closed")
+            self._sendq.append(chunks)
+            self._send_cv.notify()
+
+    def _send_pump(self) -> None:
+        while True:
+            with self._send_cv:
+                while not self._sendq and not self._closed:
+                    self._send_cv.wait()
+                if self._closed and not self._sendq:
+                    return
+                chunks = self._sendq.popleft()
+            try:
+                n = 0
+                for c in chunks:
+                    self.sock.sendall(c)
+                    n += len(c) if isinstance(c, (bytes, bytearray)) else c.nbytes
+                self.c_parcels_sent.increment()
+                self.c_bytes_sent.increment(n)
+            except OSError:
+                self._shutdown()
+                return
+
+    # -------------------------------------------------------------- receive
+    def _recv_pump(self) -> None:
+        while True:
+            try:
+                frame = read_frame(self.sock)
+            except (OSError, PortClosed):
+                self._shutdown()
+                return
+            self.c_parcels_recv.increment()
+            self.c_bytes_recv.increment(4 + frame.nbytes)
+            try:
+                header, _rest = decode_frame(frame)
+                self._on_frame(header, frame, self)
+            except Exception:  # noqa: BLE001 — a bad frame must not kill the pump
+                import traceback
+
+                traceback.print_exc()
+
+    # ----------------------------------------------------------------- close
+    def _shutdown(self) -> None:
+        with self._send_cv:
+            already = self._closed
+            self._closed = True
+            self._send_cv.notify_all()
+        if already:
+            return
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        if self._on_close is not None:
+            self._on_close(self)
+
+    def close(self) -> None:
+        self._shutdown()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

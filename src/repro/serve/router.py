@@ -1,45 +1,185 @@
-"""Multi-engine router: least-loaded dispatch over engine replicas.
+"""Multi-engine router: least-loaded dispatch over local *and remote*
+engine replicas.
 
 Scaling past one engine means scaling past one decode chain: each
 :class:`~repro.serve.engine.Engine` replica owns its own page pool, decode
 continuation chain and performance counters, and the router is the only
 coordination point.  Dispatch follows the message-cost lens of the HPX+LCI
-study (PAPERS.md): the decision reads *locally cached* counters
-(``submitted - completed`` per replica — the engines already publish them)
-so routing a request costs zero extra messages; there is no global queue,
-no barrier, and replicas never talk to each other.  This is the paper's
-"decentralized control flow" one level up from the scheduler.
+study (PAPERS.md): the decision reads *locally held* state — local engines
+publish ``submitted - completed`` counters, remote engines a load estimate
+maintained from (a) this router's own in-flight submissions and (b) the
+authoritative load the engine's locality *gossips back over the
+parcelport*, piggybacked on every result frame — so routing a request
+costs zero extra messages; there is no global queue, no barrier, and
+replicas never talk to each other.  This is the paper's "decentralized
+control flow" one level up from the scheduler.
 
-Replicas share the (read-only) model parameters — on TPU they would be
-distinct meshes or pods; on host they are independent engines interleaving
-on the AMT runtime's workers.
+With :mod:`repro.net` bootstrapped, :meth:`Router.over_localities` places
+one engine per locality (each its own OS process: its own GIL, scheduler,
+page pool) and fronts them uniformly: a :class:`RemoteEngine` handle ships
+``submit`` as a parcel to the engine's locality and completes the caller's
+Future from the result frame.  Replicas build identical parameters from
+the same seed — on TPU they would be distinct meshes or pods; on host they
+are separate processes, which is what makes CPU-bound serving actually
+scale (one GIL per locality).
 
 Counters::
 
     /serve{router}/requests/dispatched           cumulative
     /serve{router}/dispatch/<engine-name>        cumulative per replica
+    /serve{router}/load/<engine-name>            gauge, gossiped (remote)
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
+from repro.core import agas as _agas
 from repro.core import counters as _counters
-from repro.core.future import Channel, Future
+from repro.core import parcel as _parcel
+from repro.core.future import Channel, Future, Promise
 from repro.models.model import Model
 from repro.serve.engine import Engine, SamplingParams, ServeConfig
 
+ENGINE_NAME_PREFIX = "/engines/"
 
+
+def engine_name(e: Any) -> str:
+    """Display/counter name of a local Engine or RemoteEngine handle."""
+    name = getattr(e, "name", None)
+    return name if name is not None else e.scfg.name
+
+
+def default_extra_inputs(cfg) -> Dict[str, Any]:
+    """Family-dependent synthetic side inputs (vlm patches, encdec memory)
+    — built *where the engine lives*, never shipped over the wire."""
+    import jax.numpy as jnp
+
+    extra: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        extra["patches"] = jnp.zeros((1, cfg.n_patches, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "encdec":
+        extra["enc"] = jnp.zeros((1, 64, cfg.d_model), jnp.bfloat16)
+        extra["enc_len"] = 64
+    return extra
+
+
+def build_engine(arch: str, smoke: bool, plan: str,
+                 scfg_kwargs: Dict[str, Any]) -> Engine:
+    """The one engine-construction recipe every locality uses.
+
+    Params come from the shared init seed, so replicas built here are
+    identical on every locality without ever moving weights — the
+    greedy-parity guarantee depends on local and remote spawns sharing
+    this exact path."""
+    from repro.configs import get_config
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+
+    cfg = get_config(arch, smoke=smoke)
+    model = build_model(cfg, get_plan(plan))
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params, ServeConfig(**scfg_kwargs),
+                  extra_inputs=default_extra_inputs(cfg))
+
+
+# ----------------------------------------------------------- remote actions
+@_parcel.action
+def _spawn_engine(rt, arch: str, smoke: bool, plan: str,
+                  scfg_kwargs: Dict[str, Any]) -> List[int]:
+    """Build a full engine at this locality and register it in AGAS; the
+    returned GID key is what the root's :class:`RemoteEngine` targets."""
+    from repro.net.locality import _gid_key
+
+    engine = build_engine(arch, smoke, plan, scfg_kwargs)
+    gid = _agas.default().register(
+        engine, name=f"{ENGINE_NAME_PREFIX}{engine.scfg.name}")
+    return list(_gid_key(gid))
+
+
+@_parcel.action
+def _engine_submit(engine: Engine, prompt: List[int], max_new: Optional[int],
+                   sampling: Optional[SamplingParams]
+                   ) -> Tuple[List[int], float]:
+    """Runs at the engine's locality; blocks a pool worker (help-along) and
+    returns ``(tokens, load-after-completion)`` — the second element is the
+    gossip payload the result frame carries back."""
+    tokens = engine.submit(prompt, max_new, sampling).get(timeout=600)
+    return tokens, engine.load()
+
+
+class RemoteEngine:
+    """Router-side handle to an engine living on another locality.
+
+    ``load()`` needs no wire traffic: it is the max of this router's own
+    in-flight count and the engine-side load gossiped back on the last
+    result frame (both local reads — zero-message dispatch)."""
+
+    def __init__(self, net, locality: int, gid: _agas.GID, name: str):
+        self.net = net
+        self.locality = locality
+        self.gid = gid
+        self.name = name
+        self._inflight = 0
+        self._gossip = 0.0
+        self._lock = threading.Lock()
+        self._c_load = _counters.default().gauge(
+            f"/serve{{router}}/load/{name}")
+
+    def submit(self, prompt: List[int], max_new: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               stream: Optional[Channel] = None) -> Future:
+        if stream is not None:
+            raise ValueError(
+                "streaming channels are per-process; submit to a local "
+                "engine or consume the remote future instead")
+        from repro.net import remote as _remote
+
+        inner = _remote.apply_remote(_engine_submit, self.gid, list(prompt),
+                                     max_new, sampling)
+        # count in-flight only once the submit is actually in motion — a
+        # synchronous apply_remote failure must not inflate load() forever
+        with self._lock:
+            self._inflight += 1
+        promise: Promise = Promise()
+
+        def done(f: Future) -> None:
+            with self._lock:
+                self._inflight -= 1
+                exc = f.exception()
+                if exc is None:
+                    tokens, load = f._value
+                    self._gossip = float(load)
+                    self._c_load.set(self._gossip)
+            if exc is None:
+                promise.set_value(tokens)
+            else:
+                promise.set_exception(exc)
+
+        inner.on_ready(done)
+        return promise.future()
+
+    def submit_stream(self, *a: Any, **kw: Any):
+        raise ValueError("streaming is local-only; see RemoteEngine.submit")
+
+    def load(self) -> float:
+        with self._lock:
+            return float(max(self._gossip, self._inflight))
+
+
+# ------------------------------------------------------------------- router
 class Router:
-    def __init__(self, engines: List[Engine]):
+    def __init__(self, engines: List[Any]):
         assert engines, "router needs at least one engine"
         self.engines = engines
         reg = _counters.default()
         self.c_dispatched = reg.counter("/serve{router}/requests/dispatched")
         self._c_per_engine = [
-            reg.counter(f"/serve{{router}}/dispatch/{e.scfg.name}")
+            reg.counter(f"/serve{{router}}/dispatch/{engine_name(e)}")
             for e in engines
         ]
 
@@ -56,19 +196,53 @@ class Router:
                                   extra_inputs=extra_inputs))
         return cls(engines)
 
+    @classmethod
+    def over_localities(cls, net, arch: str, scfg: ServeConfig,
+                        smoke: bool = True, plan: str = "serve",
+                        timeout: float = 600.0) -> "Router":
+        """One engine per locality: a local Engine at this locality, a
+        :class:`RemoteEngine` handle per worker locality (spawned through
+        ``run_on`` — the engine is built *where it runs*, by the same
+        :func:`build_engine` recipe)."""
+        from repro.net import remote as _remote
+
+        spawns = []
+        for loc in range(net.n_localities):
+            if loc == net.locality:
+                continue
+            name = f"engine#{loc}"
+            spawns.append((loc, name, _remote.run_on(
+                loc, _spawn_engine, arch, smoke, plan,
+                {**scfg.__dict__, "name": name})))
+
+        engines: List[Any] = [build_engine(
+            arch, smoke, plan,
+            {**scfg.__dict__, "name": f"engine#{net.locality}"})]
+        for loc, name, fut in spawns:
+            key = fut.get(timeout=timeout)
+            engines.append(RemoteEngine(net, loc, _agas.GID(*key), name))
+        return cls(engines)
+
     # ------------------------------------------------------------ dispatch
     def loads(self) -> List[float]:
         return [e.load() for e in self.engines]
 
-    def pick(self) -> int:
-        """Least-loaded replica (first wins ties — stable under no load)."""
+    def pick(self, local_only: bool = False) -> int:
+        """Least-loaded replica (first wins ties — stable under no load).
+
+        ``local_only`` restricts to in-process engines — the streaming
+        path: token channels cannot cross a process boundary."""
         loads = self.loads()
-        return min(range(len(loads)), key=lambda i: loads[i])
+        candidates = [i for i, e in enumerate(self.engines)
+                      if not (local_only and isinstance(e, RemoteEngine))]
+        if not candidates:
+            raise ValueError("no local engine available for streaming")
+        return min(candidates, key=lambda i: loads[i])
 
     def submit(self, prompt: List[int], max_new: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
                stream: Optional[Channel] = None) -> Future:
-        i = self.pick()
+        i = self.pick(local_only=stream is not None)
         self.c_dispatched.increment()
         self._c_per_engine[i].increment()
         return self.engines[i].submit(prompt, max_new, sampling, stream)

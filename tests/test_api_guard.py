@@ -1,9 +1,16 @@
-"""Lint-style guard: executors are the only sanctioned entry to the pools.
+"""Lint-style guards over the sanctioned subsystem boundaries.
 
-No module outside ``repro/core`` may reach ``scheduler.spawn``/``spawn_raw``
-(or any ``.spawn(`` call) directly — consumers go through the executor
-hierarchy (``Runtime.get_executor`` / ``repro.core.executor``), which is
-what makes pool placement (io/prefill/default) auditable and testable.
+1. Executors are the only entry to the scheduler pools: no module outside
+   ``repro/core`` may reach ``scheduler.spawn``/``spawn_raw`` (or any
+   ``.spawn(`` call) directly — consumers go through the executor
+   hierarchy (``Runtime.get_executor`` / ``repro.core.executor``), which
+   is what makes pool placement (io/prefill/default) auditable.
+2. ``repro/net`` is the only transport: no module outside it may open
+   sockets or fork/spawn OS processes.  Everything that crosses a process
+   boundary must be a parcel on the parcelport — one wire format, one set
+   of counters, one shutdown path.  (Exemption: ``launch/dryrun.py``
+   subprocesses *itself* per compile cell for memory isolation; that is a
+   compiler-driver concern, not a transport.)
 """
 
 import re
@@ -23,6 +30,16 @@ _BANNED = re.compile(
 # model/optimizer initializers named *.init are fine; these are the
 # scheduler's own modules where the substrate lives
 _ALLOWED_DIRS = {SRC / "core"}
+
+# transport primitives: sockets and process creation
+_NET_BANNED = re.compile(
+    r"(\bimport\s+socket\b|\bfrom\s+socket\s+import"
+    r"|\bimport\s+multiprocessing\b|\bfrom\s+multiprocessing\s+import"
+    r"|\bos\.fork\b|\bpty\.fork\b"
+    r"|\bimport\s+subprocess\b|\bfrom\s+subprocess\s+import)"
+)
+_NET_ALLOWED_DIRS = {SRC / "net"}
+_NET_ALLOWED_FILES = {SRC / "launch" / "dryrun.py"}  # compile-cell isolation
 
 
 def test_no_scheduler_spawn_outside_core():
@@ -44,5 +61,32 @@ def test_guard_matches_known_spellings():
                 "pool.spawn_raw(cb)", "spawn (fn)"):
         assert _BANNED.search(bad), bad
     for ok in ("model.init(key)", "prespawned", "respawn_counter = 1",
-               "executor.async_execute(fn)"):
+               "executor.async_execute(fn)", "_spawn_engine(rt, arch)",
+               'ctx = mp.get_context("spawn")'):
         assert not _BANNED.search(ok), ok
+
+
+def test_no_sockets_or_process_creation_outside_net():
+    """Only repro/net talks to the OS about wires and processes."""
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if any(parent in _NET_ALLOWED_DIRS for parent in path.parents):
+            continue
+        if path in _NET_ALLOWED_FILES:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if _NET_BANNED.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "sockets / process creation outside repro/net — route cross-process "
+        "work through the parcelport (repro.net):\n" + "\n".join(offenders))
+
+
+def test_net_guard_matches_known_spellings():
+    for bad in ("import socket", "from socket import socketpair",
+                "import multiprocessing as mp", "os.fork()",
+                "import subprocess", "from subprocess import run"):
+        assert _NET_BANNED.search(bad), bad
+    for ok in ("websocket_url = 1", "# talks over a socket", "forked = True",
+               "import socketserver_shim"):
+        assert not _NET_BANNED.search(ok), ok

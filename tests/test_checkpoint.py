@@ -71,6 +71,35 @@ def test_restore_with_shardings(tmp_path):
     assert r["params"]["w"].sharding == sh
 
 
+def test_save_restore_gid_local_roundtrip(rt, tmp_path):
+    """By-GID checkpointing without a net runtime: save a registered
+    object, restore re-binds it under the same symbolic name."""
+    from repro.core import agas
+
+    state = {"w": jnp.arange(6.0)}
+    agas.default().register(state, name="ckpt-test/obj")
+    out = ckpt.save_gid(tmp_path, step=3, target="ckpt-test/obj")
+    meta = json.loads((out / "agas.json").read_text())
+    assert meta["name"] == "ckpt-test/obj"
+    step, gid = ckpt.restore_gid(tmp_path)
+    assert step == 3
+    got = agas.default().resolve("ckpt-test/obj")
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(6.0))
+    assert agas.default().record(gid).name == "ckpt-test/obj"
+
+
+def test_restore_gid_remote_locality_requires_net(rt, tmp_path):
+    """Asking for a target locality with no multi-locality runtime up must
+    fail loudly, not silently install the object here."""
+    from repro.core import agas
+
+    state = {"w": jnp.ones((2,))}
+    agas.default().register(state, name="ckpt-test/needs-net")
+    ckpt.save_gid(tmp_path, step=1, target="ckpt-test/needs-net")
+    with pytest.raises(RuntimeError, match="bootstrap"):
+        ckpt.restore_gid(tmp_path, locality=1)
+
+
 def test_resume_then_step_trains(rt, tmp_path):
     """Regression: param paths contain '/' — restore must preserve the flat
     pytree so the restored state is immediately steppable."""

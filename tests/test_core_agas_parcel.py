@@ -24,6 +24,40 @@ def test_duplicate_name_rejected(rt):
     assert a.resolve("/dup") == 3
 
 
+def test_unregister_after_adopt_keeps_rebound_name(rt):
+    """adopt() rebinds a name to the adopted record; unregistering the OLD
+    record must not tear down the live binding (migration's name-follows-
+    the-object contract)."""
+    from repro.core.agas import GID
+
+    a = AGAS(locality=0)
+    gid_old = a.register("old", name="/moves")
+    rec = a.adopt(GID(9, 42), "new", name="/moves", generation=3)
+    assert a.resolve("/moves") == "new"
+    a.unregister(gid_old)
+    assert a.resolve("/moves") == "new"
+    assert a.gid_of("/moves") == rec.gid
+    # unregistering the adopted record does clear the binding
+    a.unregister(rec.gid)
+    assert not a.contains("/moves")
+
+
+def test_duplicate_name_leaves_no_orphan_record(rt):
+    """A rejected bind must not insert a record first: an orphan would be
+    pinned forever and (with the net tier up) republished to the root as
+    a name → dead-GID mapping."""
+    a = AGAS()
+    a.register(1, name="/dup2")
+    before = len(a)
+    with pytest.raises(KeyError):
+        a.register(2, name="/dup2")
+    assert len(a) == before
+    # every live record's name still resolves back to that record
+    for rec in a:
+        if rec.name is not None:
+            assert a.gid_of(rec.name) == rec.gid
+
+
 def test_unregister(rt):
     a = AGAS()
     gid = a.register("x", name="/gone")

@@ -50,6 +50,57 @@ def test_registry_callable_counter():
     assert reg.get_value("/lazy/value") == 9.0
 
 
+def test_snapshot_consistent_while_counters_register():
+    """query/snapshot must copy the (name, counter) pairs under the lock
+    and evaluate OUTSIDE it: a callable counter that registers another
+    counter mid-read (what a parcelport pump thread does on first use of a
+    connection) used to die with "dict changed size during iteration"."""
+    reg = CounterRegistry()
+    reg.counter("/net{l#0}/parcels/sent").increment(2)
+
+    def probe():
+        # a lazily-created counter appearing during the sweep
+        reg.counter(f"/net{{l#0}}/late/{reg.get_value('/net{l#0}/parcels/sent'):.0f}")
+        return 1.0
+
+    reg.register_callable("/net{l#0}/probe", probe)
+    snap = reg.snapshot()  # must not raise
+    assert snap["/net{l#0}/parcels/sent"] == 2.0
+    assert snap["/net{l#0}/probe"] == 1.0
+    got = dict(reg.query("/net*"))
+    assert got["/net{l#0}/parcels/sent"] == 2.0
+
+
+def test_snapshot_concurrent_registration_threads():
+    """Hammer query() while another thread registers: every returned pair
+    must be internally consistent (value belongs to the named counter)."""
+    import threading
+
+    reg = CounterRegistry()
+    for i in range(8):
+        reg.counter(f"/seed/{i}").increment(i)
+    stop = threading.Event()
+
+    def churn():
+        k = 0
+        while not stop.is_set():
+            # bounded namespace: membership still flips under the sweep
+            # (get-or-create), registry size stays O(1)
+            reg.counter(f"/churn/{k % 64}").increment(1)
+            k += 1
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        for _ in range(200):
+            for name, value in reg.query("/seed/*"):
+                assert value == float(name.rsplit("/", 1)[1])
+            reg.snapshot()
+    finally:
+        stop.set()
+        t.join(timeout=5)
+
+
 def test_counters_visible_through_agas(rt):
     """Paper: counters are readable via AGAS under their symbolic name."""
     from repro.core import agas, counters

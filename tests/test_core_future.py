@@ -81,3 +81,54 @@ def test_nested_blocking_does_not_deadlock(rt):
         return a.get() + fib(n - 2)
 
     assert core.spawn(fib, 13).get(timeout=60) == 233
+
+
+def test_set_exception_reaches_late_registered_callbacks(rt):
+    """Callbacks registered AFTER a future failed must still observe the
+    exception — the remote-completion path registers its bookkeeping hook
+    whenever the result frame happens to land, including 'already'."""
+    f = make_exceptional_future(ValueError("late"))
+    seen = []
+    f.on_ready(lambda fut: seen.append(fut.exception()))
+    assert len(seen) == 1 and isinstance(seen[0], ValueError)
+    # and a .then() continuation attached late sees it too
+    g = f.then(lambda fut: type(fut.exception()).__name__)
+    assert g.get(timeout=10) == "ValueError"
+    # value-projecting continuation propagates the error instead
+    with pytest.raises(ValueError, match="late"):
+        f.then_value(lambda v: v).get(timeout=10)
+
+
+def test_callbacks_fire_outside_the_lock(rt):
+    """A callback may re-enter the same future (get / another on_ready /
+    then) without deadlocking — i.e. completion and the already-ready path
+    must never hold the future's lock while running callbacks."""
+    order = []
+
+    # case 1: callback registered after completion re-enters immediately
+    f = make_ready_future(10)
+    f.on_ready(lambda fut: (order.append(fut.get(timeout=1)),
+                            fut.on_ready(lambda g: order.append(g.get(timeout=1) + 1))))
+    assert order == [10, 11]
+
+    # case 2: callback registered before completion re-enters from _set
+    # (wait() inside the callback would deadlock if _set held the lock)
+    p = Promise()
+    fut = p.future()
+    fut.on_ready(lambda g: order.append((g.wait(timeout=1),
+                                         type(g.exception()).__name__)))
+    p.set_exception(RuntimeError("x"))
+    assert order == [10, 11, (True, "RuntimeError")]
+
+
+def test_promise_set_from_relays_value_and_exception(rt):
+    src_ok = make_ready_future(5)
+    dst: Promise = Promise()
+    dst.set_from(src_ok)
+    assert dst.future().get(timeout=1) == 5
+
+    src_bad = make_exceptional_future(KeyError("k"))
+    dst2: Promise = Promise()
+    dst2.set_from(src_bad)
+    with pytest.raises(KeyError):
+        dst2.future().get(timeout=1)

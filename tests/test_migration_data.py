@@ -33,6 +33,58 @@ def test_agas_migration_generation_and_identity(rt):
     assert gen2 == 2  # GID stable across migrations
 
 
+def test_migrate_generation_never_stale_under_concurrent_resolve(rt):
+    """Property: after migrate() returns generation g, every subsequent
+    resolve observes generation >= g and the matching placement — readers
+    racing the migration never see a *rolled-back* record."""
+    import threading
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=2, max_value=5),
+           st.integers(min_value=3, max_value=12))
+    def prop(n_readers, n_migrations):
+        a = agas.AGAS(locality=0)
+        gid = a.register({"x": jnp.arange(4.0)}, placement="gen0")
+        stop = threading.Event()
+        violations = []
+
+        def reader():
+            # generation and placement-index must each be monotonic from
+            # any reader's viewpoint: a decrease = a rolled-back (stale)
+            # record became visible after a later one
+            last_gen, last_idx = -1, -1
+            while not stop.is_set():
+                rec = a.record(gid)
+                gen = rec.generation
+                idx = int(str(rec.placement)[3:])
+                if gen < last_gen or idx < last_idx:
+                    violations.append((last_gen, gen, last_idx, idx))
+                last_gen, last_idx = max(last_gen, gen), max(last_idx, idx)
+
+        threads = [threading.Thread(target=reader, daemon=True)
+                   for _ in range(n_readers)]
+        for t in threads:
+            t.start()
+        try:
+            for k in range(1, n_migrations + 1):
+                moved = migration.migrate_tree(a.resolve(gid), _sh())
+                gen = a.rebind(gid, moved, placement=f"gen{k}")
+                assert gen == k
+                # the bound just returned must be visible immediately
+                rec = a.record(gid)
+                assert rec.generation >= gen
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=10)
+        assert not violations, violations[:3]
+
+    prop()
+
+
 def test_synth_batch_deterministic_per_step():
     cfg = get_config("qwen25_3b", smoke=True)
     d = DataConfig(batch_size=2, seq_len=16, seed=3)

@@ -1,0 +1,199 @@
+"""Multi-locality runtime: real processes, parcels over the wire,
+distributed AGAS with generation-based cache invalidation.
+
+One 3-locality net per module (spawned processes are ~seconds each);
+3 localities so worker↔worker traffic exercises the root's frame switch.
+Helper actions live at module level: worker processes resolve them by
+dotted name (``test_net_localities.<fn>``) and import this module lazily.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro import net as rnet
+from repro.core import agas, parcel
+from repro.core.agas import GID
+from repro.net.locality import _gid_key
+
+
+# ----------------------------------------------------------- helper actions
+@parcel.action
+def tree_scale_sum(obj, s):
+    """Object-targeted: runs where the data lives."""
+    return float(sum(float(np.sum(v)) for v in obj.values()) * s)
+
+
+@parcel.action
+def raise_value_error(obj, msg):
+    raise ValueError(msg)
+
+
+def echo_locality(rt, payload):
+    """Plain (undecorated) module function: exercises qualname fallback."""
+    return rt.locality, payload
+
+
+def register_payload(rt, name, n):
+    arr = np.arange(n, dtype=np.float64)
+    gid = agas.default().register({"x": arr}, name=name)
+    return list(_gid_key(gid))
+
+
+def fetch_by_name(rt, name):
+    from repro.net import remote
+
+    return remote.fetch(name)
+
+
+def counter_value(rt, name):
+    from repro.core import counters
+
+    return counters.default().get_value(name)
+
+
+def unregister_by_name(rt, name):
+    a = agas.default()
+    a.unregister(a.gid_of(name))
+
+
+# ------------------------------------------------------------------ fixture
+@pytest.fixture(scope="module")
+def net(rt):
+    n = rnet.bootstrap(3, pools={"default": 4, "io": 1})
+    try:
+        yield n
+    finally:
+        n.shutdown()
+
+
+# -------------------------------------------------------------------- tests
+def test_run_on_round_trip_zero_copy_array(net):
+    arr = np.arange(1024, dtype=np.float32)
+    loc, back = rnet.run_on(1, echo_locality, arr).get(timeout=60)
+    assert loc == 1
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_apply_remote_object_on_worker(net):
+    """Acceptance path: action registered at locality 0, object living on
+    locality 1, result future completes on the caller."""
+    key = rnet.run_on(1, register_payload, "net-test/obj1", 16).get(timeout=60)
+    gid = GID(*key)
+    assert gid.locality == 1
+    got = rnet.apply_remote(tree_scale_sum, gid, 3).get(timeout=60)
+    assert got == pytest.approx(float(np.arange(16).sum()) * 3)
+    # by symbolic name, through the root name index
+    got2 = rnet.apply_remote(tree_scale_sum, "net-test/obj1", 2).get(timeout=60)
+    assert got2 == pytest.approx(float(np.arange(16).sum()) * 2)
+
+
+def test_core_parcel_apply_is_locality_transparent(net):
+    """`repro.core.parcel.apply` reaches remote objects via the installed
+    route — no spelling change at existing call sites."""
+    key = rnet.run_on(2, register_payload, "net-test/obj2", 8).get(timeout=60)
+    fut = parcel.apply(tree_scale_sum, GID(*key), 10)
+    assert fut.get(timeout=60) == pytest.approx(float(np.arange(8).sum()) * 10)
+
+
+def test_remote_exception_propagates(net):
+    key = rnet.run_on(1, register_payload, "net-test/obj3", 4).get(timeout=60)
+    fut = rnet.apply_remote(raise_value_error, GID(*key), "boom-net")
+    with pytest.raises(ValueError, match="boom-net"):
+        fut.get(timeout=60)
+
+
+def test_unknown_gid_fails_fast(net):
+    fut = rnet.apply_remote(tree_scale_sum, GID(1, 987654321), 1)
+    with pytest.raises(rnet.UnknownGid):
+        fut.get(timeout=60)
+
+
+def test_migrate_remote_and_stale_cache_self_heals(net):
+    key = rnet.run_on(1, register_payload, "net-test/mig", 32).get(timeout=60)
+    gid = GID(*key)
+    # warm the root's resolution path at the old owner
+    assert rnet.apply_remote(tree_scale_sum, gid, 1).get(timeout=60) == \
+        pytest.approx(float(np.arange(32).sum()))
+    gen = rnet.migrate_remote(gid, 2)
+    assert gen >= 1
+    # stale caches (ours was invalidated; use the name path + worker 1's
+    # cache via forwarding) still resolve to the new owner
+    got = rnet.apply_remote(tree_scale_sum, gid, 2).get(timeout=60)
+    assert got == pytest.approx(float(np.arange(32).sum()) * 2)
+    state = rnet.run_on(1, fetch_by_name, "net-test/mig").get(timeout=60)
+    np.testing.assert_array_equal(state["x"], np.arange(32, dtype=np.float64))
+    # and the object is really gone from locality 1: a direct parcel to it
+    # comes back UnknownGid (the generation-invalidation signal)
+    with pytest.raises(rnet.UnknownGid):
+        net.send_parcel(1, tree_scale_sum._action_name, tuple(key),
+                        (1,)).get(timeout=60)
+
+
+def test_worker_to_worker_via_root_switch(net):
+    """locality 1 fetches an object on locality 2: frames hop through the
+    root's forwarding path."""
+    rnet.run_on(2, register_payload, "net-test/fwd", 5).get(timeout=60)
+    before = net.c_forwarded.get_value()
+    state = rnet.run_on(1, fetch_by_name, "net-test/fwd").get(timeout=60)
+    np.testing.assert_array_equal(state["x"], np.arange(5, dtype=np.float64))
+    assert net.c_forwarded.get_value() > before
+
+
+def test_query_counters_remote_snapshot(net):
+    got = dict(rnet.query_counters(1, "/scheduler{*"))
+    assert any("/tasks/executed" in k for k in got)
+    assert sum(v for k, v in got.items() if k.endswith("/tasks/executed")) > 0
+    # parcelport counters exist on the worker side too
+    pp = dict(rnet.query_counters(2, "/net{locality#2*"))
+    assert any(k.endswith("/parcels/received") for k in pp)
+
+
+def test_fetch_remote_state(net):
+    rnet.run_on(1, register_payload, "net-test/fetch", 6).get(timeout=60)
+    state = rnet.fetch("net-test/fetch")
+    np.testing.assert_array_equal(state["x"], np.arange(6, dtype=np.float64))
+
+
+def test_net_counters_on_root(net):
+    sent = dict(core.counters.query("/net{locality#0/peer#*}/parcels/sent"))
+    recv = dict(core.counters.query("/net{locality#0/peer#*}/bytes/received"))
+    assert sum(sent.values()) > 0
+    assert sum(recv.values()) > 0
+
+
+def test_local_dispatch_leaves_no_pending_entry(net):
+    """An apply that resolves to the caller's own locality never touches
+    the wire — and must not leak a slot in the pending-promise table."""
+    gid = agas.default().register({"x": np.arange(3, dtype=np.float64)},
+                                  name="net-test/local")
+    before = len(net._pending)
+    assert rnet.apply_remote(tree_scale_sum, gid, 2).get(timeout=60) == \
+        pytest.approx(6.0)
+    assert rnet.run_on(0, echo_locality, "home").get(timeout=60) == \
+        (0, "home")
+    assert len(net._pending) <= before
+
+
+def test_checkpoint_by_gid_respawns_on_fresh_locality(net, tmp_path):
+    """save_gid at the root pulls remote state home over the parcelport;
+    restore_gid re-homes it on a different locality under the same name,
+    re-published through the root AGAS table."""
+    from repro.checkpoint import ckpt
+
+    import json as _json
+
+    key = rnet.run_on(1, register_payload, "net-test/ckpt", 12).get(timeout=60)
+    # save by GID: the symbolic name must still land in agas.json (the
+    # owner is asked for its record metadata)
+    out = ckpt.save_gid(tmp_path, step=7, target=GID(*key))
+    meta = _json.loads((out / "agas.json").read_text())
+    assert meta["name"] == "net-test/ckpt"
+    # kill the original: locality 1 no longer holds it
+    rnet.run_on(1, unregister_by_name, "net-test/ckpt").get(timeout=60)
+    step, gid = ckpt.restore_gid(tmp_path, locality=2)
+    assert step == 7 and gid.locality == 2
+    got = rnet.apply_remote(tree_scale_sum, "net-test/ckpt", 1).get(timeout=60)
+    assert got == pytest.approx(float(np.arange(12).sum()))
+    state = rnet.fetch(gid)
+    np.testing.assert_array_equal(state["x"], np.arange(12, dtype=np.float64))
