@@ -4,7 +4,8 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-serve bench-algorithms bench-net smoke
+.PHONY: verify test bench bench-serve bench-algorithms bench-net \
+	bench-container smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -23,6 +24,9 @@ bench-algorithms:
 
 bench-net:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_net
+
+bench-container:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_container
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

@@ -1,0 +1,153 @@
+"""Distributed-container benchmark: work-to-data vs fetch-all.
+
+The claim the subsystem exists for (ISSUE 5 acceptance): a segmented
+``reduce`` over a block-distributed :class:`PartitionedVector` moves
+**≥10x fewer wire bytes** than fetching every element to the caller and
+reducing there — counter-verified through the parcelport's own
+``/net{...}/bytes/sent`` counters, summed over every locality.
+
+At each locality count (1, 2, 3) the bench creates an N-element float64
+vector, fills it *in place at the owners* (``fill_with`` — the generator
+crosses the wire, the elements don't), then measures wall-clock and wire
+bytes for:
+
+- ``reduce``          — segmented (per-segment partial + tiny result
+  frames) vs fetch-all (``to_array`` + local sum);
+- ``inclusive_scan``  — segmented two-pass (local cumsum per segment,
+  carry combine, offset fixup; result segments stay put) vs fetch-all
+  (gather + local cumsum; result stays at the caller).
+
+At 1 locality both paths are wire-free (the degenerate bootstrap) — only
+wall-clock is reported there; the bytes ratio is judged at 3 localities.
+Results → ``results/BENCH_container.json``.
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_container.json"
+
+N = 200_000          # float64 elements → 1.6 MB of payload
+REPS = 5
+TARGET_RATIO = 10.0
+
+
+def _iota(idx):
+    return idx.astype(np.float64) * 0.5
+
+
+def _wire_bytes(net):
+    from repro import net as rnet
+
+    total = 0.0
+    for loc in range(net.n_localities):
+        snap = rnet.query_counters(loc, "/net{*}/bytes/sent")
+        total += sum(v for _k, v in snap)
+    return total
+
+
+def _timed(fn, reps=REPS):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(net, fn):
+    """(min wall seconds, wire bytes of ONE call) — bytes measured on a
+    dedicated call so timing reps don't inflate them."""
+    wall = _timed(fn)
+    before = _wire_bytes(net)
+    fn()
+    bytes_used = _wire_bytes(net) - before
+    return wall, bytes_used
+
+
+def _bench_at(n_localities: int, uid: str):
+    from repro import net as rnet
+    from repro.container import PartitionedVector
+    from repro.core import algorithms as alg
+    from repro.core.executor import par
+
+    with rnet.running(n_localities, pools={"default": 4, "io": 1}) as net:
+        pv = PartitionedVector.create(f"bench/{uid}", N).fill_with(_iota)
+        oracle = _iota(np.arange(N))
+
+        def fetch_all_reduce():
+            return float(pv.to_array().sum())
+
+        def seg_reduce():
+            return float(alg.reduce(par, pv))
+
+        def fetch_all_scan():
+            return np.cumsum(pv.to_array())
+
+        def seg_scan():
+            return alg.inclusive_scan(par, pv)
+
+        assert abs(seg_reduce() - oracle.sum()) < 1e-6 * abs(oracle.sum())
+        assert np.allclose(seg_scan().to_array(), np.cumsum(oracle))
+
+        res = {}
+        for name, fn in [("reduce_fetch_all", fetch_all_reduce),
+                         ("reduce_segmented", seg_reduce),
+                         ("scan_fetch_all", fetch_all_scan),
+                         ("scan_segmented", seg_scan)]:
+            wall, wire = _measure(net, fn)
+            res[name] = {"wall_s": round(wall, 6),
+                         "wire_bytes": int(wire)}
+        return res
+
+
+def run():
+    """benchmarks.run entry: (name, us_per_call, derived) rows."""
+    import repro.net.locality as _loc
+
+    results = {"n_elements": N, "element_bytes": N * 8,
+               "per_localities": {}}
+    rows = []
+    for nloc in (1, 2, 3):
+        if _loc.current() is not None:  # pragma: no cover - defensive
+            raise RuntimeError("a net runtime is already up")
+        res = _bench_at(nloc, f"L{nloc}")
+        results["per_localities"][str(nloc)] = res
+        for name, m in res.items():
+            rows.append((f"container/{nloc}loc/{name}",
+                         m["wall_s"] * 1e6,
+                         f"wire={m['wire_bytes']}B"))
+
+    at3 = results["per_localities"]["3"]
+    fetch_b = at3["reduce_fetch_all"]["wire_bytes"]
+    seg_b = max(at3["reduce_segmented"]["wire_bytes"], 1)
+    ratio = fetch_b / seg_b
+    scan_ratio = (at3["scan_fetch_all"]["wire_bytes"]
+                  / max(at3["scan_segmented"]["wire_bytes"], 1))
+    results["acceptance"] = {
+        "reduce_bytes_ratio_at_3loc": round(ratio, 2),
+        "scan_bytes_ratio_at_3loc": round(scan_ratio, 2),
+        "target": TARGET_RATIO,
+        "met": ratio >= TARGET_RATIO,
+    }
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(results, indent=1))
+    rows.append(("container/reduce_bytes_ratio_3loc", 0.0,
+                 f"{ratio:.1f}x (target {TARGET_RATIO}x, "
+                 f"met={results['acceptance']['met']})"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+    print(json.dumps(json.loads(OUT.read_text()), indent=1))
+    if not json.loads(OUT.read_text())["acceptance"]["met"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

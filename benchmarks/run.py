@@ -1,4 +1,4 @@
-"""Benchmark driver — one benchmark per paper table/figure (DESIGN.md §7).
+"""Benchmark driver — one benchmark per paper table/figure (DESIGN.md §8).
 Prints ``name,us_per_call,derived`` CSV."""
 import sys
 import traceback
@@ -8,9 +8,10 @@ def main() -> None:
     import repro.core as core
 
     core.init(num_workers=4)
-    from benchmarks import (bench_algorithms, bench_cholesky, bench_dist,
-                            bench_efficiency, bench_net, bench_overlap,
-                            bench_serve, bench_stream, bench_tasks)
+    from benchmarks import (bench_algorithms, bench_cholesky, bench_container,
+                            bench_dist, bench_efficiency, bench_net,
+                            bench_overlap, bench_serve, bench_stream,
+                            bench_tasks)
 
     suites = [
         ("tasks", bench_tasks),
@@ -22,6 +23,7 @@ def main() -> None:
         ("dist", bench_dist),
         ("serve", bench_serve),
         ("net", bench_net),
+        ("container", bench_container),
     ]
     print("name,us_per_call,derived")
     failures = 0

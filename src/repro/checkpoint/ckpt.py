@@ -21,6 +21,15 @@ Fault-tolerance story (DESIGN.md §5):
   name, re-publishing through the root AGAS table.  This is what lets an
   engine be respawned on a fresh locality: the filesystem is just another
   parcelport with infinite latency.
+- **segment-parallel, by GID** — ``save_partitioned`` checkpoints a
+  :class:`~repro.container.PartitionedVector` work-to-data: one parcel
+  per segment asks the segment's *owner* to write its own ``.npy`` shard
+  (no element crosses the wire; writes overlap across localities), and
+  ``partitioned.json`` records geometry + per-shard GIDs.
+  ``restore_partitioned`` is the mirror: each owner reads its own shard
+  back into a fresh AGAS segment — owners are remapped when the restore
+  runtime has a different locality count (elastic, like ``restore``'s
+  mesh remap).
 """
 
 from __future__ import annotations
@@ -187,6 +196,109 @@ def restore_gid(ckpt_dir: Path, step: Optional[int] = None,
     key = _net.run_on(locality, _remote._install_state, name,
                       state).get(timeout=timeout)
     return step, _agas.GID(*key)
+
+
+# --------------------------------------------------- partitioned containers
+from repro.core import parcel as _parcel  # noqa: E402  (actions below)
+
+
+@_parcel.action
+def _write_segment_shard(obj: Any, dirpath: str, fname: str) -> Dict[str, Any]:
+    """Object-targeted: runs at the segment's owner — each locality writes
+    its own shard (the single-host analogue of per-node burst buffers)."""
+    from repro.core import agas as _agas
+
+    arr = np.asarray(obj)
+    np.save(Path(dirpath) / fname, arr)
+    return {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "locality": _agas.default().locality}
+
+
+@_parcel.action
+def _read_segment_shard(rt: Any, dirpath: str, fname: str,
+                        seg_name: str) -> list:
+    """Runs at the chosen restore owner: load the shard, register it."""
+    from repro.core import agas as _agas
+
+    arr = np.load(Path(dirpath) / fname)
+    gid = _agas.default().register(arr, name=seg_name)
+    return [gid.locality, gid.seq]
+
+
+def save_partitioned(ckpt_dir: Path, step: int, pv: Any,
+                     timeout: float = 120.0) -> Path:
+    """Checkpoint a PartitionedVector segment-parallel: one parcel per
+    segment, the *owner* writes its shard (zero element bytes on the wire,
+    I/O overlapped across localities).  Torn writes are detected the same
+    way as :func:`save`: ``partitioned.json`` is written last."""
+    from repro import net as _net
+
+    ckpt_dir = Path(ckpt_dir)
+    out = ckpt_dir / f"pvec_{step:08d}"
+    tmp = ckpt_dir / f".tmp_pvec_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    futs = [_net.apply_remote(_write_segment_shard, pv.segment_gid(j),
+                              str(tmp), f"shard_{j:05d}.npy")
+            for j in range(pv.nsegments)]
+    shards = [f.get(timeout=timeout) for f in futs]
+    manifest = {"step": step, "name": pv.name, "dtype": pv.dtype.str,
+                "element_shape": list(pv.element_shape),
+                "dist": pv.dist.to_meta(), "shards": shards}
+    (tmp / "partitioned.json").write_text(json.dumps(manifest))
+    if out.exists():
+        shutil.rmtree(out)
+    tmp.rename(out)
+    _counters.counter("/checkpoint{store#0}/saves/cumulative").increment()
+    return out
+
+
+def latest_partitioned_step(ckpt_dir: Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("pvec_*")
+             if (p / "partitioned.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_partitioned(ckpt_dir: Path, step: Optional[int] = None,
+                        name: Optional[str] = None,
+                        timeout: float = 120.0) -> Tuple[int, Any]:
+    """Rebuild a PartitionedVector from its shards, each read by the
+    locality that will own it (owner ``o`` of the saving run maps to
+    ``o % n_localities`` of this run — elastic restore across different
+    locality counts).  ``name`` overrides the saved symbolic name (e.g.
+    to restore next to a still-live original)."""
+    from repro import net as _net
+    from repro.container.distribution import Distribution
+    from repro.container.partitioned_vector import PartitionedVector
+
+    net = _net.require()
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_partitioned_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no partitioned checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"pvec_{step:08d}"
+    manifest = json.loads((d / "partitioned.json").read_text())
+    name = name or manifest["name"]
+    meta = dict(manifest["dist"])
+    # restore where the data lived at SAVE time (each shard records the
+    # locality that wrote it — rebalances survive a save/restore cycle),
+    # not the creation-time owners the geometry happens to carry
+    meta["owners"] = [s["locality"] % net.n_localities
+                      for s in manifest["shards"]]
+    dist = Distribution.from_meta(meta)
+    futs = [_net.run_on(dist.owners[j], _read_segment_shard, str(d),
+                        shard["file"], f"{name}/seg{j}")
+            for j, shard in enumerate(manifest["shards"])]
+    keys = [tuple(f.get(timeout=timeout)) for f in futs]
+    pv = PartitionedVector.from_parts(name, dist, manifest["dtype"],
+                                      tuple(manifest["element_shape"]), keys)
+    _counters.counter("/checkpoint{store#0}/restores/cumulative").increment()
+    return manifest["step"], pv
 
 
 def restore(ckpt_dir: Path, step: Optional[int] = None,

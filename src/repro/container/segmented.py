@@ -1,0 +1,456 @@
+"""Segmented parallel algorithms over :class:`PartitionedVector` — the
+work-to-data lowering of ``repro.core.algorithms`` (HPX's segmented
+algorithm layer on ``partitioned_vector``).
+
+Every public function here has the same shape as its ``core.algorithms``
+counterpart, which dispatches to it whenever the data argument is a
+partitioned vector.  The lowering is uniform:
+
+1. **ship the body, not the bytes** — one object-targeted parcel per
+   segment carries the (pickled-by-reference) body/op to the segment's
+   owning locality, where it runs on that locality's own executor pools
+   (parcels execute via the owner's resource partitioner);
+2. **combine on the caller through dataflow** — per-segment partials come
+   home as small scalars/keys and a ``dataflow`` continuation folds them;
+   under a ``task`` policy the un-joined Future is returned (two-way).
+
+Result placement follows HPX: ``transform`` and the scans produce a *new*
+partitioned vector with the same geometry, each result segment registered
+at the source segment's owner — results stay distributed, nothing gathers.
+
+Correctness contracts per distribution:
+
+- order-free algorithms (``reduce``/``transform_reduce`` with their C++
+  GENERALIZED_SUM associativity+commutativity-up-to-grouping license,
+  ``count_if``, ``all_of``/``any_of``, ``min/max_element``, ``fill``,
+  ``for_each``, elementwise ``transform``) are segment-decomposable under
+  every distribution;
+- the **scans** are order-dependent: on contiguous layouts (block /
+  explicit) they run the true two-pass distributed scan — local inclusive
+  scan per segment, an exclusive carry combine of segment totals on the
+  caller, then a parallel offset-fixup parcel per segment.  On cyclic
+  layouts segments interleave in global order, so scans fall back to
+  gather → scan → scatter (correct, and loudly documented as the
+  non-work-to-data path);
+- ``sort`` distributes the O(n log n) per-segment sorts, then merges the
+  sorted runs on the caller and scatters the result back in place.
+"""
+
+from __future__ import annotations
+
+import builtins
+import heapq
+import operator
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import agas as _agas
+from repro.core import executor as _executor
+from repro.core.dataflow import dataflow
+from repro.core.executor import ExecutionPolicy
+from repro.core.future import Future
+from repro.core import parcel as _parcel
+from repro.container.partitioned_vector import (
+    PartitionedVector,
+    _check_shippable,
+    _publish_descriptor,
+    _seg_read,
+    _TIMEOUT,
+    derived_name,
+)
+
+
+def _apply_on(key, fn: Callable[..., Any], *args: Any) -> Future:
+    """Object-targeted parcel on an arbitrary segment key (used for result
+    segments that are not part of a client handle yet)."""
+    from repro import net as _net
+
+    return _net.apply_remote(fn, _agas.GID(*key), *args)
+
+
+def _compute(fn: Callable[[], Any]) -> Any:
+    """Run a segment body on the owner's compute pool (the parcel itself
+    executes on the "io" pool — heavy loops hop to "default")."""
+    return _executor.get_executor("default").sync_execute(fn)
+
+
+# ---------------------------------------------------------- segment actions
+@_parcel.action
+def _seg_for_each(obj: np.ndarray, fn: Callable[[Any], Any]) -> int:
+    def run() -> int:
+        for v in obj:
+            fn(v)
+        return int(obj.shape[0])
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_transform(obj: np.ndarray, fn: Callable[[Any], Any],
+                   name: str) -> Tuple[List[int], str]:
+    """Map a segment in place at its owner; register the result segment
+    *here* (the result vector inherits the source's placement)."""
+
+    def run():
+        vals = [fn(v) for v in obj]
+        out = np.asarray(vals) if vals else np.empty((0, *obj.shape[1:]),
+                                                     dtype=obj.dtype)
+        gid = _agas.default().register(out, name=name)
+        return [gid.locality, gid.seq], out.dtype.str
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_reduce(obj: np.ndarray, op: Callable[[Any, Any], Any]) -> Any:
+    def run():
+        if obj.shape[0] == 0:
+            return None
+        if op is operator.add:
+            return obj.sum(axis=0)
+        acc = obj[0]
+        for i in range(1, obj.shape[0]):
+            acc = op(acc, obj[i])
+        return acc
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_transform_reduce(obj: np.ndarray, fn: Callable[[Any], Any],
+                          op: Callable[[Any, Any], Any]) -> Any:
+    def run():
+        if obj.shape[0] == 0:
+            return None
+        acc = fn(obj[0])
+        for i in range(1, obj.shape[0]):
+            acc = op(acc, fn(obj[i]))
+        return acc
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_count_if(obj: np.ndarray, pred: Callable[[Any], Any]) -> int:
+    return _compute(lambda: sum(1 for v in obj if pred(v)))
+
+
+@_parcel.action
+def _seg_fill(obj: np.ndarray, value: Any) -> int:
+    obj[...] = value
+    return int(obj.shape[0])
+
+
+@_parcel.action
+def _seg_extremum(obj: np.ndarray, which: str) -> Any:
+    if obj.shape[0] == 0:
+        return None
+    return _compute(lambda: (obj.min() if which == "min" else obj.max()))
+
+
+@_parcel.action
+def _seg_scan_local(obj: np.ndarray, op: Callable[[Any, Any], Any],
+                    name: str) -> Tuple[List[int], Any, str]:
+    """Two-pass scan, pass 1: local inclusive scan registered at the owner;
+    returns (result-segment key, segment total or None when empty, dtype)."""
+
+    def run():
+        if obj.shape[0] == 0:
+            out = np.empty((0, *obj.shape[1:]), dtype=obj.dtype)
+        elif op is operator.add:  # vectorized fast path
+            out = np.cumsum(obj, axis=0)
+        else:
+            vals: List[Any] = []
+            acc: Any = None
+            for v in obj:
+                acc = v if acc is None else op(acc, v)
+                vals.append(acc)
+            out = np.asarray(vals)
+        gid = _agas.default().register(out, name=name)
+        return ([gid.locality, gid.seq],
+                (out[-1] if out.shape[0] else None), out.dtype.str)
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_apply_offset(obj: np.ndarray, key: List[int],
+                      op: Callable[[Any, Any], Any], off: Any,
+                      exclusive: bool) -> Optional[str]:
+    """Two-pass scan, pass 2: fold the carried-in offset into the locally
+    scanned segment.  ``off is None`` ⇒ no offset (first inclusive chunk).
+    The fixup rebinds (dtype may promote: a float carry over int data);
+    returns the rebound dtype, or None when nothing was rebound."""
+
+    def run() -> Optional[str]:
+        if obj.shape[0] == 0 or (off is None and not exclusive):
+            return None  # no rebind: pass-1 dtype stands
+        if exclusive:  # [off, off⊕x0, ..., off⊕x_{k-2}] from local inclusive
+            if op is operator.add:
+                head = np.broadcast_to(np.asarray(off), obj.shape[1:])[None]
+                vals = np.concatenate([head, np.asarray(off) + obj[:-1]])
+            else:
+                vals = np.asarray([off] + [op(off, v) for v in obj[:-1]])
+        else:
+            vals = (np.asarray(off) + obj if op is operator.add
+                    else np.asarray([op(off, v) for v in obj]))
+        vals = np.asarray(vals)
+        _agas.default().rebind(_agas.GID(*key), vals)
+        return vals.dtype.str
+
+    return _compute(run)
+
+
+@_parcel.action
+def _seg_adopt_values(obj: np.ndarray, name: str, values: Any) -> Tuple[List[int], str]:
+    """Register ``values`` at this (the source segment's) locality — the
+    scatter half of the cyclic-scan fallback."""
+    out = np.asarray(values)
+    gid = _agas.default().register(out, name=name)
+    return [gid.locality, gid.seq], out.dtype.str
+
+
+@_parcel.action
+def _seg_sort_inplace(obj: np.ndarray) -> int:
+    _compute(obj.sort)
+    return int(obj.shape[0])
+
+
+# ------------------------------------------------------------------ plumbing
+def _deliver(policy: ExecutionPolicy, fut: Future) -> Any:
+    """Honor two-way policies: ``task`` returns the Future, else join."""
+    return fut if policy.task else fut.get(timeout=_TIMEOUT)
+
+
+def _fanout(pv: PartitionedVector, fn: Callable[..., Any], *args: Any,
+            seg_args: Optional[Callable[[int], Tuple[Any, ...]]] = None,
+            only_nonempty: bool = True) -> Tuple[List[int], List[Future]]:
+    for a in args:
+        _check_shippable(a)
+    segs = [j for j in range(pv.nsegments)
+            if pv.dist.sizes[j] or not only_nonempty]
+    return segs, [pv._apply(fn, j, *args, *(seg_args(j) if seg_args else ()))
+                  for j in segs]
+
+
+def _derived(pv: PartitionedVector, keyed: List[Tuple[List[int], str]],
+             segs: List[int], name: str) -> PartitionedVector:
+    """Assemble the client handle for a result vector whose segments were
+    registered owner-side.  Empty source segments produced no remote call;
+    register their (empty) result segments locally-ownerless is wrong, so
+    they are created at the *initial* owner via the same geometry."""
+    from repro import net as _net
+    from repro.container.partitioned_vector import _create_segment
+
+    keys: List[Optional[Tuple[int, int]]] = [None] * pv.nsegments
+    dtypes = []
+    for j, (key, dt) in zip(segs, keyed):
+        keys[j] = tuple(key)
+        dtypes.append(np.dtype(dt))
+    dt = np.result_type(*dtypes).str if dtypes else pv.dtype.str
+    empty = [j for j in range(pv.nsegments) if keys[j] is None]
+    # empty segments produced no remote call; allocate their zero-length
+    # result segments at the source's initial owner so the result vector's
+    # placement mirrors the source everywhere
+    futs = [_net.run_on(pv.dist.owners[j], _create_segment,
+                        f"{name}/seg{j}", 0, dt, pv.element_shape)
+            for j in empty]
+    for j, f in zip(empty, futs):
+        keys[j] = tuple(f.get(timeout=_TIMEOUT))
+    out = PartitionedVector(name, pv.dist, dt, pv.element_shape, keys)
+    _publish_descriptor(name, pv.dist, dt, out.element_shape, out.segment_keys)
+    return out
+
+
+# ------------------------------------------------------------- order-free ops
+def for_each(policy: ExecutionPolicy, pv: PartitionedVector,
+             fn: Callable[[Any], Any]) -> Any:
+    _segs, futs = _fanout(pv, _seg_for_each, fn)
+    return _deliver(policy, dataflow(lambda *parts: None, *futs))
+
+
+def transform(policy: ExecutionPolicy, pv: PartitionedVector,
+              fn: Callable[[Any], Any]) -> Any:
+    """→ new PartitionedVector, same geometry, segments at the same owners
+    as the source (zero element bytes on the wire)."""
+    name = derived_name(pv.name)
+    segs, futs = _fanout(pv, _seg_transform, fn,
+                         seg_args=lambda j: (f"{name}/seg{j}",))
+    return _deliver(policy, dataflow(
+        lambda *keyed: _derived(pv, list(keyed), segs, name), *futs))
+
+
+def _fold_parts(init: Any, parts, op: Callable[[Any, Any], Any]) -> Any:
+    acc = init
+    for p in parts:
+        if p is None:  # empty segment
+            continue
+        acc = op(acc, p)
+    return acc
+
+
+def reduce(policy: ExecutionPolicy, pv: PartitionedVector, init: Any = 0,
+           op: Callable[[Any, Any], Any] = operator.add) -> Any:
+    _segs, futs = _fanout(pv, _seg_reduce, op)
+    return _deliver(policy, dataflow(
+        lambda *parts: _fold_parts(init, parts, op), *futs))
+
+
+def transform_reduce(policy: ExecutionPolicy, pv: PartitionedVector,
+                     fn: Callable[[Any], Any], init: Any = 0,
+                     op: Callable[[Any, Any], Any] = operator.add) -> Any:
+    _segs, futs = _fanout(pv, _seg_transform_reduce, fn, op)
+    return _deliver(policy, dataflow(
+        lambda *parts: _fold_parts(init, parts, op), *futs))
+
+
+def count_if(policy: ExecutionPolicy, pv: PartitionedVector,
+             pred: Callable[[Any], Any]) -> Any:
+    _segs, futs = _fanout(pv, _seg_count_if, pred)
+    return _deliver(policy, dataflow(lambda *parts: int(sum(parts)), *futs))
+
+
+def fill(policy: ExecutionPolicy, pv: PartitionedVector, value: Any) -> Any:
+    _segs, futs = _fanout(pv, _seg_fill, value)
+    return _deliver(policy, dataflow(lambda *parts: pv, *futs))
+
+
+def _extremum(policy: ExecutionPolicy, pv: PartitionedVector,
+              which: str) -> Any:
+    if len(pv) == 0:
+        raise ValueError(f"{which}_element of an empty partitioned vector")
+    _segs, futs = _fanout(pv, _seg_extremum, which)
+    pick = builtins.min if which == "min" else builtins.max
+
+    def combine(*parts):
+        vals = [p for p in parts if p is not None]
+        return pick(vals)
+
+    return _deliver(policy, dataflow(combine, *futs))
+
+
+def min_element(policy: ExecutionPolicy, pv: PartitionedVector) -> Any:
+    return _extremum(policy, pv, "min")
+
+
+def max_element(policy: ExecutionPolicy, pv: PartitionedVector) -> Any:
+    return _extremum(policy, pv, "max")
+
+
+# ------------------------------------------------------------------- scans
+def _carries(totals: List[Any], op: Callable[[Any, Any], Any],
+             exclusive: bool, init: Any) -> List[Any]:
+    """Exclusive carry combine of segment totals (the caller-side middle
+    pass).  Inclusive: chunk 0 gets no offset (None); exclusive: chunk 0
+    is seeded with ``init``."""
+    offs: List[Any] = [init if exclusive else None] * len(totals)
+    carry: Any = init if exclusive else None
+    for j in range(len(totals) - 1):
+        t = totals[j]
+        if t is not None:
+            carry = t if carry is None else op(carry, t)
+        offs[j + 1] = carry
+    return offs
+
+
+def _scan_contiguous(policy: ExecutionPolicy, pv: PartitionedVector,
+                     op: Callable[[Any, Any], Any], exclusive: bool,
+                     init: Any) -> Any:
+    name = derived_name(pv.name)
+    segs, futs = _fanout(pv, _seg_scan_local, op,
+                         seg_args=lambda j: (f"{name}/seg{j}",))
+
+    def fixup(*keyed) -> PartitionedVector:
+        keys: dict = {}
+        totals: List[Any] = [None] * pv.nsegments
+        dts: dict = {}
+        for j, (key, total, dt) in zip(segs, keyed):
+            keys[j], totals[j], dts[j] = key, total, dt
+        offs = _carries(totals, op, exclusive, init)
+        fixed = [j for j in range(pv.nsegments) if j in keys]
+        fix = [_apply_on(keys[j], _seg_apply_offset, list(keys[j]), op,
+                         offs[j], exclusive) for j in fixed]
+        for j, f in zip(fixed, fix):
+            rebound_dt = f.get(timeout=_TIMEOUT)
+            if rebound_dt is not None:  # the fixup may promote the dtype
+                dts[j] = rebound_dt
+        keyed_dt = [(keys[j], dts[j]) for j in fixed]
+        return _derived(pv, keyed_dt, segs, name)
+
+    return _deliver(policy, dataflow(fixup, *futs))
+
+
+def _scan_gather(policy: ExecutionPolicy, pv: PartitionedVector,
+                 op: Callable[[Any, Any], Any], exclusive: bool,
+                 init: Any) -> Any:
+    """Cyclic layouts interleave global order across segments, so the
+    two-pass decomposition does not apply: gather, scan at the caller,
+    scatter the result back to the source owners (documented fallback —
+    O(n) wire bytes, still a distributed *result*)."""
+    name = derived_name(pv.name)
+
+    def run() -> PartitionedVector:
+        data = pv.to_array()
+        out: List[Any] = []
+        if exclusive:
+            acc = init
+            for v in data:
+                out.append(acc)
+                acc = op(acc, v)
+        else:
+            acc = None
+            for v in data:
+                acc = v if acc is None else op(acc, v)
+                out.append(acc)
+        arr = (np.asarray(out) if out
+               else np.empty((0, *pv.element_shape), dtype=pv.dtype))
+        segs = list(range(pv.nsegments))
+        futs = [pv._apply(_seg_adopt_values, j, f"{name}/seg{j}",
+                          arr[pv.dist.global_indices(j)]) for j in segs]
+        keyed = [f.get(timeout=_TIMEOUT) for f in futs]
+        return _derived(pv, keyed, segs, name)
+
+    if policy.task:
+        return _executor.get_executor("default").async_execute(run)
+    return run()
+
+
+def inclusive_scan(policy: ExecutionPolicy, pv: PartitionedVector,
+                   op: Callable[[Any, Any], Any] = operator.add) -> Any:
+    if pv.dist.contiguous:
+        return _scan_contiguous(policy, pv, op, exclusive=False, init=None)
+    return _scan_gather(policy, pv, op, exclusive=False, init=None)
+
+
+def exclusive_scan(policy: ExecutionPolicy, pv: PartitionedVector,
+                   init: Any = 0,
+                   op: Callable[[Any, Any], Any] = operator.add) -> Any:
+    if pv.dist.contiguous:
+        return _scan_contiguous(policy, pv, op, exclusive=True, init=init)
+    return _scan_gather(policy, pv, op, exclusive=True, init=init)
+
+
+# -------------------------------------------------------------------- sort
+def sort(policy: ExecutionPolicy, pv: PartitionedVector) -> Any:
+    """In-place: distributed per-segment sorts, k-way merge on the caller,
+    scatter back in global order.  Returns ``pv``."""
+    if pv.element_shape != ():
+        raise ValueError("sort needs scalar elements (no total order on "
+                         "array-valued elements)")
+
+    def run() -> PartitionedVector:
+        segs, futs = _fanout(pv, _seg_sort_inplace)
+        for f in futs:
+            f.get(timeout=_TIMEOUT)
+        reads = [pv._apply(_seg_read, j) for j in segs]  # issue all, then join
+        runs = [f.get(timeout=_TIMEOUT) for f in reads]
+        merged = np.fromiter(heapq.merge(*[r.tolist() for r in runs]),
+                             dtype=pv.dtype, count=len(pv))
+        if len(pv):
+            pv.set_slice(0, len(pv), merged)
+        return pv
+
+    if policy.task:
+        return _executor.get_executor("default").async_execute(run)
+    return run()

@@ -5,7 +5,8 @@ coincidentally covers the need for data parallel algorithms"; HPX provides
 the reference implementation.  We provide the JAX analogue:
 
     for_each, transform, reduce, transform_reduce, inclusive_scan,
-    exclusive_scan, sort, count_if, all_of/any_of, copy
+    exclusive_scan, sort, count_if, all_of/any_of, copy, fill,
+    min_element, max_element
 
 Each takes an :class:`~repro.core.executor.ExecutionPolicy`; the policy is
 a pure rewrite object and every lowering dispatches through the bound
@@ -21,6 +22,13 @@ executor's ``bulk_async_execute``:
 - ``vec.on(MeshExecutor(mesh, axis))`` — device plane: input sharded over a
   mesh axis, bodies run per shard, reductions finish with the matching
   collective (DESIGN.md §3.1).
+
+A data argument that is a *partitioned vector* (``repro.container``) takes
+none of these lowerings: the algorithm dispatches to the segmented layer
+(:mod:`repro.container.segmented`), which ships the body to each segment's
+owning locality as parcels and combines partials on the caller through
+``dataflow`` — work goes to data, the policy's ``task`` flag still selects
+one-way vs two-way.
 
 Under vec/mesh, binary ``op`` arguments must be jax-traceable and combine
 *batched slices elementwise* (``operator.add``, ``operator.mul``,
@@ -58,6 +66,20 @@ _SEQ_EXEC = SequencedExecutor()
 
 
 # ------------------------------------------------------------------ dispatch
+def _is_segmented(data: Any) -> bool:
+    """Partitioned containers carry the ``is_segmented`` marker; their
+    algorithms lower to per-segment parcels (work-to-data) instead of the
+    local chunk/vmap lowerings below."""
+    return getattr(data, "is_segmented", False)
+
+
+def _seg_dispatch(name: str, policy: ExecutionPolicy, data: Any,
+                  *args: Any, **kwargs: Any) -> Any:
+    from repro.container import segmented  # deferred: container is optional
+
+    return getattr(segmented, name)(policy, data, *args, **kwargs)
+
+
 def _as_policy(policy: Any) -> ExecutionPolicy:
     if isinstance(policy, ExecutionPolicy):
         return policy
@@ -165,6 +187,8 @@ def for_each(policy: ExecutionPolicy, data: Sequence[Any],
     (module contract: no silent sequential fallback).  Host side effects
     belong under ``seq``/``par``."""
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("for_each", policy, data, fn)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk() -> None:
@@ -192,6 +216,8 @@ def for_each(policy: ExecutionPolicy, data: Sequence[Any],
 # ---------------------------------------------------------------- transform
 def transform(policy: ExecutionPolicy, data: Any, fn: Callable[[Any], Any]) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("transform", policy, data, fn)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -245,6 +271,8 @@ def reduce(
     op: Callable[[Any, Any], Any] = operator.add,
 ) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("reduce", policy, data, init, op)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -285,6 +313,8 @@ def transform_reduce(
     op: Callable[[Any, Any], Any] = operator.add,
 ) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("transform_reduce", policy, data, fn, init, op)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -381,6 +411,8 @@ def _assoc_scan(name: str, op: Callable, arr):
 def inclusive_scan(policy: ExecutionPolicy, data: Any,
                    op: Callable = operator.add) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("inclusive_scan", policy, data, op)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -416,6 +448,8 @@ def inclusive_scan(policy: ExecutionPolicy, data: Any,
 def exclusive_scan(policy: ExecutionPolicy, data: Any, init: Any = 0,
                    op: Callable = operator.add) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("exclusive_scan", policy, data, init, op)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -464,6 +498,8 @@ def exclusive_scan(policy: ExecutionPolicy, data: Any, init: Any = 0,
 def sort(policy: ExecutionPolicy, data: Any) -> Any:
     """Parallel merge-ish sort: chunk-sort on pool tasks, k-way merge."""
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("sort", policy, data)
     m = _mode(policy)
     if m in ("vec", "device"):
         def thunk():
@@ -489,6 +525,8 @@ def sort(policy: ExecutionPolicy, data: Any) -> Any:
 def count_if(policy: ExecutionPolicy, data: Any,
              pred: Callable[[Any], Any]) -> Any:
     policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("count_if", policy, data, pred)
     body = (  # one lowering: transform_reduce owns the vec/device dispatch
         (lambda x: jnp.int32(pred(x))) if _mode(policy) in ("vec", "device")
         else (lambda x: 1 if pred(x) else 0))
@@ -532,6 +570,70 @@ def all_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], Any]) -> An
 def any_of(policy: ExecutionPolicy, data: Any, pred: Callable[[Any], Any]) -> Any:
     return _predicate_result(policy, count_if(policy, data, pred),
                              lambda c: c > 0)
+
+
+# --------------------------------------------------------------------- fill
+def fill(policy: ExecutionPolicy, data: Any, value: Any) -> Any:
+    """Assign ``value`` to every element (C++ ``std::fill``).
+
+    Host policies mutate ``data`` in place (it must be a mutable sequence)
+    and return it; vec/mesh return a new filled array of ``data``'s shape
+    and dtype (arrays are immutable under jax)."""
+    policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch("fill", policy, data, value)
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            return jnp.full(arr.shape, value, dtype=arr.dtype)
+
+        return _offload(policy, thunk)
+
+    n = len(data)
+
+    def _run(lo: int, hi: int) -> None:
+        for i in range(lo, hi):
+            data[i] = value
+
+    return _join(policy, _bulk(policy, n, _run), lambda parts: data)
+
+
+# ---------------------------------------------------------------- extrema
+def _extremum(policy: ExecutionPolicy, data: Any, name: str,
+              host_pick: Callable, jnp_pick: Callable) -> Any:
+    policy = _as_policy(policy)
+    if _is_segmented(data):
+        return _seg_dispatch(name, policy, data)
+    if len(data) == 0:  # C++ returns last; we are value-returning, so raise
+        raise ValueError(f"{name} of an empty range")
+    m = _mode(policy)
+    if m in ("vec", "device"):
+        def thunk():
+            arr = jnp.asarray(data)
+            if m == "device":
+                arr = _device_ex(policy).put(arr)
+            return jnp_pick(arr, axis=0)  # scalars → the element; batched
+            # elements → elementwise extremum (no total order on arrays)
+
+        return _offload(policy, thunk)
+
+    def _run(lo: int, hi: int) -> Any:
+        return host_pick(data[i] for i in range(lo, hi))
+
+    return _join(policy, _bulk(policy, len(data), _run), host_pick)
+
+
+def min_element(policy: ExecutionPolicy, data: Any) -> Any:
+    """Smallest element's value (C++ ``min_element``, dereferenced)."""
+    return _extremum(policy, data, "min_element", builtins.min, jnp.min)
+
+
+def max_element(policy: ExecutionPolicy, data: Any) -> Any:
+    """Largest element's value (C++ ``max_element``, dereferenced)."""
+    return _extremum(policy, data, "max_element", builtins.max, jnp.max)
 
 
 # --------------------------------------------------------------------- copy

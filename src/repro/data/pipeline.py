@@ -7,6 +7,15 @@ prefetch queue so batch
 (i+1) is built and transferred while the device runs step i — the paper's
 "overlapping communication and computation" on the host plane.  The
 trainer consumes ``Future[batch]``s (futurization, P1).
+
+Locality-sharded mode (work-to-data, ``repro.container``): a
+:class:`ShardedTokenDataset` is a :class:`PartitionedVector` of token
+rows, block-distributed over the localities and *synthesized in place at
+each owner* (``fill_with`` ships the generator function, never the token
+bytes).  Its :class:`LocalShardFeeder` is Prefetcher-compatible
+(``get(step) → Future[batch]``) but assembles batches exclusively from
+the segments this locality owns — a trainer per locality feeds from local
+data, and the dataset as a whole never transits the wire.
 """
 
 from __future__ import annotations
@@ -66,28 +75,29 @@ def synth_batch(cfg: ModelConfig, dcfg: DataConfig, step: int,
     return out
 
 
-class Prefetcher:
+class _WindowedFeeder:
     """AMT-driven double buffering: ``get(step)`` returns a Future[batch];
-    the batch for step+prefetch is already being assembled by pool tasks."""
+    the batch for step+prefetch is already being assembled by pool tasks.
+    Subclasses provide ``_build(step) → batch``."""
 
-    def __init__(self, cfg: ModelConfig, dcfg: DataConfig,
-                 shardings: Optional[Dict[str, Any]] = None):
-        self.cfg = cfg
+    def __init__(self, dcfg: DataConfig, counter_tag: str):
         self.dcfg = dcfg
-        self.shardings = shardings
         self._pending: Dict[int, Future] = {}
         self._lock = threading.Lock()
         # Batch assembly is host I/O-plane work: it runs on the resource
         # partitioner's "io" pool so prefetch never steals compute slots
         # (fallback: the default pool on unpartitioned runtimes).
         self._exec = _executor.get_executor("io", fallback="default")
-        self.c_built = _counters.counter("/data{pipeline#0}/batches/built")
-        self.t_build = _counters.timer("/data{pipeline#0}/build/duration")
+        self.c_built = _counters.counter(f"/data{{{counter_tag}}}/batches/built")
+        self.t_build = _counters.timer(f"/data{{{counter_tag}}}/build/duration")
+
+    def _build(self, step: int) -> Dict[str, Any]:
+        raise NotImplementedError
 
     def _schedule(self, step: int) -> Future:
         def build():
             with self.t_build.time():
-                b = synth_batch(self.cfg, self.dcfg, step, self.shardings)
+                b = self._build(step)
             self.c_built.increment()
             return b
 
@@ -103,3 +113,101 @@ class Prefetcher:
                 if s not in self._pending:
                     self._pending[s] = self._schedule(s)
         return fut
+
+
+class Prefetcher(_WindowedFeeder):
+    """Single-locality feeder: every batch synthesized here."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig,
+                 shardings: Optional[Dict[str, Any]] = None):
+        super().__init__(dcfg, "pipeline#0")
+        self.cfg = cfg
+        self.shardings = shardings
+
+    def _build(self, step: int) -> Dict[str, Any]:
+        return synth_batch(self.cfg, self.dcfg, step, self.shardings)
+
+
+# ------------------------------------------------------ locality-sharded mode
+def synth_token_rows(global_idx: Any, cfg: ModelConfig,
+                     dcfg: DataConfig) -> np.ndarray:
+    """Deterministic token rows of the *global* stream: row ``r`` depends
+    only on ``(dcfg.seed, r)``, so any locality synthesizing its own
+    segment produces exactly the rows a single process would have (the
+    ``fill_with`` generator — module-level, pickled by reference)."""
+    S, V = dcfg.seq_len + 1, cfg.vocab_size
+    period = max(2, min(64, V // 4))
+    idx = np.asarray(global_idx, dtype=np.int64)
+    out = np.empty((idx.shape[0], S), dtype=np.int32)
+    for k, r in enumerate(idx):
+        rng = np.random.default_rng(dcfg.seed * 1_000_003 + 7919 * int(r))
+        base = (np.arange(S) + rng.integers(0, period)) % period
+        noise = rng.integers(0, V, size=S)
+        keep = rng.random(S) < 0.85  # 85% grammar, 15% noise
+        out[k] = np.where(keep, base, noise)
+    return out
+
+
+class ShardedTokenDataset:
+    """Token rows as a PartitionedVector: each locality holds — and
+    synthesized, in place — only its own segments."""
+
+    def __init__(self, pv: Any, cfg: ModelConfig, dcfg: DataConfig):
+        self.pv = pv
+        self.cfg = cfg
+        self.dcfg = dcfg
+
+    @classmethod
+    def create(cls, name: str, cfg: ModelConfig, dcfg: DataConfig,
+               rows: int, distribution: Any = "block") -> "ShardedTokenDataset":
+        from repro.container import PartitionedVector
+
+        if cfg.family in ("vlm", "encdec"):
+            raise ValueError(
+                f"locality-sharded datasets synthesize token rows only; "
+                f"the {cfg.family!r} family needs extra batch fields "
+                f"(patches/enc) — use Prefetcher for it")
+        pv = PartitionedVector.create(name, rows, dtype=np.int32,
+                                      element_shape=(dcfg.seq_len + 1,),
+                                      distribution=distribution)
+        pv.fill_with(synth_token_rows, cfg, dcfg)
+        return cls(pv, cfg, dcfg)
+
+    @classmethod
+    def attach(cls, name: str, cfg: ModelConfig,
+               dcfg: DataConfig) -> "ShardedTokenDataset":
+        from repro.container import PartitionedVector
+
+        return cls(PartitionedVector.attach(name), cfg, dcfg)
+
+    def __len__(self) -> int:
+        return len(self.pv)
+
+    def feeder(self) -> "LocalShardFeeder":
+        return LocalShardFeeder(self.pv, self.dcfg)
+
+
+class LocalShardFeeder(_WindowedFeeder):
+    """Prefetcher-compatible feeder over the *locally-owned* segments of a
+    sharded dataset: batch assembly reads a construction-time snapshot of
+    the local segments (an in-memory copy — still no token ever crosses
+    the wire), so later mutation or migration of the dataset never races
+    in-flight batch builds."""
+
+    def __init__(self, pv: Any, dcfg: DataConfig):
+        super().__init__(dcfg, f"feeder:{pv.name}")
+        local = pv.local_segments()
+        if not local:
+            raise RuntimeError(
+                f"no segment of {pv.name!r} lives on this locality — "
+                f"rebalance() it here or use Prefetcher")
+        self._rows = np.concatenate([seg for _j, seg in local], axis=0)
+        self.global_rows = np.concatenate(
+            [pv.dist.global_indices(j) for j, _seg in local])
+        self.pv = pv
+
+    def _build(self, step: int) -> Dict[str, Any]:
+        rng = np.random.default_rng(self.dcfg.seed * 9_176_081 + step)
+        pick = rng.integers(0, self._rows.shape[0],
+                            size=self.dcfg.batch_size)
+        return {"tokens": jnp.asarray(self._rows[pick])}

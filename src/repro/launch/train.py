@@ -36,38 +36,68 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--scheduler", default="local",
                     choices=("static", "local", "hierarchical"))
+    ap.add_argument("--localities", type=int, default=1,
+                    help="multi-locality runtime: N OS processes")
+    ap.add_argument("--sharded-rows", type=int, default=0,
+                    help="locality-sharded dataset of this many token rows "
+                         "(synthesized in place at each owning locality); "
+                         "the trainer feeds from locality 0's segments")
     args = ap.parse_args()
+
+    import contextlib
 
     import repro.core as core
     from repro.configs import get_config
-    from repro.data.pipeline import DataConfig
+    from repro.data.pipeline import DataConfig, ShardedTokenDataset
     from repro.dist.plan import get_plan
     from repro.models.model import build_model
     from repro.optim.adamw import AdamWConfig
     from repro.train.trainer import TrainConfig, Trainer
 
     # Resource partition: compute-plane tasks on "default", prefetch
-    # assembly + checkpoint writes on the single-worker "io" pool.
-    core.init(policy=args.scheduler,
-              pools={"default": args.workers, "io": 1})
-    cfg = get_config(args.arch, smoke=args.smoke)
-    plan = get_plan(args.plan, **({"microbatches": args.microbatches}
-                                  if args.plan != "bsp" and args.microbatches > 1 else {}))
-    model = build_model(cfg, plan)
-    trainer = Trainer(
-        model,
-        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
-                    total_steps=args.steps),
-        DataConfig(batch_size=args.batch, seq_len=args.seq),
-        TrainConfig(steps=args.steps, log_every=args.log_every,
-                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
-    )
-    if args.resume:
-        print(f"resumed at step {trainer.resume()}")
-    history = trainer.fit()
-    for h in history:
-        print(json.dumps(h))
-    print(json.dumps({"counters": dict(core.counters.query("/train*"))}))
+    # assembly + checkpoint writes on the single-worker "io" pool.  A
+    # sharded dataset needs the net runtime even at one locality.
+    pools = {"default": args.workers, "io": 1}
+    if args.localities > 1 or args.sharded_rows > 0:
+        if args.scheduler != "local":
+            ap.error("--scheduler is not supported together with "
+                     "--localities/--sharded-rows (the multi-locality "
+                     "bootstrap brings up the default scheduler)")
+        from repro import net as rnet
+
+        ctx = rnet.running(max(args.localities, 1), pools=pools)
+    else:
+        core.init(policy=args.scheduler, pools=pools)
+        ctx = contextlib.nullcontext()
+    with ctx:
+        cfg = get_config(args.arch, smoke=args.smoke)
+        plan = get_plan(args.plan, **({"microbatches": args.microbatches}
+                                      if args.plan != "bsp" and args.microbatches > 1 else {}))
+        model = build_model(cfg, plan)
+        dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq)
+        prefetcher = None
+        if args.sharded_rows > 0:
+            ds = ShardedTokenDataset.create("/data/train-shard", cfg, dcfg,
+                                            rows=args.sharded_rows)
+            prefetcher = ds.feeder()
+            print(json.dumps({"sharded_rows": len(ds),
+                              "local_rows": int(prefetcher.global_rows.shape[0]),
+                              "segments": ds.pv.nsegments}))
+        trainer = Trainer(
+            model,
+            AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                        total_steps=args.steps),
+            dcfg,
+            TrainConfig(steps=args.steps, log_every=args.log_every,
+                        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
+            prefetcher=prefetcher,
+        )
+        if args.resume:
+            print(f"resumed at step {trainer.resume()}")
+        history = trainer.fit()
+        for h in history:
+            print(json.dumps(h))
+        print(json.dumps({"counters": dict(core.counters.query("/train*"))}))
     core.finalize()
 
 

@@ -4,6 +4,7 @@ The subsystem that makes "locality" mean what the paper means (§2.2–2.3):
 a separate runtime instance reached only through parcels.
 
     bootstrap(n)            fork n-1 worker runtimes; caller = AGAS root
+    running(n)              context-managed bootstrap (leak-proof teardown)
     apply_remote(a, gid)    one-sided invoke where the object lives
     run_on(loc, fn, ...)    invoke against a locality's runtime itself
     migrate_remote(gid, L)  move an object; GID stays valid (gen bump)
@@ -26,6 +27,7 @@ from repro.net.locality import (
     bootstrap,
     current,
     require,
+    running,
 )
 from repro.net.parcelport import PortClosed
 from repro.net.remote import (
@@ -33,13 +35,14 @@ from repro.net.remote import (
     describe,
     fetch,
     migrate_remote,
+    owner_of,
     query_counters,
     run_on,
 )
 
 __all__ = [
     "ROOT", "Locality", "NetRuntime", "UnknownGid", "PortClosed",
-    "bootstrap", "current", "require",
-    "apply_remote", "describe", "fetch", "migrate_remote", "query_counters",
-    "run_on",
+    "bootstrap", "current", "require", "running",
+    "apply_remote", "describe", "fetch", "migrate_remote", "owner_of",
+    "query_counters", "run_on",
 ]

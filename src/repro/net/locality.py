@@ -551,6 +551,26 @@ def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
     return net
 
 
+import contextlib
+
+
+@contextlib.contextmanager
+def running(n_localities: int, pools: Optional[Dict[str, int]] = None,
+            worker_pools: Optional[Dict[str, int]] = None,
+            timeout: float = 120.0):
+    """Leak-proof bootstrap: ``with net.running(3) as n: ...`` guarantees
+    worker-process teardown even when the body raises — a failing
+    multi-locality test cannot strand processes and poison later tests.
+    (``bootstrap`` itself already reaps workers on handshake failure; this
+    covers everything *after* a successful bootstrap.)"""
+    net = bootstrap(n_localities, pools=pools, worker_pools=worker_pools,
+                    timeout=timeout)
+    try:
+        yield net
+    finally:
+        net.shutdown()
+
+
 def _worker_main(locality_id: int, n_localities: int, port: int,
                  pools: Optional[Dict[str, int]]) -> None:
     """Entry point of a worker locality (runs in the spawned process)."""

@@ -267,6 +267,15 @@ def run_on(locality: Union[int, Locality], fn: Union[str, Callable[..., Any]],
 
 
 # ------------------------------------------------------------ conveniences
+def owner_of(target: _Target) -> int:
+    """The locality that currently holds ``target`` (root-fresh when the
+    local cache is cold; may be one migration stale otherwise — parcel
+    dispatch self-heals, this is for placement *reporting*)."""
+    net = require()
+    owner, _key = _resolve_owner(net, target)
+    return owner
+
+
 def query_counters(locality: Union[int, Locality], pattern: str = "*",
                    timeout: float = 60.0):
     """Read a remote locality's performance counters (paper §2.4: counters

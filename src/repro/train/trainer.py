@@ -55,7 +55,7 @@ class TrainConfig:
 class Trainer:
     def __init__(self, model: Model, opt_cfg: adamw.AdamWConfig,
                  data_cfg: DataConfig, tcfg: TrainConfig,
-                 mesh=None, rng_seed: int = 0):
+                 mesh=None, rng_seed: int = 0, prefetcher=None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.data_cfg = data_cfg
@@ -70,7 +70,12 @@ class Trainer:
         self.step_num = 0
         self._step_fn = jax.jit(step_mod.make_train_step(model, opt_cfg, mesh),
                                 donate_argnums=(0, 1))
-        self.prefetcher = Prefetcher(model.cfg, data_cfg)
+        # Any ``get(step) -> Future[batch]`` source plugs in — notably
+        # ``data.pipeline.LocalShardFeeder`` (locality-sharded datasets:
+        # this trainer then feeds exclusively from segments its own
+        # locality holds, the work-to-data training path).
+        self.prefetcher = (prefetcher if prefetcher is not None
+                           else Prefetcher(model.cfg, data_cfg))
         self.gid = _agas.default().register_name(
             f"/train/state/{model.cfg.name}",
             {"params": self.params, "opt": self.opt_state}, replace=True)

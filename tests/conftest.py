@@ -22,3 +22,17 @@ def rng():
     import jax
 
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def net_factory(rt):
+    """Leak-proof multi-locality bootstrap for tests: every runtime made
+    through the factory is shut down (workers reaped) even when the test
+    body raises — a failing test cannot strand processes and poison the
+    rest of the suite."""
+    import contextlib
+
+    from repro import net as rnet
+
+    with contextlib.ExitStack() as stack:
+        yield lambda n, **kw: stack.enter_context(rnet.running(n, **kw))

@@ -299,3 +299,44 @@ def test_for_each_vec_non_traceable_raises(rt):
     with pytest.raises(ValueError, match="seq/par"):
         alg.for_each(vec, [1, 2, 3], lambda x: out.append(int(x)))
     assert out == []  # nothing silently executed sequentially
+
+
+# ------------------------------------------- HPX staples: fill/min/max
+@pytest.mark.parametrize("name,mk", POLICIES)
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=60))
+def test_staples_agree_with_seq_oracle(rt, name, mk, xs):
+    pol = mk()
+    assert _val(alg.min_element(pol, xs)) == float(min(xs))
+    assert _val(alg.max_element(pol, xs)) == float(max(xs))
+    host_data = list(xs)
+    filled = alg.fill(pol, host_data if name not in ("vec", "mesh")
+                      else jnp.asarray(xs), 3)
+    assert _val(filled) == [3.0] * len(xs)
+
+
+def test_fill_mutates_host_sequences_in_place(rt):
+    xs = list(range(10))
+    out = alg.fill(par, xs, -1)
+    assert out is xs and xs == [-1] * 10
+    # vec: arrays are immutable — a new filled array, dtype preserved
+    arr = jnp.arange(10)
+    out = alg.fill(vec, arr, 4)
+    assert out.dtype == arr.dtype and list(np.asarray(out)) == [4] * 10
+
+
+def test_extrema_of_empty_range_raise(rt):
+    for pol in (seq, par, vec):
+        with pytest.raises(ValueError, match="empty"):
+            alg.min_element(pol, [])
+        with pytest.raises(ValueError, match="empty"):
+            alg.max_element(pol, [])
+
+
+def test_staples_two_way_futures(rt):
+    xs = [5, 1, 9, 3]
+    f_min = alg.min_element(par_task, xs)
+    f_fill = alg.fill(par_task, list(xs), 0)
+    assert isinstance(f_min, Future) and isinstance(f_fill, Future)
+    assert f_min.get(timeout=60) == 1
+    assert f_fill.get(timeout=60) == [0] * 4

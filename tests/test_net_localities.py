@@ -60,11 +60,8 @@ def unregister_by_name(rt, name):
 # ------------------------------------------------------------------ fixture
 @pytest.fixture(scope="module")
 def net(rt):
-    n = rnet.bootstrap(3, pools={"default": 4, "io": 1})
-    try:
+    with rnet.running(3, pools={"default": 4, "io": 1}) as n:
         yield n
-    finally:
-        n.shutdown()
 
 
 # -------------------------------------------------------------------- tests

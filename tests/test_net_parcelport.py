@@ -114,3 +114,73 @@ def test_jax_arrays_take_the_host_fast_path():
     (got,), _ = payload
     assert isinstance(got, np.ndarray)
     np.testing.assert_array_equal(got, np.arange(32, dtype=np.float32))
+
+
+# --------------------------------------------------- edge-case payloads
+def _pheader():
+    return {"t": pp.PARCEL, "src": 0, "dst": 1, "seq": 1, "a": "f", "g": None}
+
+
+@pytest.mark.parametrize("arr", [
+    np.array(3.5),                                   # 0-d
+    np.array(7, dtype=np.int32),                     # 0-d int
+    np.empty((0,), np.float64),                      # empty 1-d
+    np.empty((0, 4), np.float32),                    # empty 2-d
+    np.arange(100).reshape(10, 10)[:, ::2],          # non-contiguous view
+    np.arange(100).reshape(10, 10)[::3],             # strided rows
+    np.asfortranarray(np.arange(12.0).reshape(3, 4)),  # F-order
+], ids=["0d-f8", "0d-i4", "empty-1d", "empty-2d", "noncontig-cols",
+        "strided-rows", "fortran"])
+def test_edge_payload_round_trips(arr):
+    hdr, payload = _round_trip(_pheader(), (((arr,), {})))
+    (got,), _ = payload
+    np.testing.assert_array_equal(got, arr)
+    assert got.dtype == arr.dtype and got.shape == arr.shape
+
+
+def test_bf16_round_trips():
+    import jax.numpy as jnp
+
+    x = jnp.arange(9, dtype=jnp.bfloat16) / 4
+    hdr, payload = _round_trip(_pheader(), (((x,), {})))
+    (got,), _ = payload
+    assert str(got.dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(x), got)
+
+
+# ------------------------------------------------- codec property tests
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_DTYPES = ["<f4", "<f8", "<i4", "<i8", "|u1"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 300), st.sampled_from(_DTYPES), st.booleans())
+def test_codec_round_trip_property(n, dt, nest):
+    arr = (np.arange(n) % 251).astype(np.dtype(dt))
+    payload = ({"x": arr, "y": [arr[: n // 2], "tag", 7]} if nest
+               else ((arr,), {}))
+    hdr, got = _round_trip(_pheader(), payload)
+    back = got["x"] if nest else got[0][0]
+    np.testing.assert_array_equal(back, arr)
+    assert back.dtype == arr.dtype
+    if nest:
+        np.testing.assert_array_equal(got["y"][0], arr[: n // 2])
+        assert got["y"][1:] == ["tag", 7]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from(_DTYPES))
+def test_contiguous_buffers_stay_out_of_band(n, dt):
+    """Zero-copy invariant: a C-contiguous array's bytes never enter the
+    pickle stream — they travel as out-of-band buffers, and on the send
+    side the chunk views alias the source memory."""
+    arr = (np.arange(n) % 127).astype(np.dtype(dt))
+    chunks = pp.encode_frame(_pheader(), ((arr,), {}))
+    views = [c for c in chunks[1:] if isinstance(c, memoryview)]
+    assert sum(v.nbytes for v in views) >= arr.nbytes
+    # aliasing: mutating the source is visible through the encoded view
+    if arr.nbytes:
+        first = np.frombuffer(views[0], dtype=arr.dtype)
+        arr[0] += 1
+        assert first[0] == arr[0]

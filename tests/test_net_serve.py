@@ -13,14 +13,11 @@ from repro.serve.router import RemoteEngine, Router
 @pytest.fixture(scope="module")
 def net_router(rt):
     pools = {"default": 4, "prefill": 2, "io": 1}
-    net = rnet.bootstrap(2, pools=pools, worker_pools=pools)
-    try:
+    with rnet.running(2, pools=pools, worker_pools=pools) as net:
         scfg = ServeConfig(max_batch=2, cache_len=64, max_new_tokens=6)
         router = Router.over_localities(net, "qwen25_3b", scfg, smoke=True,
                                         plan="serve")
         yield net, router
-    finally:
-        net.shutdown()
 
 
 def test_both_localities_serve(net_router):
