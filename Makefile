@@ -5,7 +5,7 @@
 PY ?= python
 
 .PHONY: verify test bench bench-serve bench-algorithms bench-net \
-	bench-container smoke
+	bench-container bench-obs smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -27,6 +27,9 @@ bench-net:
 
 bench-container:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_container
+
+bench-obs:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_obs
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

@@ -1,0 +1,218 @@
+"""Observability overhead benchmark — the honesty check for repro.obs.
+
+Tracing is only trustworthy if it is cheap enough to leave on when you
+need it and *free* when you don't.  Three measurements:
+
+1. **Disabled overhead** on the bench_serve workload: A/B the paged
+   serving engine with the tracer module present-but-off vs ... also off —
+   the disabled path IS the default, so the honest statement of disabled
+   cost is the measured per-call price of a no-op recording entry point
+   times the event rate the enabled run would have produced.  Both the
+   direct ns/call figure and the derived fraction of the workload are
+   recorded (acceptance: ≤ 2%).
+
+2. **Enabled overhead**: the same serving workload, best-of-N tokens/s
+   with tracing off vs on (per-thread ring buffers recording scheduler
+   tasks, prefill/decode spans, request lifetimes).  Acceptance: ≤ 10%.
+
+3. **Fleet demo**: a 3-locality run traced end to end and merged into
+   ``results/obs_trace_demo.json`` (a Perfetto-loadable Chrome trace);
+   the flow-link audit (every cross-locality parcel arrow complete)
+   is recorded alongside.
+
+Writes ``results/BENCH_obs.json``.
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_obs.json"
+DEMO = REPO / "results" / "obs_trace_demo.json"
+
+ARCH = "starcoder2_3b"
+MAX_BATCH = 8
+CACHE_LEN = 128
+MAX_NEW = 12
+REQUESTS = 12
+REPEATS = 3
+
+
+def _workload(vocab: int, n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, 61, size=n)
+    return [rng.integers(1, vocab, size=int(L)).tolist() for L in lens]
+
+
+def _serve_pass(model, params, vocab, name: str):
+    """One serving pass; returns (tokens_per_s, recorded_event_count)."""
+    from repro.obs import trace
+    from repro.serve.engine import Engine, ServeConfig
+
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                             max_new_tokens=MAX_NEW, page_size=16,
+                             paged=True, pipeline_admission=True, name=name))
+    prompts = _workload(vocab, REQUESTS)
+    eng.submit(prompts[0]).get(timeout=600)  # warmup: compile prefill/decode
+    ev0 = sum(b["idx"] for b in _buffer_cursors())
+    t0 = time.perf_counter()
+    futs = [eng.submit(p) for p in prompts]
+    total = sum(len(f.get(timeout=600)) for f in futs)
+    wall = time.perf_counter() - t0
+    ev1 = sum(b["idx"] for b in _buffer_cursors())
+    del trace  # only used for the cursor probe below
+    return total / wall, ev1 - ev0, wall
+
+
+def _buffer_cursors():
+    from repro.obs import trace
+
+    with trace._lock:
+        return [{"idx": b.idx} for b in trace._buffers]
+
+
+def _noop_cost_ns(iters: int = 200_000) -> float:
+    """Measured ns/call of the disabled recording entry points (the exact
+    code instrumentation sites run when tracing is off)."""
+    from repro.obs import trace
+
+    assert not trace._enabled
+    span, instant = trace.span, trace.instant
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        with span("x", "t"):
+            pass
+        instant("y", "t")
+    dt = time.perf_counter() - t0
+    return dt / (2 * iters) * 1e9
+
+
+def _bench_overhead():
+    import jax
+
+    from repro.configs import get_config
+    from repro.dist.plan import get_plan
+    from repro.models.model import build_model
+    from repro.obs import trace
+
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg, get_plan("futurized"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    trace.disable()
+    noop_ns = _noop_cost_ns()
+
+    # Interleave off/on passes, keep best-of-N of each: JIT caches and OS
+    # noise hit both arms equally, the max is the honest steady state.
+    off_tps, on_tps, on_events, on_wall = 0.0, 0.0, 0, 0.0
+    for r in range(REPEATS):
+        trace.disable()
+        tps, _, _ = _serve_pass(model, params, cfg.vocab_size,
+                                name=f"bench-obs-off#{r}")
+        off_tps = max(off_tps, tps)
+        trace.enable()
+        tps, n_ev, wall = _serve_pass(model, params, cfg.vocab_size,
+                                      name=f"bench-obs-on#{r}")
+        if tps > on_tps:
+            on_tps, on_events, on_wall = tps, n_ev, wall
+        trace.disable()
+        trace.clear()
+
+    enabled_overhead = max(0.0, 1.0 - on_tps / off_tps) if off_tps else 0.0
+    # disabled cost = no-op price × the event rate tracing would have seen
+    event_rate = on_events / on_wall if on_wall else 0.0
+    disabled_overhead = noop_ns * 1e-9 * event_rate
+    return {
+        "workload": {"arch": ARCH, "requests": REQUESTS,
+                     "max_new": MAX_NEW, "max_batch": MAX_BATCH,
+                     "repeats": REPEATS},
+        "noop_call_ns": round(noop_ns, 2),
+        "events_per_run": on_events,
+        "event_rate_per_s": round(event_rate, 1),
+        "tokens_per_s_disabled": round(off_tps, 2),
+        "tokens_per_s_enabled": round(on_tps, 2),
+        "tracing_disabled_overhead": round(disabled_overhead, 6),
+        "tracing_enabled_overhead": round(enabled_overhead, 4),
+        "disabled_within_2pct": disabled_overhead <= 0.02,
+        "enabled_within_10pct": enabled_overhead <= 0.10,
+    }
+
+
+def _bench_fleet_demo():
+    """3-locality traced serve run → one merged Perfetto-loadable JSON."""
+    from repro import net as rnet
+    from repro.net import remote
+    from repro.obs import export, trace
+    from repro.serve.router import Router
+
+    trace.clear()
+    with rnet.running(3) as net:
+        export.enable_fleet(net)
+        try:
+            from repro.serve.engine import ServeConfig
+
+            router = Router.over_localities(
+                net, ARCH,
+                ServeConfig(max_batch=4, cache_len=CACHE_LEN,
+                            max_new_tokens=8, page_size=16, paged=True,
+                            pipeline_admission=True),
+                smoke=True, plan="serve")
+            prompts = _workload(1000, 6, seed=11)
+            outs = [router.submit(p).get(timeout=600) for p in prompts]
+            tr = export.export_chrome_trace(str(DEMO), net=net)
+        finally:
+            export.disable_fleet(net)
+    trace.clear()
+
+    links = export.flow_links(tr)
+    complete = [v for v in links.values()
+                if v["src"] is not None and v["dst"] is not None]
+    cross = [v for v in complete if v["src"] != v["dst"]]
+    pids = sorted({e["pid"] for e in tr["traceEvents"]})
+    return {
+        "localities": 3,
+        "requests": len(outs),
+        "trace_path": str(DEMO.relative_to(REPO)),
+        "trace_events": len(tr["traceEvents"]),
+        "pids_in_trace": pids,
+        "flow_links_complete": len(complete),
+        "flow_links_cross_locality": len(cross),
+        "all_localities_present": pids == [0, 1, 2],
+    }
+
+
+def run():
+    res = {"overhead": _bench_overhead(), "fleet_demo": _bench_fleet_demo()}
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(res, indent=1))
+    ov, demo = res["overhead"], res["fleet_demo"]
+    return [
+        ("obs/noop_call_ns", ov["noop_call_ns"] * 1e-3,
+         f"{ov['noop_call_ns']:.0f} ns/call disabled"),
+        ("obs/disabled_overhead", 0.0,
+         f"{ov['tracing_disabled_overhead'] * 100:.4f}% (<=2% "
+         f"{'OK' if ov['disabled_within_2pct'] else 'FAIL'})"),
+        ("obs/enabled_overhead", 0.0,
+         f"{ov['tracing_enabled_overhead'] * 100:.2f}% (<=10% "
+         f"{'OK' if ov['enabled_within_10pct'] else 'FAIL'})"),
+        ("obs/fleet_demo_flow_links", 0.0,
+         f"{demo['flow_links_cross_locality']} cross-locality arrows, "
+         f"{demo['trace_events']} events"),
+    ]
+
+
+def main() -> None:
+    import repro.core as core
+
+    core.init(pools={"default": 4, "prefill": 2, "io": 1})
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+    print(json.dumps(json.loads(OUT.read_text()), indent=1))
+    core.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,8 @@ def main() -> None:
     core.init(num_workers=4)
     from benchmarks import (bench_algorithms, bench_cholesky, bench_container,
                             bench_dist, bench_efficiency, bench_net,
-                            bench_overlap, bench_serve, bench_stream,
-                            bench_tasks)
+                            bench_obs, bench_overlap, bench_serve,
+                            bench_stream, bench_tasks)
 
     suites = [
         ("tasks", bench_tasks),
@@ -24,6 +24,7 @@ def main() -> None:
         ("serve", bench_serve),
         ("net", bench_net),
         ("container", bench_container),
+        ("obs", bench_obs),
     ]
     print("name,us_per_call,derived")
     failures = 0

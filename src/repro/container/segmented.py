@@ -72,6 +72,14 @@ def _apply_on(key, fn: Callable[..., Any], *args: Any) -> Future:
 def _compute(fn: Callable[[], Any]) -> Any:
     """Run a segment body on the owner's compute pool (the parcel itself
     executes on the "io" pool — heavy loops hop to "default")."""
+    from repro.obs import trace as _trace
+
+    if _trace._enabled:
+        # segment bodies are closures inside the _seg_* actions; the
+        # enclosing function name is the algorithm ("for_each", "reduce")
+        label = getattr(fn, "__qualname__", "segment").split(".")[0]
+        with _trace.span(f"segment:{label.lstrip('_')}", "container"):
+            return _executor.get_executor("default").sync_execute(fn)
     return _executor.get_executor("default").sync_execute(fn)
 
 

@@ -247,12 +247,30 @@ def set_default_locality(locality: int) -> None:
         _default_locality = locality
 
 
+def peek() -> Optional[AGAS]:
+    """The process-wide instance if it exists, WITHOUT constructing one.
+
+    Counter publishing uses this: during ``AGAS.__init__`` (which creates
+    gauges through the counter registry) the instance is not yet visible
+    here, so the publish path skips instead of re-entering ``default()``
+    and deadlocking on the non-reentrant module lock."""
+    return _default
+
+
 def default() -> AGAS:
     global _default
+    created = None
     with _lock:
         if _default is None:
-            _default = AGAS(locality=_default_locality)
-        return _default
+            _default = created = AGAS(locality=_default_locality)
+        inst = _default
+    if created is not None:
+        # Sweep pre-existing counters into the fresh resolver, outside the
+        # module lock (register_name takes the instance lock + fires hooks).
+        from repro.core import counters as _counters
+
+        _counters.default().republish_to_agas()
+    return inst
 
 
 def register(obj: Any, name: Optional[str] = None, **kw: Any) -> GID:

@@ -50,6 +50,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.core import counters as _counters
 from repro.core.future import Future, Promise
+from repro.obs import trace as _trace
 
 # Task priorities (HPX: thread_priority::{low,normal,high,boost}).
 PRIORITY_LOW = 0
@@ -219,10 +220,20 @@ class ThreadPool:
                 victim = self._queues[vid]
                 if victim:
                     self.c_stolen.increment()
+                    if _trace._enabled:
+                        _trace.instant("task/steal", "sched", pool=self.name,
+                                       thief=wid, victim=vid)
                     return victim.popleft()
         return None  # static: never steal
 
     def _run_task(self, task: _Task) -> None:
+        if _trace._enabled:
+            with _trace.span("task/run", "sched", pool=self.name):
+                self._run_task_body(task)
+        else:  # hot path: one flag test, zero tracing cost
+            self._run_task_body(task)
+
+    def _run_task_body(self, task: _Task) -> None:
         with self.t_task.time():
             try:
                 task.run()

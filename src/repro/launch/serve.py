@@ -48,6 +48,13 @@ def main() -> None:
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--stream", action="store_true",
                     help="consume tokens via per-request channels")
+    # observability
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a fleet-wide task/parcel trace and write "
+                         "one merged Chrome trace JSON (Perfetto-loadable)")
+    ap.add_argument("--print-counters", metavar="PATTERN", default=None,
+                    help="end-of-run fleet counter report (HPX "
+                         "--hpx:print-counter parity), e.g. '/serve*'")
     args = ap.parse_args()
     if args.localities > 1 and args.stream:
         ap.error("--stream is per-process (channels cannot cross localities);"
@@ -79,9 +86,17 @@ def main() -> None:
         from repro import net as rnet
 
         net = rnet.bootstrap(args.localities, pools=pools, worker_pools=pools)
+        if args.trace:
+            from repro.obs import export as obs_export
+
+            obs_export.enable_fleet(net)
         router = Router.over_localities(net, args.arch, scfg,
                                         smoke=args.smoke, plan=args.plan)
     else:
+        if args.trace:
+            from repro.obs import trace as obs_trace
+
+            obs_trace.enable()
         model = build_model(cfg, get_plan(args.plan))
         params = model.init(jax.random.PRNGKey(0))
         router = Router.replicate(model, params, scfg, args.engines,
@@ -126,6 +141,17 @@ def main() -> None:
                 loc, "/serve{engine*}/tokens/generated"))
             for loc in range(args.localities)
         }
+    if args.trace:
+        from repro.obs import export as obs_export
+
+        tr = obs_export.export_chrome_trace(args.trace, net=net)
+        report["trace"] = {"path": args.trace,
+                           "events": len(tr["traceEvents"])}
+    if args.print_counters:
+        from repro.obs import sampler as obs_sampler
+
+        obs_sampler.print_counter_report(args.print_counters, net=net)
+    if net is not None:
         net.shutdown()
     print(json.dumps(report, indent=1))
     core.finalize()

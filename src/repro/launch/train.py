@@ -42,6 +42,13 @@ def main() -> None:
                     help="locality-sharded dataset of this many token rows "
                          "(synthesized in place at each owning locality); "
                          "the trainer feeds from locality 0's segments")
+    # observability
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a fleet-wide task/parcel trace and write "
+                         "one merged Chrome trace JSON (Perfetto-loadable)")
+    ap.add_argument("--print-counters", metavar="PATTERN", default=None,
+                    help="end-of-run fleet counter report (HPX "
+                         "--hpx:print-counter parity), e.g. '/train*'")
     args = ap.parse_args()
 
     import contextlib
@@ -69,7 +76,11 @@ def main() -> None:
     else:
         core.init(policy=args.scheduler, pools=pools)
         ctx = contextlib.nullcontext()
-    with ctx:
+    with ctx as net:
+        if args.trace:
+            from repro.obs import export as obs_export
+
+            obs_export.enable_fleet(net)
         cfg = get_config(args.arch, smoke=args.smoke)
         plan = get_plan(args.plan, **({"microbatches": args.microbatches}
                                       if args.plan != "bsp" and args.microbatches > 1 else {}))
@@ -98,6 +109,14 @@ def main() -> None:
         for h in history:
             print(json.dumps(h))
         print(json.dumps({"counters": dict(core.counters.query("/train*"))}))
+        if args.trace:
+            tr = obs_export.export_chrome_trace(args.trace, net=net)
+            print(json.dumps({"trace": args.trace,
+                              "events": len(tr["traceEvents"])}))
+        if args.print_counters:
+            from repro.obs import sampler as obs_sampler
+
+            obs_sampler.print_counter_report(args.print_counters, net=net)
     core.finalize()
 
 

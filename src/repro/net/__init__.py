@@ -36,6 +36,7 @@ from repro.net.remote import (
     fetch,
     migrate_remote,
     owner_of,
+    query_counter_stats,
     query_counters,
     run_on,
 )
@@ -44,5 +45,5 @@ __all__ = [
     "ROOT", "Locality", "NetRuntime", "UnknownGid", "PortClosed",
     "bootstrap", "current", "require", "running",
     "apply_remote", "describe", "fetch", "migrate_remote", "owner_of",
-    "query_counters", "run_on",
+    "query_counter_stats", "query_counters", "run_on",
 ]

@@ -48,6 +48,7 @@ from repro.core import executor as _executor
 from repro.core import parcel as _parcel
 from repro.core.future import Future, Promise
 from repro.net import parcelport as _pp
+from repro.obs import trace as _trace
 
 ROOT = 0
 
@@ -157,8 +158,19 @@ class NetRuntime:
         header = {"t": _pp.PARCEL, "src": self.locality, "dst": dst,
                   "seq": seq, "a": action_name,
                   "g": list(target) if target is not None else None}
+        fid = None
+        if _trace._enabled:
+            # the parcel's trace context: a fresh flow id the receiver uses
+            # both as its spans' parent and as the Perfetto flow-arrow id
+            fid = _trace.new_id()
+            header["tc"] = list(fid)
         try:
-            self._route_to(dst).send(header, (args, kwargs))
+            if fid is not None:
+                with _trace.span(f"send:{action_name.rsplit('.', 1)[-1]}",
+                                 "net", flow_out=fid, dst=dst):
+                    self._route_to(dst).send(header, (args, kwargs))
+            else:
+                self._route_to(dst).send(header, (args, kwargs))
         except BaseException:
             # ANY send-side failure (port closed, unpicklable args, frame
             # too large) surfaces synchronously — reclaim the pending slot
@@ -239,6 +251,23 @@ class NetRuntime:
                         kwargs: Dict[str, Any]) -> None:
         """Run one decoded parcel on a pool worker; reply if a result is
         wanted.  Never raises — failures travel back as result frames."""
+        if _trace._enabled:
+            # adopt the sender's trace context: this span (and everything
+            # the action does) records the parcel as its parent, and the
+            # flow-finish here matches the sender's flow-start
+            tc = header.get("tc")
+            fid = tuple(tc) if tc else None
+            action = str(header.get("a", "?")).rsplit(".", 1)[-1]
+            with _trace.with_context(fid), \
+                    _trace.span(f"execute:{action}", "net", flow_in=fid,
+                                src=header.get("src", -1)):
+                self._execute_parcel_body(header, args, kwargs)
+        else:
+            self._execute_parcel_body(header, args, kwargs)
+
+    def _execute_parcel_body(self, header: Dict[str, Any],
+                             args: Tuple[Any, ...],
+                             kwargs: Dict[str, Any]) -> None:
         try:
             target = header.get("g")
             obj = self._resolve_target(tuple(target) if target else None)

@@ -43,9 +43,11 @@ import pickle
 import socket
 import struct
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import counters as _counters
+from repro.obs import trace as _trace
 
 try:  # msgpack headers when available (smaller + faster), pickle otherwise
     import msgpack as _msgpack
@@ -261,12 +263,16 @@ class Connection:
                     return
                 chunks = self._sendq.popleft()
             try:
+                t0 = time.perf_counter() if _trace._enabled else 0.0
                 n = 0
                 for c in chunks:
                     self.sock.sendall(c)
                     n += len(c) if isinstance(c, (bytes, bytearray)) else c.nbytes
                 self.c_parcels_sent.increment()
                 self.c_bytes_sent.increment(n)
+                if _trace._enabled:
+                    _trace.complete("wire/send", "net", t0,
+                                    bytes=n, peer=self.peer_id)
             except OSError:
                 self._shutdown()
                 return
@@ -281,6 +287,9 @@ class Connection:
                 return
             self.c_parcels_recv.increment()
             self.c_bytes_recv.increment(4 + frame.nbytes)
+            if _trace._enabled:
+                _trace.instant("wire/recv", "net",
+                               bytes=4 + frame.nbytes, peer=self.peer_id)
             try:
                 header, _rest = decode_frame(frame)
                 self._on_frame(header, frame, self)

@@ -91,6 +91,11 @@ def _counters_query(rt: NetRuntime, pattern: str):
 
 
 @_parcel.action
+def _counters_stats(rt: NetRuntime, pattern: str):
+    return _counters.default().snapshot_stats(pattern)
+
+
+@_parcel.action
 def _echo(rt: NetRuntime, value: Any) -> Any:
     """Round-trip probe (latency benchmarks, liveness checks)."""
     return value
@@ -285,6 +290,18 @@ def query_counters(locality: Union[int, Locality], pattern: str = "*",
     if lid == net.locality:
         return _counters.default().query(pattern)
     return run_on(lid, _counters_query, pattern).get(timeout=timeout)
+
+
+def query_counter_stats(locality: Union[int, Locality], pattern: str = "*",
+                        timeout: float = 60.0):
+    """Full per-counter statistics from a remote locality: timers and
+    histograms keep mean/max/p50/p95/p99 instead of collapsing to one
+    scalar — what ``--print-counters`` and the fleet sampler report."""
+    net = require()
+    lid = _locality_id(locality)
+    if lid == net.locality:
+        return _counters.default().snapshot_stats(pattern)
+    return run_on(lid, _counters_stats, pattern).get(timeout=timeout)
 
 
 def fetch(target: _Target, timeout: float = 120.0) -> Any:

@@ -1,0 +1,27 @@
+"""repro.obs — APEX-style observability for the distributed runtime.
+
+Three pillars (see DESIGN.md §10):
+
+- :mod:`repro.obs.trace`   — per-thread ring-buffer task/parcel tracer,
+  off by default, near-zero disabled cost;
+- :mod:`repro.obs.export`  — fleet trace collection over the parcelport,
+  clock-corrected, merged into one Perfetto-loadable Chrome trace;
+- :mod:`repro.obs.sampler` — counter time-series (histories, rates) and
+  the ``--print-counters`` fleet report.
+
+Only :mod:`trace` is imported eagerly: it is a leaf the core runtime
+instruments, so this package must never pull in the net tier at import
+time (export/sampler load on first attribute access).
+"""
+
+from repro.obs import trace  # noqa: F401 — the leaf recorder
+
+__all__ = ["trace", "export", "sampler"]
+
+
+def __getattr__(name):
+    if name in ("export", "sampler"):
+        import importlib
+
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,181 @@
+"""Fleet counter sampler — scalar counters become time series.
+
+The paper's §2.4 adaptivity story needs *history*: a cumulative counter
+read once says "1.2M tasks executed", read on a cadence it says "tasks/s,
+and it dipped 40% when locality 2 started migrating".  The sampler runs on
+locality 0, snapshots every locality's counters over the parcelport
+(``net.query_counters`` — the same AGAS-published names the rest of the
+runtime uses), and keeps a fixed-depth ring of ``(t, value)`` points per
+``(locality, counter)``:
+
+- ``rate(loc, name)`` — positive-delta rate over the retained window.
+  Counter *resets* (process restart, ``reset_all``) appear as negative
+  deltas; those samples contribute the post-reset value instead of being
+  summed as a huge negative, so rates stay truthful across restarts.
+- ``series(loc, name)`` — the raw retained points, for plotting.
+
+The loop is a daemon thread (in-process observer, not a transport — the
+parcelport does the remote reads), started with :meth:`FleetSampler.start`
+and stopped either explicitly or by garbage collection of the runtime.
+``sample_once()`` is public so tests and the ``--print-counters`` report
+can drive sampling synchronously without a thread.
+"""
+
+from __future__ import annotations
+
+import collections
+import fnmatch
+import threading
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.core import counters as _counters
+
+
+class FleetSampler:
+    """Periodic counter snapshots across all localities, bounded history."""
+
+    def __init__(self, pattern: str = "*", interval: float = 1.0,
+                 depth: int = 240, net=None,
+                 registry: Optional[_counters.CounterRegistry] = None):
+        self.pattern = pattern
+        self.interval = interval
+        self.depth = depth
+        self.net = net
+        self.registry = registry or _counters.default()
+        # (locality, counter name) → ring of (perf_counter, value)
+        self._histories: Dict[Tuple[int, str],
+                              Deque[Tuple[float, float]]] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.samples_taken = 0
+        self.sample_errors = 0
+
+    # ------------------------------------------------------------ sampling
+    def _localities(self) -> List[int]:
+        if self.net is None:
+            return [0]
+        return list(range(self.net.n_localities))
+
+    def _snapshot(self, loc: int) -> List[Tuple[str, float]]:
+        if self.net is None or loc == self.net.locality:
+            return self.registry.query(self.pattern)
+        from repro.net import remote as _remote
+
+        return _remote.query_counters(loc, self.pattern,
+                                      timeout=max(30.0, self.interval * 4))
+
+    def sample_once(self) -> int:
+        """One sweep over every locality; returns points recorded.  A
+        locality that fails to answer (mid-shutdown) is skipped, not fatal —
+        the flight recorder outlives individual crashes."""
+        now = time.perf_counter()
+        points = 0
+        for loc in self._localities():
+            try:
+                pairs = self._snapshot(loc)
+            except Exception:  # noqa: BLE001 — peer down mid-sample
+                self.sample_errors += 1
+                continue
+            with self._lock:
+                for name, value in pairs:
+                    ring = self._histories.get((loc, name))
+                    if ring is None:
+                        ring = collections.deque(maxlen=self.depth)
+                        self._histories[(loc, name)] = ring
+                    ring.append((now, float(value)))
+                    points += 1
+        self.samples_taken += 1
+        return points
+
+    # ----------------------------------------------------------- the loop
+    def start(self) -> "FleetSampler":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="repro-obs-sampler")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=max(5.0, self.interval * 2))
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            self.sample_once()
+
+    # ------------------------------------------------------------- queries
+    def series(self, locality: int, name: str) -> List[Tuple[float, float]]:
+        with self._lock:
+            ring = self._histories.get((locality, name))
+            return list(ring) if ring else []
+
+    def keys(self) -> List[Tuple[int, str]]:
+        with self._lock:
+            return sorted(self._histories)
+
+    def rate(self, locality: int, name: str) -> float:
+        """Per-second rate of a cumulative counter over the retained window.
+
+        Sums positive inter-sample deltas; a negative delta means the
+        counter was reset between samples, so that interval contributes the
+        post-reset value (everything counted since the reset) rather than
+        poisoning the sum."""
+        pts = self.series(locality, name)
+        if len(pts) < 2:
+            return 0.0
+        span = pts[-1][0] - pts[0][0]
+        if span <= 0.0:
+            return 0.0
+        total = 0.0
+        for (_, v0), (_, v1) in zip(pts, pts[1:]):
+            d = v1 - v0
+            total += d if d >= 0.0 else v1
+        return total / span
+
+    def rates(self, pattern: Optional[str] = None) -> Dict[Tuple[int, str], float]:
+        pat = pattern or "*"
+        return {(loc, name): self.rate(loc, name)
+                for loc, name in self.keys()
+                if fnmatch.fnmatch(name, pat)}
+
+
+# ------------------------------------------------------- end-of-run report
+def print_counter_report(pattern: str = "*", net=None,
+                         sampler: Optional[FleetSampler] = None,
+                         file=None) -> List[str]:
+    """HPX ``--hpx:print-counter`` parity: dump every matching counter on
+    every locality — value, rate (when a sampler retained history), and
+    p50/p95/p99 for timers/histograms.  Returns the printed lines."""
+    localities = [0] if net is None else list(range(net.n_localities))
+    lines = [f"{'counter':<58} {'value':>12} {'rate/s':>10} "
+             f"{'p50':>9} {'p95':>9} {'p99':>9}"]
+    for loc in localities:
+        if net is None or loc == net.locality:
+            stats = _counters.default().snapshot_stats(pattern)
+        else:
+            from repro.net import remote as _remote
+
+            try:
+                stats = _remote.query_counter_stats(loc, pattern)
+            except Exception:  # noqa: BLE001 — locality gone
+                lines.append(f"locality#{loc}: <unreachable>")
+                continue
+        for name, st in sorted(stats.items()):
+            value = st.get("value", st.get("count", 0.0))
+            rate = sampler.rate(loc, name) if sampler is not None else None
+            cells = [f"L{loc} {name:<55.55}"[:58].ljust(58),
+                     f"{value:>12.4g}",
+                     f"{rate:>10.4g}" if rate is not None else f"{'-':>10}"]
+            for q in ("p50", "p95", "p99"):
+                cells.append(f"{st[q] * 1e3:>8.3g}m" if q in st
+                             else f"{'-':>9}")
+            lines.append(" ".join(cells))
+    for ln in lines:
+        print(ln, file=file)
+    return lines

@@ -55,6 +55,7 @@ from repro.core import executor as _executor
 from repro.core.future import Channel, Future, Promise
 from repro.core.scheduler import PRIORITY_HIGH, current_runtime
 from repro.models.model import Model
+from repro.obs import trace as _trace
 
 _NEG = -1e30
 
@@ -295,9 +296,14 @@ class Engine:
         self.c_sub = reg.counter(f"/serve{{{n}}}/requests/submitted")
         self.c_done = reg.counter(f"/serve{{{n}}}/requests/completed")
         self.c_tok = reg.counter(f"/serve{{{n}}}/tokens/generated")
-        self.t_step = reg.timer(f"/serve{{{n}}}/step/duration")
-        self.t_latency = reg.timer(f"/serve{{{n}}}/request/latency")
-        self.t_first = reg.timer(f"/serve{{{n}}}/request/first_token")
+        # percentile timers: p50/p95/p99 straight off the counter API —
+        # "why is p99 bad" without needing a trace at all
+        self.t_step = reg.timer(f"/serve{{{n}}}/step/duration",
+                                percentiles=True)
+        self.t_latency = reg.timer(f"/serve{{{n}}}/request/latency",
+                                   percentiles=True)
+        self.t_first = reg.timer(f"/serve{{{n}}}/request/first_token",
+                                 percentiles=True)
 
     # --------------------------------------------------------------- decode
     def _decode_fn(self, params, cache, token, key, temp, topk, topp):
@@ -332,6 +338,9 @@ class Engine:
                        submit_t=time.perf_counter())
         self._queue.put(req)
         self.c_sub.increment()
+        if _trace._enabled:  # request lifetime as one async span
+            _trace.async_begin("request", rid, "serve",
+                               prompt_len=len(req.prompt))
         self._ensure_running()
         return req.promise.future()
 
@@ -363,6 +372,13 @@ class Engine:
 
     def _run_prefill(self, req: _Request):
         """Compute the request's KV cache + first token (any thread)."""
+        if _trace._enabled:
+            with _trace.span("prefill", "serve", rid=req.rid,
+                             prompt_len=len(req.prompt)):
+                return self._run_prefill_body(req)
+        return self._run_prefill_body(req)
+
+    def _run_prefill_body(self, req: _Request):
         prompt = req.prompt
         if self.model.cfg.family == "vlm" and len(prompt) < self.model.cfg.n_patches:
             # patches occupy the first n_patches positions; a shorter prompt
@@ -397,6 +413,8 @@ class Engine:
             if req.stream is not None:
                 req.stream.close()
             self.c_done.increment()  # terminated: keep load() = in-flight
+            if _trace._enabled:
+                _trace.async_end("request", req.rid, "serve", failed=True)
             req.promise.set_exception(e)
             self._work_event.set()
             return
@@ -432,6 +450,9 @@ class Engine:
     def _emit(self, req: _Request, tok: int) -> None:
         req.generated.append(tok)
         self.c_tok.increment()
+        if _trace._enabled:  # inter-token latency = gaps between these
+            _trace.async_instant("token", req.rid, "serve",
+                                 n=len(req.generated))
         if not req.first_token_t:
             req.first_token_t = time.perf_counter()
             self.t_first.add(req.first_token_t - req.submit_t)
@@ -445,6 +466,9 @@ class Engine:
         self._temp[i], self._topk[i], self._topp[i] = 0.0, 0, 1.0
         self.c_done.increment()
         self.t_latency.add(time.perf_counter() - req.submit_t)
+        if _trace._enabled:
+            _trace.async_end("request", req.rid, "serve",
+                             tokens=len(req.generated))
         if req.stream is not None:
             req.stream.close()
         req.promise.set_value(req.generated)
@@ -561,7 +585,8 @@ class Engine:
             self._loop_exec.post(self._step)
             return
 
-        with self.t_step.time():
+        with _trace.span("decode_step", "serve", batch=len(active)), \
+                self.t_step.time():
             key = jax.random.fold_in(self._key, self._step_count)
             nxt, new_cache = self._decode(
                 self.params, self.backend.device_cache(),

@@ -38,6 +38,7 @@ from repro.core import scheduler as _sched
 from repro.core.future import Future
 from repro.data.pipeline import DataConfig, Prefetcher
 from repro.models.model import Model
+from repro.obs import trace as _trace
 from repro.optim import adamw
 from repro.train import step as step_mod
 
@@ -81,7 +82,8 @@ class Trainer:
             {"params": self.params, "opt": self.opt_state}, replace=True)
 
         reg = _counters.default()
-        self.t_step = reg.timer("/train{loop#0}/step/duration")
+        self.t_step = reg.timer("/train{loop#0}/step/duration",
+                                percentiles=True)
         self.c_steps = reg.counter("/train{loop#0}/steps/cumulative")
         self.c_straggler = reg.counter("/train{loop#0}/stragglers/detected")
         self.g_loss = reg.gauge("/train{loop#0}/loss/instantaneous")
@@ -95,8 +97,9 @@ class Trainer:
             i = self.step_num
             batch = self.prefetcher.get(i).get()  # future → host batch
             t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self._step_fn(
-                self.params, self.opt_state, batch)
+            with _trace.span("train/step", "train", step=i):
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch)
             if (i + 1) % self.tcfg.log_every == 0 or i + 1 == steps:
                 loss = float(metrics["loss"])  # sync point (only here)
                 dt = time.perf_counter() - t0

@@ -1,0 +1,199 @@
+"""Histogram percentile math (vs a numpy oracle), percentile timers, the
+unified AGAS publish path, and the fleet sampler (repro.obs.sampler)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.counters import CounterRegistry, Histogram, TimerCounter
+from repro.obs.sampler import FleetSampler, print_counter_report
+
+
+# ---------------------------------------------------------------- histogram
+@settings(max_examples=60)
+@given(st.lists(st.floats(min_value=1e-7, max_value=1e5,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=300),
+       st.sampled_from([0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0]))
+def test_histogram_quantile_vs_numpy_oracle(samples, q):
+    """Log-bucketing guarantees RELATIVE error ≤ growth**0.5 against the
+    nearest-rank quantile of the raw samples (positive values)."""
+    h = Histogram("/h", growth=1.08)
+    for v in samples:
+        h.add(v)
+    oracle = float(np.sort(np.asarray(samples))[
+        int(math.floor(q * (len(samples) - 1)))])
+    got = h.quantile(q)
+    tol = 1.08 ** 0.5 * 1.0001  # half-bucket geometric error + fp slack
+    assert oracle / tol <= got <= oracle * tol
+
+
+def test_histogram_stats_and_extremes():
+    h = Histogram("/h")
+    for v in (0.001, 0.01, 0.1, 1.0):
+        h.add(v)
+    s = h.stats()
+    assert s["count"] == 4.0
+    assert s["min"] == pytest.approx(0.001)
+    assert s["max"] == pytest.approx(1.0)
+    assert s["mean"] == pytest.approx(sum((0.001, 0.01, 0.1, 1.0)) / 4)
+    # quantiles are clamped into [min, max]
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_histogram_nonpositive_underflow_bucket():
+    h = Histogram("/h")
+    for v in (-1.0, 0.0, 0.0, 5.0):
+        h.add(v)
+    assert h.quantile(0.0) == -1.0  # negative min reported as-is
+    assert h.quantile(1.0) == pytest.approx(5.0, rel=0.05)
+
+
+def test_histogram_reset_and_empty():
+    h = Histogram("/h")
+    assert h.quantile(0.5) == 0.0 and h.stats()["count"] == 0.0
+    h.add(3.0)
+    h.reset()
+    assert h.stats()["count"] == 0.0
+
+
+def test_timer_percentiles_opt_in():
+    plain = TimerCounter("/plain")
+    plain.add(0.1)
+    assert "p99" not in plain.stats()
+
+    t = TimerCounter("/t", percentiles=True)
+    for ms in range(1, 101):
+        t.add(ms / 1000.0)
+    s = t.stats()
+    assert s["count"] == 100.0
+    assert s["p50"] == pytest.approx(0.050, rel=0.06)
+    assert s["p99"] == pytest.approx(0.099, rel=0.06)
+    t.reset()
+    assert t.stats()["p50"] == 0.0
+
+
+def test_registry_timer_percentile_upgrade():
+    reg = CounterRegistry()
+    t = reg.timer("/up")  # created plain
+    assert reg.timer("/up", percentiles=True) is t  # upgraded in place
+    t.add(0.25)
+    assert t.stats()["p50"] == pytest.approx(0.25, rel=0.05)
+
+
+def test_registry_snapshot_stats_mixed_kinds():
+    reg = CounterRegistry()
+    reg.counter("/c").increment(3)
+    reg.histogram("/h").add(2.0)
+    reg.timer("/t", percentiles=True).add(0.5)
+    st_ = reg.snapshot_stats("/*")
+    assert st_["/c"] == {"value": 3.0}
+    assert st_["/h"]["count"] == 1.0 and "p95" in st_["/h"]
+    assert "p99" in st_["/t"]
+
+
+# ------------------------------------------------- unified AGAS publish path
+def test_helpers_publish_into_agas(rt):
+    """The satellite fix: get-or-create helpers must publish, exactly like
+    register() — counters are visible via AGAS without extra ceremony."""
+    from repro.core import agas, counters
+
+    c = counters.default().counter("/obs/test/helper/published")
+    c.increment(2)
+    assert agas.default().resolve(
+        "/counters/obs/test/helper/published") is c
+    g = counters.default().gauge("/obs/test/helper/gauge")
+    assert agas.default().resolve("/counters/obs/test/helper/gauge") is g
+    h = counters.default().histogram("/obs/test/helper/hist")
+    assert agas.default().resolve("/counters/obs/test/helper/hist") is h
+
+
+def test_bare_registry_stays_out_of_agas(rt):
+    """Unit-test registries must not leak into the global namespace."""
+    from repro.core import agas
+
+    reg = CounterRegistry()
+    reg.counter("/obs/test/bare/counter")
+    assert not agas.default().contains("/counters/obs/test/bare/counter")
+
+
+# ------------------------------------------------------------ fleet sampler
+def test_sampler_series_and_rate():
+    reg = CounterRegistry()
+    c = reg.counter("/work/done")
+    s = FleetSampler(pattern="/work/*", registry=reg)
+    for k in range(1, 5):
+        c.increment(10)
+        s.sample_once()
+    pts = s.series(0, "/work/done")
+    assert len(pts) == 4
+    assert [v for _, v in pts] == [10.0, 20.0, 30.0, 40.0]
+    span = pts[-1][0] - pts[0][0]
+    assert s.rate(0, "/work/done") == pytest.approx(30.0 / span)
+
+
+def test_sampler_rate_across_counter_reset():
+    """A reset (negative delta) contributes the post-reset value, not a
+    huge negative — the rate stays truthful across restarts."""
+    reg = CounterRegistry()
+    c = reg.counter("/work/done")
+    s = FleetSampler(pattern="/work/*", registry=reg)
+    c.increment(100)
+    s.sample_once()          # 100
+    c.increment(50)
+    s.sample_once()          # 150
+    c.reset()
+    c.increment(20)
+    s.sample_once()          # 20  ← reset between samples
+    pts = s.series(0, "/work/done")
+    span = pts[-1][0] - pts[0][0]
+    # counted work: +50 (two increments) then 20 after the reset
+    assert s.rate(0, "/work/done") == pytest.approx((50 + 20) / span)
+
+
+def test_sampler_bounded_depth():
+    reg = CounterRegistry()
+    c = reg.counter("/w")
+    s = FleetSampler(pattern="/w", depth=5, registry=reg)
+    for _ in range(12):
+        c.increment()
+        s.sample_once()
+    assert len(s.series(0, "/w")) == 5  # fixed-depth ring
+
+
+def test_sampler_thread_start_stop():
+    reg = CounterRegistry()
+    reg.counter("/w").increment()
+    s = FleetSampler(pattern="/w", interval=0.01, registry=reg).start()
+    try:
+        import time
+
+        deadline = time.time() + 5.0
+        while s.samples_taken < 3 and time.time() < deadline:
+            time.sleep(0.01)
+    finally:
+        s.stop()
+    assert s.samples_taken >= 3
+
+
+def test_print_counter_report_lines():
+    reg = CounterRegistry()
+    # exercise through the default-registry path by passing a sampler over
+    # a private registry (report reads the default registry only for the
+    # local fallback, so feed it via sampler=None + monkey registry)
+    import io
+
+    from repro.core import counters as counters_mod
+
+    c = counters_mod.default().counter("/obs/report/demo")
+    c.increment(7)
+    t = counters_mod.default().timer("/obs/report/lat", percentiles=True)
+    t.add(0.002)
+    buf = io.StringIO()
+    lines = print_counter_report("/obs/report/*", file=buf)
+    assert any("/obs/report/demo" in ln for ln in lines)
+    assert any("/obs/report/lat" in ln for ln in lines)
+    assert buf.getvalue().count("\n") == len(lines)
