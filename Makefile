@@ -5,7 +5,7 @@
 PY ?= python
 
 .PHONY: verify test bench bench-serve bench-algorithms bench-net \
-	bench-container bench-obs smoke
+	bench-net-check bench-container bench-obs smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -24,6 +24,9 @@ bench-algorithms:
 
 bench-net:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_net
+
+bench-net-check:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_net --check
 
 bench-container:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_container

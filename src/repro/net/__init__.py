@@ -29,7 +29,7 @@ from repro.net.locality import (
     require,
     running,
 )
-from repro.net.parcelport import PortClosed
+from repro.net.parcelport import NetConfig, PortClosed
 from repro.net.remote import (
     apply_remote,
     describe,
@@ -42,7 +42,7 @@ from repro.net.remote import (
 )
 
 __all__ = [
-    "ROOT", "Locality", "NetRuntime", "UnknownGid", "PortClosed",
+    "ROOT", "Locality", "NetConfig", "NetRuntime", "UnknownGid", "PortClosed",
     "bootstrap", "current", "require", "running",
     "apply_remote", "describe", "fetch", "migrate_remote", "owner_of",
     "query_counter_stats", "query_counters", "run_on",

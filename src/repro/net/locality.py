@@ -12,22 +12,27 @@ frame switch for worker↔worker traffic (hub-and-spoke, the LCI study's
 
 Topology::
 
-        locality#1 ──┐
-        locality#2 ──┤── locality#0 (root: AGAS table + frame switch)
-        locality#3 ──┘
-         each: NetRuntime + AMT scheduler + parcelport connection
+        locality#1 ══╗
+        locality#2 ══╣══ locality#0 (root: AGAS table + frame switch)
+        locality#3 ══╝
+         each ══: 1 priority lane + N bulk lanes (NetConfig.stripes)
+         each process: NetRuntime + AMT scheduler + parcelport Port
 
 Every process runs the full single-process stack (scheduler pools,
 executors, AGAS, counters) plus one :class:`NetRuntime`:
 
 - **send side** — ``send_parcel(dst, action, target, args)`` allocates a
   sequence number, parks a :class:`~repro.core.future.Promise` in the
-  pending table and enqueues a frame; the returned Future is completed by
-  the matching result frame (the remote-completion path).
-- **receive side** — the parcelport's receive pump posts parcel execution
-  into the scheduler's "io" pool (a blocked action helps along, so nested
-  remote calls cannot deadlock the pool) and completes pending promises
-  inline for result frames.
+  pending table and hands the frame to the peer's
+  :class:`~repro.net.parcelport.Channel`, which picks the protocol tier
+  (eager+coalesced vs rendezvous+striped) and applies backpressure; the
+  returned Future is completed by the matching result frame.
+- **receive side** — the port's progress thread delivers parsed frames;
+  parcel decode+execution is posted into the scheduler's "io" pool (a
+  blocked action helps along, so nested remote calls cannot deadlock the
+  pool), result frames complete pending promises inline, and each
+  executed parcel returns its CREDIT to the sender (the backpressure
+  ack).
 - **integration** — ``bootstrap`` installs the AGAS hook (registrations
   publish to the root table) and the core parcel remote-route, so
   ``repro.core.parcel.apply`` transparently crosses process boundaries.
@@ -40,7 +45,7 @@ import os
 import socket
 import threading
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import agas as _agas
 from repro.core import counters as _counters
@@ -86,13 +91,40 @@ def _gid_key(gid: _agas.GID) -> _GidKey:
     return (gid.locality, gid.seq)
 
 
+class _RuntimeHooks(_pp.PortHooks):
+    """The :class:`NetRuntime` side of the port's callback surface."""
+
+    __slots__ = ("net",)
+
+    def __init__(self, net: "NetRuntime"):
+        self.net = net
+
+    def deliver(self, fr: _pp.Frame, channel: _pp.Channel) -> None:
+        self.net._on_frame(fr, channel)
+
+    def route(self, dst: int) -> _pp.Channel:
+        return self.net._route_to(dst)
+
+    def forward_failed(self, fr: _pp.Frame) -> None:
+        self.net._forward_failed(fr)
+
+    def on_forwarded(self) -> None:
+        self.net.c_forwarded.increment()
+
+    def on_close(self, channel: _pp.Channel) -> None:
+        self.net._on_conn_close(channel)
+
+
 class NetRuntime:
     """Per-process endpoint of the multi-locality runtime."""
 
-    def __init__(self, locality: int, n_localities: int):
+    def __init__(self, locality: int, n_localities: int,
+                 config: Optional[_pp.NetConfig] = None):
         self.locality = locality
         self.n_localities = n_localities
-        self._conns: Dict[int, _pp.Connection] = {}
+        self.config = config or _pp.NetConfig.from_env()
+        self._port = _pp.Port(locality, _RuntimeHooks(self), self.config)
+        self._conns: Dict[int, _pp.Channel] = {}
         # seq → (promise, destination locality): the dst lets a dead-peer
         # notification fail exactly the calls that can no longer complete
         self._pending: Dict[int, Tuple[Promise, int]] = {}
@@ -172,16 +204,16 @@ class NetRuntime:
             else:
                 self._route_to(dst).send(header, (args, kwargs))
         except BaseException:
-            # ANY send-side failure (port closed, unpicklable args, frame
-            # too large) surfaces synchronously — reclaim the pending slot
-            # or it leaks for the runtime's lifetime
+            # ANY send-side failure (port closed, unpicklable args,
+            # backpressure block timeout) surfaces synchronously — reclaim
+            # the pending slot or it leaks for the runtime's lifetime
             if seq:
                 with self._pending_lock:
                     self._pending.pop(seq, None)
             raise
         return promise.future() if promise else None
 
-    def _route_to(self, dst: int) -> _pp.Connection:
+    def _route_to(self, dst: int) -> _pp.Channel:
         conn = self._conns.get(dst)
         if conn is None:
             conn = self._conns.get(ROOT)  # workers reach peers via the root
@@ -190,31 +222,16 @@ class NetRuntime:
         return conn
 
     # --------------------------------------------------------- receive side
-    def _on_frame(self, header: Dict[str, Any], frame: memoryview,
-                  conn: _pp.Connection) -> None:
-        """Receive-pump entry: forward, execute, or complete."""
-        t, dst = header["t"], header.get("dst", self.locality)
-        if dst != self.locality and t in (_pp.PARCEL, _pp.RESULT):
-            # root as frame switch: worker↔worker traffic hops through here
-            self.c_forwarded.increment()
-            try:
-                self._route_to(dst).send_chunks(_pp.forward_chunks(frame))
-            except _pp.PortClosed:
-                if t == _pp.PARCEL and header.get("seq"):
-                    self._send_result(header, None,
-                                      _pp.PortClosed(f"locality#{dst} is down"))
-            return
+    def _on_frame(self, fr: _pp.Frame, channel: _pp.Channel) -> None:
+        """Progress-thread delivery of one application frame addressed to
+        this locality (the port already forwarded, unpacked containers,
+        and ran the transport protocols)."""
+        header = fr.header
+        t = header["t"]
         if t == _pp.PARCEL:
-            try:
-                payload = _pp.decode_payload(header, _pp.frame_rest(frame))
-            except BaseException as e:  # noqa: BLE001 — tell the sender
-                if header.get("seq"):
-                    self._send_result(header, None, RuntimeError(
-                        f"locality#{self.locality} could not decode parcel "
-                        f"args for action {header.get('a')!r}: {e!r}"))
-                return
-            args, kwargs = payload if payload is not None else ((), {})
-            self._exec.post(self._execute_parcel, header, args, kwargs)
+            # decode + execute on the io pool: unpickling user payloads
+            # must not stall the progress loop
+            self._exec.post(self._handle_parcel, fr)
         elif t == _pp.RESULT:
             # pop BEFORE decoding: a payload that fails to unpickle (e.g.
             # an exception class not importable here) must fail the caller
@@ -225,7 +242,7 @@ class NetRuntime:
                 return
             promise = entry[0]
             try:
-                payload = _pp.decode_payload(header, _pp.frame_rest(frame))
+                payload = _pp.decode_payload(header, fr.rest)
             except BaseException as e:  # noqa: BLE001
                 promise.set_exception(RuntimeError(
                     f"result from locality#{header.get('src')} could not "
@@ -237,6 +254,52 @@ class NetRuntime:
                 promise.set_exception(payload)
         elif t == _pp.BYE:
             self._stop.set()
+        elif t == _pp.DOWN:
+            # the root's dead-peer broadcast: in-flight calls to that
+            # locality can never complete, nor can rendezvous with it
+            peer = header.get("peer")
+            if peer is not None:
+                self._port.drop_transfers(peer)
+                self._fail_pending_for(peer, f"locality#{peer} went away")
+
+    def _handle_parcel(self, fr: _pp.Frame) -> None:
+        """io-pool side of a received parcel: decode, run, ack credit."""
+        header = fr.header
+        try:
+            payload = _pp.decode_payload(header, fr.rest)
+        except BaseException as e:  # noqa: BLE001 — tell the sender
+            if header.get("seq"):
+                self._send_result(header, None, RuntimeError(
+                    f"locality#{self.locality} could not decode parcel "
+                    f"args for action {header.get('a')!r}: {e!r}"))
+            self._return_credit(header, fr.credit_bytes)
+            return
+        args, kwargs = payload if payload is not None else ((), {})
+        try:
+            self._execute_parcel(header, args, kwargs)
+        finally:
+            # end-to-end flow control: budget bytes flow back only after
+            # the parcel *executed* — queue depth here pushes back there
+            self._return_credit(header, fr.credit_bytes)
+
+    def _return_credit(self, header: Dict[str, Any], nbytes: int) -> None:
+        src = header.get("src", self.locality)
+        if nbytes <= 0 or src == self.locality:
+            return  # rendezvous-assembled parcels never consumed credit
+        try:
+            self._route_to(src).send_control(
+                {"t": _pp.CREDIT, "src": self.locality, "dst": src,
+                 "n": nbytes})
+        except _pp.PortClosed:
+            pass  # sender is gone; its ledger died with it
+
+    def _forward_failed(self, fr: _pp.Frame) -> None:
+        """Root switch could not forward ``fr`` (destination is down):
+        bounce an error result to every parcel the frame carried."""
+        for h in _pp.failed_parcel_headers(fr):
+            if h.get("seq"):
+                self._send_result(h, None, _pp.PortClosed(
+                    f"locality#{h.get('dst')} is down"))
 
     def _resolve_target(self, target: Optional[_GidKey]) -> Any:
         if target is None:
@@ -302,12 +365,16 @@ class NetRuntime:
     def _send_result(self, req_header: Dict[str, Any], value: Any,
                      exc: Optional[BaseException]) -> None:
         reply = {"t": _pp.RESULT, "src": self.locality,
-                 "dst": req_header["src"], "seq": req_header["seq"]}
-        chunks = _pp.encode_result_payload(reply, value, exc)
+                 "dst": req_header["src"], "seq": req_header["seq"],
+                 "ok": exc is None}
         try:
             if req_header["src"] == self.locality:
                 raise _pp.PortClosed("result loop")  # unreachable by design
-            self._route_to(req_header["src"]).send_chunks(chunks)
+            # the channel picks the tier: big results (fetch of a large
+            # array) take the rendezvous/striped path like any bulk parcel,
+            # and unpicklable outcomes degrade to a picklable RuntimeError
+            self._route_to(req_header["src"]).send(
+                reply, value if exc is None else exc)
         except _pp.PortClosed:
             pass  # requester is gone; nothing to tell
 
@@ -434,14 +501,16 @@ class NetRuntime:
                                    "dst": dst, "seq": 0})
                     except _pp.PortClosed:
                         pass
+            # the BYE (and anything coalesced ahead of it) must hit the
+            # wire before the workers are reaped
+            self._port.flush(timeout=min(timeout, 10.0))
             for proc in self._procs:
                 proc.join(timeout=timeout)
             for proc in self._procs:
                 if proc.is_alive():
                     proc.terminate()
                     proc.join(timeout=5.0)
-        for conn in list(self._conns.values()):
-            conn.close()
+        self._port.close()
         if self._hook_installed:
             _agas.default().remove_hook(self._agas_hook)
             self._hook_installed = False
@@ -468,16 +537,25 @@ class NetRuntime:
             except Exception:  # noqa: BLE001 — already completed
                 pass
 
-    def _on_conn_close(self, conn: _pp.Connection) -> None:
+    def _on_conn_close(self, conn: _pp.Channel) -> None:
         if not self.is_root() and conn.peer_id == ROOT:
             # root went away: nothing in flight can ever complete
             self._fail_pending_for(None, "lost connection to the root")
             self._stop.set()
         elif self.is_root():
             # a worker died: fail fast the calls routed to it (new sends
-            # already raise PortClosed synchronously)
-            self._fail_pending_for(conn.peer_id,
-                                   f"locality#{conn.peer_id} went away")
+            # already raise PortClosed synchronously) and broadcast DOWN so
+            # the other workers fail their worker↔worker calls too
+            dead = conn.peer_id
+            self._fail_pending_for(dead, f"locality#{dead} went away")
+            for dst, other in list(self._conns.items()):
+                if other is conn or other.closed:
+                    continue
+                try:
+                    other.send({"t": _pp.DOWN, "src": self.locality,
+                                "dst": dst, "seq": 0, "peer": dead})
+                except _pp.PortClosed:
+                    pass
 
 
 # ------------------------------------------------------------ current() api
@@ -515,14 +593,18 @@ def require() -> NetRuntime:
 # ---------------------------------------------------------------- bootstrap
 def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
               worker_pools: Optional[Dict[str, int]] = None,
-              timeout: float = 120.0) -> NetRuntime:
+              timeout: float = 120.0,
+              config: Optional[_pp.NetConfig] = None) -> NetRuntime:
     """Bring up an ``n_localities``-process runtime; the caller becomes
     locality 0 (AGAS root).  Returns the root :class:`NetRuntime`.
 
     ``pools`` partitions the *root* scheduler (``core.init`` semantics),
-    ``worker_pools`` every worker's.  Workers are spawned (never forked)
-    so no live thread or lock state is duplicated; each worker imports the
-    stack fresh, pins its AGAS locality id, and dials home.
+    ``worker_pools`` every worker's; ``config`` tunes the transport tier
+    (defaults to :meth:`NetConfig.from_env`) and is shipped to every
+    worker so both ends agree on thresholds and lane counts.  Workers are
+    spawned (never forked) so no live thread or lock state is duplicated;
+    each worker imports the stack fresh, pins its AGAS locality id, and
+    dials home with one socket per lane.
     """
     import multiprocessing as _mp
 
@@ -531,28 +613,31 @@ def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
     if n_localities < 1:
         raise ValueError("need at least one locality")
     core.init(pools=pools)
-    net = NetRuntime(ROOT, n_localities)
+    net = NetRuntime(ROOT, n_localities, config=config)
     if n_localities == 1:  # degenerate but useful: uniform API, no workers
         net._install()
         return net
+    cfg = net.config
+    nlanes = 1 + max(0, cfg.stripes)
 
     listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     listener.bind(("127.0.0.1", 0))
-    listener.listen(n_localities)
+    listener.listen((n_localities - 1) * nlanes)
     listener.settimeout(timeout)
     port = listener.getsockname()[1]
 
     ctx = _mp.get_context("spawn")
     for lid in range(1, n_localities):
         proc = ctx.Process(target=_worker_main,
-                           args=(lid, n_localities, port, worker_pools),
+                           args=(lid, n_localities, port, worker_pools, cfg),
                            daemon=True, name=f"repro-locality-{lid}")
         proc.start()
         net._procs.append(proc)
 
+    half_open: Dict[int, Dict[int, socket.socket]] = {}
     try:
-        for _ in range(n_localities - 1):
+        for _ in range((n_localities - 1) * nlanes):
             sock, _addr = listener.accept()
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             sock.settimeout(timeout)  # bounded handshake read
@@ -560,14 +645,28 @@ def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
             header, _ = _pp.decode_frame(frame)
             if header["t"] != _pp.HELLO:
                 raise RuntimeError(f"expected HELLO, got {header['t']!r}")
-            peer = header["src"]
+            if header.get("nl", 1) != nlanes:
+                raise RuntimeError(
+                    f"lane-count mismatch: worker {header['src']} dialed "
+                    f"{header.get('nl')} lanes, root expects {nlanes}")
+            peer, lane = header["src"], header.get("lane", 0)
             sock.settimeout(None)
-            net._conns[peer] = _pp.Connection(sock, ROOT, peer, net._on_frame,
-                                              on_close=net._on_conn_close)
+            lanes = half_open.setdefault(peer, {})
+            lanes[lane] = sock
+            if len(lanes) == nlanes:
+                del half_open[peer]
+                net._conns[peer] = net._port.add_channel(
+                    peer, [lanes[i] for i in range(nlanes)])
     except BaseException as e:
         # ANY handshake failure (timeout, stray client sending garbage,
         # corrupt frame) must reap the already-spawned workers — they would
         # otherwise idle for the parent's lifetime
+        for lanes in half_open.values():
+            for s in lanes.values():
+                try:
+                    s.close()
+                except OSError:
+                    pass
         net.shutdown()
         if isinstance(e, (OSError, socket.timeout)):
             raise RuntimeError(
@@ -586,14 +685,15 @@ import contextlib
 @contextlib.contextmanager
 def running(n_localities: int, pools: Optional[Dict[str, int]] = None,
             worker_pools: Optional[Dict[str, int]] = None,
-            timeout: float = 120.0):
+            timeout: float = 120.0,
+            config: Optional[_pp.NetConfig] = None):
     """Leak-proof bootstrap: ``with net.running(3) as n: ...`` guarantees
     worker-process teardown even when the body raises — a failing
     multi-locality test cannot strand processes and poison later tests.
     (``bootstrap`` itself already reaps workers on handshake failure; this
     covers everything *after* a successful bootstrap.)"""
     net = bootstrap(n_localities, pools=pools, worker_pools=worker_pools,
-                    timeout=timeout)
+                    timeout=timeout, config=config)
     try:
         yield net
     finally:
@@ -601,7 +701,8 @@ def running(n_localities: int, pools: Optional[Dict[str, int]] = None,
 
 
 def _worker_main(locality_id: int, n_localities: int, port: int,
-                 pools: Optional[Dict[str, int]]) -> None:
+                 pools: Optional[Dict[str, int]],
+                 config: Optional[_pp.NetConfig] = None) -> None:
     """Entry point of a worker locality (runs in the spawned process)."""
     from repro.core import agas as agas_mod
 
@@ -609,17 +710,22 @@ def _worker_main(locality_id: int, n_localities: int, port: int,
     import repro.core as core
 
     core.init(pools=dict(pools) if pools else {"default": 2, "io": 1})
-    sock = socket.create_connection(("127.0.0.1", port), timeout=60)
-    sock.settimeout(None)  # connect timeout only — an idle wire is healthy
-    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    net = NetRuntime(locality_id, n_localities)
-    # HELLO must be the first frame on the wire: send it raw, before the
-    # Connection's pumps exist, so the root's handshake read can't race.
-    for chunk in _pp.encode_frame({"t": _pp.HELLO, "src": locality_id,
-                                   "dst": ROOT, "seq": 0}):
-        sock.sendall(chunk)
-    net._conns[ROOT] = _pp.Connection(sock, locality_id, ROOT, net._on_frame,
-                                      on_close=net._on_conn_close)
+    net = NetRuntime(locality_id, n_localities, config=config)
+    nlanes = 1 + max(0, net.config.stripes)
+    socks: List[socket.socket] = []
+    for lane in range(nlanes):
+        sock = socket.create_connection(("127.0.0.1", port), timeout=60)
+        sock.settimeout(None)  # connect timeout only — idle wire is healthy
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # HELLO must be the first frame on each socket: send it raw, before
+        # the port owns the socket, so the root's handshake read can't race;
+        # it also tells the root which lane slot this socket fills.
+        for chunk in _pp.encode_frame({"t": _pp.HELLO, "src": locality_id,
+                                       "dst": ROOT, "seq": 0, "lane": lane,
+                                       "nl": nlanes}):
+            sock.sendall(chunk)
+        socks.append(sock)
+    net._conns[ROOT] = net._port.add_channel(ROOT, socks)
     net._install()
     net._stop.wait()
     net.shutdown()

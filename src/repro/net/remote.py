@@ -31,6 +31,7 @@ intra-process placement moves; this is the inter-process tier above it.
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 from repro.core import agas as _agas
@@ -99,6 +100,17 @@ def _counters_stats(rt: NetRuntime, pattern: str):
 def _echo(rt: NetRuntime, value: Any) -> Any:
     """Round-trip probe (latency benchmarks, liveness checks)."""
     return value
+
+
+@_parcel.action
+def _slow_sink(rt: NetRuntime, value: Any, delay_s: float = 0.0) -> int:
+    """Deliberately slow consumer: holds its executed parcel for
+    ``delay_s`` before acking.  Because CREDIT is returned only after
+    execution, flooding this action keeps the sender's budget pinned —
+    the probe the backpressure tests and the flood benchmark drive."""
+    if delay_s > 0:
+        time.sleep(delay_s)
+    return len(value) if hasattr(value, "__len__") else 0
 
 
 @_parcel.action

@@ -103,6 +103,39 @@ def test_namedtuple_payload_survives_host_walk():
     np.testing.assert_array_equal(got.x, np.arange(4, dtype=np.float32))
 
 
+def test_to_host_is_identity_for_array_free_payloads():
+    """The host walk must not rebuild (let alone deep-copy) containers
+    holding no ``jax.Array`` leaves: every node comes back ``is`` the
+    input, so large numpy/dict/list payloads pay zero walk overhead."""
+    import collections
+
+    import jax  # noqa: F401 — the walk only runs once jax is imported
+
+    Rec = collections.namedtuple("Rec", ["a", "b"])
+    globals()["Rec"] = Rec
+    arr = np.arange(1 << 16, dtype=np.float32)
+    leaves = [arr, {"k": [arr, (1, "s")], "m": b"bytes"}, Rec(arr, [2, 3])]
+    for obj in leaves:
+        assert pp._to_host(obj) is obj
+    nested = {"outer": leaves, "t": tuple(leaves)}
+    out = pp._to_host(nested)
+    assert out is nested
+    assert out["outer"] is leaves and out["outer"][0] is arr
+
+
+def test_to_host_rebuilds_only_branches_holding_device_arrays():
+    import jax.numpy as jnp
+
+    arr = np.arange(8, dtype=np.float32)
+    clean = {"n": arr, "l": [1, 2]}
+    mixed = {"clean": clean, "dev": jnp.arange(4, dtype=jnp.float32)}
+    out = pp._to_host(mixed)
+    assert out is not mixed                       # device branch rebuilt
+    assert out["clean"] is clean                  # untouched branch shared
+    assert isinstance(out["dev"], np.ndarray)
+    np.testing.assert_array_equal(out["dev"], np.arange(4, dtype=np.float32))
+
+
 def test_jax_arrays_take_the_host_fast_path():
     import jax.numpy as jnp
 
