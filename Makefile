@@ -5,7 +5,8 @@
 PY ?= python
 
 .PHONY: verify test bench bench-serve bench-algorithms bench-net \
-	bench-net-check bench-container bench-obs smoke
+	bench-net-check bench-container bench-obs bench-fleet \
+	bench-fleet-check smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -33,6 +34,12 @@ bench-container:
 
 bench-obs:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_obs
+
+bench-fleet:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_fleet
+
+bench-fleet-check:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_fleet --check
 
 smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.train \

@@ -1,0 +1,274 @@
+"""Adaptive fleet benchmark — the control-plane acceptance gates (ISSUE 8).
+
+Two experiments over one 3-locality fleet (smoke model, one engine per
+locality):
+
+- **SLO A/B** — a batch flood plus sparse interactive requests, run twice.
+  *Static*: no tiers, no admission gate — every request joins the same
+  least-loaded scramble, so interactive work queues behind the flood.
+  *Adaptive*: interactive requests pin to a reserved interactive-tier
+  engine, batch spreads over the batch tier, and batch admission is gated
+  on gossiped KV-page occupancy with the fleet controller releasing parked
+  requests as pressure drains.  Gate: adaptive interactive p99 latency at
+  least ``GATE_SLO_P99``x better than static.
+- **Live migration under load** — grow a brand-new locality into the
+  running fleet (elastic join), then migrate the interactive engine onto
+  it mid-stream with 8 requests in flight.  Gate: every stream's channel
+  tokens exactly equal its future's authoritative result AND the relay's
+  duplicate counter does not move — zero dropped, zero duplicated.
+
+``--check`` re-reads ``results/BENCH_fleet.json`` and exits non-zero if a
+gate failed (the CI assertion step).
+"""
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+OUT = REPO / "results" / "BENCH_fleet.json"
+
+LOCALITIES = 3
+ARCH = "qwen25_3b"
+BATCH_FLOOD = 18          # batch requests fired as one burst
+INTERACTIVE_N = 8         # sparse latency-sensitive requests
+BATCH_MAX_NEW = 24
+INTERACTIVE_MAX_NEW = 4
+MIGRATE_STREAMS = 8
+GATE_SLO_P99 = 2.5
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def _prompts(n, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 512, size=rng.integers(4, 16)).tolist()
+            for _ in range(n)]
+
+
+def _drain(router, timeout=120):
+    """Wait for everything in flight to finish before the next phase."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if router.gated_depth() == 0 and all(
+                e.load() == 0 for e in router.engines):
+            return
+        time.sleep(0.05)
+    raise TimeoutError("fleet did not drain")
+
+
+def _slo_round(router, slo_interactive, slo_batch):
+    """One flood+probe round; returns interactive latencies (s) and the
+    batch futures (caller drains them)."""
+    batch_futs = [router.submit(p, max_new=BATCH_MAX_NEW, slo=slo_batch)
+                  for p in _prompts(BATCH_FLOOD, seed=11)]
+    lat = []
+    inter_futs = []
+    for p in _prompts(INTERACTIVE_N, seed=13):
+        t0 = time.perf_counter()
+        f = router.submit(p, max_new=INTERACTIVE_MAX_NEW, slo=slo_interactive)
+        f.get(timeout=600)
+        lat.append(time.perf_counter() - t0)
+        inter_futs.append(f)
+        time.sleep(0.02)  # sparse arrivals, the interactive traffic shape
+    return lat, batch_futs
+
+
+def _slo_ab(net, router):
+    from repro.fleet import BATCH, INTERACTIVE, AdmissionController
+    from repro.fleet.controller import FleetController
+
+    # warm every engine's jit paths so the A/B measures queueing, not
+    # compilation
+    for f in [e.submit(list(range(1, 9))) for e in router.engines]:
+        f.get(timeout=600)
+
+    # -- static: one undifferentiated pool
+    static_lat, batch_futs = _slo_round(router, None, None)
+    for f in batch_futs:
+        f.get(timeout=600)
+    _drain(router)
+
+    # -- adaptive: tiers + occupancy-gated admission + controller ticks
+    names = [getattr(e, "name", None) or e.scfg.name for e in router.engines]
+    router.set_tier(names[1], INTERACTIVE)       # reserved latency engine
+    for n in (names[0], *names[2:]):
+        router.set_tier(n, BATCH)
+    gate = AdmissionController.for_router(router, high=0.70, low=0.40)
+    controller = FleetController(net, router, interval=0.05).start()
+    try:
+        adaptive_lat, batch_futs = _slo_round(router, INTERACTIVE, BATCH)
+        for f in batch_futs:
+            f.get(timeout=600)
+        _drain(router)
+    finally:
+        controller.stop()
+        router.admission = None
+        for n in names:
+            router.set_tier(n, None)
+
+    from repro.core import counters as _counters
+    reg = _counters.default()
+    sp99, ap99 = _percentile(static_lat, 99), _percentile(adaptive_lat, 99)
+    return {
+        "batch_flood": BATCH_FLOOD,
+        "interactive_requests": INTERACTIVE_N,
+        "static_p50_ms": round(_percentile(static_lat, 50) * 1e3, 1),
+        "static_p99_ms": round(sp99 * 1e3, 1),
+        "adaptive_p50_ms": round(_percentile(adaptive_lat, 50) * 1e3, 1),
+        "adaptive_p99_ms": round(ap99 * 1e3, 1),
+        "p99_improvement": round(sp99 / ap99, 2),
+        "gate_2p5x_met": bool(sp99 >= GATE_SLO_P99 * ap99),
+        "admission": {
+            "gated": int(reg.get_value("/serve{router}/admission/gated")),
+            "released": int(
+                reg.get_value("/serve{router}/admission/released")),
+            "closed_edges": int(
+                reg.get_value("/fleet{admission}/closed_edges")),
+            "controller_ticks": int(
+                reg.get_value("/fleet{controller}/ticks")),
+        },
+    }
+
+
+def _migration_under_load(net, router):
+    import repro.core as core
+    from repro.core.future import Channel
+    from repro.fleet import grow_engine, migrate_engine
+
+    def relay_total(name):
+        return sum(v for _n, v in
+                   core.counters.query(f"/serve{{relay}}/tokens/{name}"))
+
+    victim = router.engines[1]  # remote engine on locality 1
+    # elastic join: the migration destination is a locality that did not
+    # exist when the fleet booted
+    t0 = time.perf_counter()
+    newcomer = grow_engine(net, router)
+    grow_wall = time.perf_counter() - t0
+    dest = newcomer.locality
+
+    dups_before = relay_total("duplicates")
+    delivered_before = relay_total("delivered")
+    pairs = []
+    for p in _prompts(MIGRATE_STREAMS, seed=17):
+        ch = Channel()
+        pairs.append((ch, victim.submit(p, max_new=BATCH_MAX_NEW, stream=ch)))
+    t0 = time.perf_counter()
+    moved = migrate_engine(net, router, victim.name, dest)
+    cutover = time.perf_counter() - t0
+
+    exact = 0
+    for ch, fut in pairs:
+        out = fut.get(timeout=600)
+        if list(ch) == out and len(out) == BATCH_MAX_NEW + 1:
+            exact += 1
+    dup_delta = relay_total("duplicates") - dups_before
+    _drain(router)
+    return {
+        "streams": MIGRATE_STREAMS,
+        "grow_wall_s": round(grow_wall, 2),
+        "requests_moved": int(moved),
+        "cutover_s": round(cutover, 3),
+        "streams_token_exact": exact,
+        "tokens_streamed": int(relay_total("delivered") - delivered_before),
+        "duplicate_tokens": int(dup_delta),
+        "engine_now_on": victim.locality,
+        "gate_zero_drop_met": bool(
+            exact == MIGRATE_STREAMS and dup_delta == 0 and moved >= 0),
+    }
+
+
+def _bench():
+    from repro import net as rnet
+    from repro.serve.engine import ServeConfig
+    from repro.serve.router import Router
+
+    pools = {"default": 4, "prefill": 2, "io": 1}
+    net = rnet.bootstrap(LOCALITIES, pools=pools, worker_pools=pools)
+    try:
+        scfg = ServeConfig(max_batch=2, cache_len=96,
+                           max_new_tokens=BATCH_MAX_NEW + 1)
+        router = Router.over_localities(net, ARCH, scfg, smoke=True,
+                                        plan="serve")
+        slo = _slo_ab(net, router)
+        migration = _migration_under_load(net, router)
+        return {
+            "localities": LOCALITIES,
+            "arch": ARCH,
+            "slo": slo,
+            "migration": migration,
+            # headline keys (CI gates + cross-PR comparisons read these)
+            "interactive_p99_improvement": slo["p99_improvement"],
+            "migration_cutover_s": migration["cutover_s"],
+            "migration_duplicate_tokens": migration["duplicate_tokens"],
+        }
+    finally:
+        net.shutdown()
+
+
+def check(res=None) -> int:
+    """CI gate: exit 0 iff the fleet met the ISSUE 8 acceptance bars."""
+    res = res or json.loads(OUT.read_text())
+    failures = []
+    if not res["slo"]["gate_2p5x_met"]:
+        failures.append(
+            f"SLO gate: adaptive p99 {res['slo']['adaptive_p99_ms']}ms is "
+            f"only {res['slo']['p99_improvement']}x better than static "
+            f"{res['slo']['static_p99_ms']}ms (need {GATE_SLO_P99}x)")
+    if not res["migration"]["gate_zero_drop_met"]:
+        m = res["migration"]
+        failures.append(
+            f"migration gate: {m['streams_token_exact']}/{m['streams']} "
+            f"streams token-exact, {m['duplicate_tokens']} duplicates")
+    for f in failures:
+        print(f"GATE FAILED — {f}")
+    if not failures:
+        print("all fleet gates met")
+    return 1 if failures else 0
+
+
+def run():
+    res = _bench()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(res, indent=1))
+    s, m = res["slo"], res["migration"]
+    return [
+        ("fleet/slo_interactive_p99", s["adaptive_p99_ms"] * 1e3,
+         f"{s['p99_improvement']}x better than static "
+         f"{s['static_p99_ms']}ms under a {s['batch_flood']}-request "
+         f"batch flood; {s['admission']['gated']} gated / "
+         f"{s['admission']['released']} released"),
+        ("fleet/live_migration", m["cutover_s"] * 1e6,
+         f"{m['requests_moved']} in-flight requests moved in "
+         f"{m['cutover_s']}s, {m['streams_token_exact']}/{m['streams']} "
+         f"streams token-exact, {m['duplicate_tokens']} dup tokens "
+         f"(grow {m['grow_wall_s']}s)"),
+    ]
+
+
+def main() -> None:
+    import repro.core as core
+
+    if "--check" in sys.argv:
+        sys.exit(check())
+    # run through the canonically-imported module, not __main__: worker
+    # localities resolve actions by dotted module name
+    from benchmarks import bench_fleet as canonical
+
+    core.init(num_workers=4)
+    try:
+        for name, us, derived in canonical.run():
+            print(f"{name},{us:.2f},{derived}")
+        print(json.dumps(json.loads(OUT.read_text()), indent=1))
+    finally:
+        core.finalize()
+    sys.exit(canonical.check())
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,8 @@ def main() -> None:
 
     core.init(num_workers=4)
     from benchmarks import (bench_algorithms, bench_cholesky, bench_container,
-                            bench_dist, bench_efficiency, bench_net,
-                            bench_obs, bench_overlap, bench_serve,
+                            bench_dist, bench_efficiency, bench_fleet,
+                            bench_net, bench_obs, bench_overlap, bench_serve,
                             bench_stream, bench_tasks)
 
     suites = [
@@ -25,6 +25,7 @@ def main() -> None:
         ("net", bench_net),
         ("container", bench_container),
         ("obs", bench_obs),
+        ("fleet", bench_fleet),
     ]
     print("name,us_per_call,derived")
     failures = 0

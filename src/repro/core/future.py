@@ -221,12 +221,13 @@ class Channel(Generic[T]):
     one token per ``set`` and closes on request completion.
     """
 
-    __slots__ = ("_buf", "_waiters", "_closed", "_lock")
+    __slots__ = ("_buf", "_waiters", "_closed", "_close_exc", "_lock")
 
     def __init__(self) -> None:
         self._buf: List[T] = []
         self._waiters: List[Promise[T]] = []
         self._closed = False
+        self._close_exc: Optional[BaseException] = None
         self._lock = threading.Lock()
 
     def set(self, value: T) -> None:
@@ -240,16 +241,26 @@ class Channel(Generic[T]):
         if waiter is not None:
             waiter.set_value(value)
 
-    def close(self) -> None:
+    def _end_exc(self) -> BaseException:
+        return self._close_exc or ChannelClosed("channel closed")
+
+    def close(self, exc: Optional[BaseException] = None) -> None:
         """End the stream. Buffered values remain readable; blocked and
-        future ``get``s observe :class:`ChannelClosed`."""
+        future ``get``s observe :class:`ChannelClosed` — or ``exc``, when
+        given: the error takes the FIFO position *after* everything already
+        buffered, so a producer failing mid-stream delivers every token it
+        produced and then the failure, in order.  Blocked readers (buffer
+        necessarily empty) see it immediately.  A second close keeps the
+        first outcome."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
+            self._close_exc = exc
             waiters, self._waiters = self._waiters, []
+        end = self._end_exc()
         for w in waiters:
-            w.set_exception(ChannelClosed("channel closed"))
+            w.set_exception(end)
 
     def is_closed(self) -> bool:
         with self._lock:
@@ -269,7 +280,7 @@ class Channel(Generic[T]):
         if ok:
             promise.set_value(value)  # type: ignore[arg-type]
         else:
-            promise.set_exception(ChannelClosed("channel closed"))
+            promise.set_exception(self._end_exc())
         return promise.future()
 
     def get(self, timeout: Optional[float] = None) -> T:

@@ -1,0 +1,31 @@
+"""repro.fleet — counter-driven adaptive serving control plane.
+
+The paper's §2.4 closes with the point of performance counters: *adaptivity*
+— measured state feeding resource decisions at runtime.  This package is
+that loop, one level above the router: on locality 0 a
+:class:`~repro.fleet.controller.FleetController` polls the fleet's counters
+(:class:`~repro.obs.sampler.FleetSampler` histories + router gossip),
+evaluates declarative :class:`~repro.fleet.policy.Policy` rules with
+hysteresis, and actuates —
+
+- **SLO tiers** (:mod:`repro.fleet.slo`): interactive vs batch request
+  classes routed to different engines; batch admission gated on *gossiped*
+  KV-page occupancy, not queue depth.
+- **Elasticity** (:mod:`repro.fleet.elastic`): spawn a whole new locality
+  (+engine) into the running fleet, or drain and retire one.
+- **Live migration** (:mod:`repro.fleet.migrate`): move a *running* engine
+  — paged KV and in-flight streams included — to another locality with
+  zero dropped or duplicated tokens.
+"""
+
+from repro.fleet.controller import FleetController
+from repro.fleet.elastic import grow_engine, retire_engine
+from repro.fleet.migrate import migrate_engine
+from repro.fleet.policy import EngineView, FleetView, Policy
+from repro.fleet.slo import BATCH, INTERACTIVE, AdmissionController
+
+__all__ = [
+    "AdmissionController", "BATCH", "EngineView", "FleetController",
+    "FleetView", "INTERACTIVE", "Policy", "grow_engine", "migrate_engine",
+    "retire_engine",
+]

@@ -7,6 +7,8 @@ Examples:
       --requests 8 --max-new 16 --engines 2 --temperature 0.8 --top-k 40
   PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
       --requests 12 --max-new 16 --localities 2
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen25_3b --smoke \
+      --requests 24 --max-new 16 --localities 3 --fleet --slo --stream
 """
 
 from __future__ import annotations
@@ -47,7 +49,21 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--stream", action="store_true",
-                    help="consume tokens via per-request channels")
+                    help="consume tokens via per-request channels (crosses "
+                         "localities through the token relay)")
+    # fleet control plane
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the adaptive control plane on locality 0: "
+                         "counter sweeps -> policies -> actuators, plus "
+                         "gated-batch release each tick (needs "
+                         "--localities > 1)")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO tiers: first remote engine pinned interactive,"
+                         " the rest batch; batch admission gated on gossiped"
+                         " KV-page occupancy (hysteresis 0.85/0.60)")
+    ap.add_argument("--slo-mix", type=float, default=0.25, metavar="FRAC",
+                    help="fraction of requests submitted interactive when "
+                         "--slo is on (default 0.25)")
     # observability
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record a fleet-wide task/parcel trace and write "
@@ -56,9 +72,11 @@ def main() -> None:
                     help="end-of-run fleet counter report (HPX "
                          "--hpx:print-counter parity), e.g. '/serve*'")
     args = ap.parse_args()
-    if args.localities > 1 and args.stream:
-        ap.error("--stream is per-process (channels cannot cross localities);"
-                 " use --localities 1")
+    if (args.fleet or args.slo) and args.localities < 2:
+        ap.error("--fleet/--slo need --localities > 1 (the control plane "
+                 "manages remote engines)")
+    if args.slo:
+        args.fleet = True  # the gate needs the controller's release tick
     if args.localities > 1 and args.engines != 1:
         ap.error("--engines is single-locality replication; with "
                  "--localities N the topology is one engine per locality")
@@ -101,15 +119,40 @@ def main() -> None:
         params = model.init(jax.random.PRNGKey(0))
         router = Router.replicate(model, params, scfg, args.engines,
                                   extra_inputs=default_extra_inputs(cfg))
+    controller = None
+    if args.slo:
+        from repro.fleet import BATCH, INTERACTIVE, AdmissionController
+
+        from repro.serve.router import RemoteEngine
+
+        # first remote engine serves the latency tier, the rest take batch;
+        # batch admission rides the occupancy gossip on completion parcels
+        remote = [e for e in router.engines if isinstance(e, RemoteEngine)]
+        for i, e in enumerate(remote):
+            router.set_tier(e.name, INTERACTIVE if i == 0 else BATCH)
+        AdmissionController.for_router(router, high=0.85, low=0.60)
+    if args.fleet:
+        from repro.fleet import FleetController
+
+        controller = FleetController(net, router, interval=0.25).start()
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    def _slo_for(i: int):
+        if not args.slo:
+            return None
+        from repro.fleet import BATCH, INTERACTIVE
+
+        return INTERACTIVE if (i % max(round(1 / max(args.slo_mix, 1e-9)), 1)
+                               == 0) else BATCH
+
     if args.stream:
         streams = []
         for i in range(args.requests):
             prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 32)).tolist()
-            streams.append(router.submit_stream(prompt, sampling=sampling))
+            streams.append(router.submit_stream(prompt, sampling=sampling,
+                                                slo=_slo_for(i)))
         outs = []
         for ch, fut in streams:
             toks = list(ch)  # arrives token-by-token as slots advance
@@ -119,8 +162,12 @@ def main() -> None:
         futures = []
         for i in range(args.requests):
             prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 32)).tolist()
-            futures.append(router.submit(prompt, sampling=sampling))
+            futures.append(router.submit(prompt, sampling=sampling,
+                                         slo=_slo_for(i)))
         outs = [f.get(timeout=600) for f in futures]
+    if controller is not None:
+        controller.tick()  # final release sweep before measuring
+        controller.stop()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(o) for o in outs)
     report = {

@@ -131,8 +131,18 @@ class NetRuntime:
         self._pending_lock = threading.Lock()
         self._seq = itertools.count(1)
         self._stop = threading.Event()
-        self._procs: List[Any] = []  # root only: worker Process handles
+        self._procs: Dict[int, Any] = {}  # root only: lid → Process handle
         self._hook_installed = False
+        # elastic topology (root authoritative, gossiped via TOPO frames):
+        # n_localities is the size of the id space ever assigned; retired
+        # ids are never reused, so GIDs minted by a dead locality stay
+        # unambiguous forever.
+        self._retired: set = set()
+        self._expect_down: set = set()  # retirements in progress (no re-DOWN)
+        self._topo_lock = threading.Lock()
+        # observers of peer departure (crash or retirement): the serve/fleet
+        # layers abort relay streams and evict engines pinned to the peer
+        self._peer_down_hooks: List[Any] = []
 
         # distributed-AGAS state (root: authoritative; workers: cache only)
         self._table: Dict[_GidKey, Tuple[int, int]] = {}  # key → (owner, gen)
@@ -158,10 +168,32 @@ class NetRuntime:
     # ------------------------------------------------------------- topology
     @property
     def localities(self) -> List[Locality]:
-        return [Locality(i) for i in range(self.n_localities)]
+        """Live localities (retired ids are skipped, never reassigned)."""
+        return [Locality(i) for i in range(self.n_localities)
+                if i not in self._retired]
+
+    def live_ids(self) -> List[int]:
+        return [loc.id for loc in self.localities]
 
     def is_root(self) -> bool:
         return self.locality == ROOT
+
+    def is_live(self, lid: int) -> bool:
+        return 0 <= lid < self.n_localities and lid not in self._retired
+
+    def add_peer_down_hook(self, cb) -> None:
+        """``cb(lid)`` fires on this locality whenever peer ``lid`` leaves
+        the fleet — crash (DOWN broadcast / connection drop) or orderly
+        retirement.  May fire more than once per peer; observers must be
+        idempotent."""
+        self._peer_down_hooks.append(cb)
+
+    def _notify_peer_down(self, lid: int) -> None:
+        for cb in list(self._peer_down_hooks):
+            try:
+                cb(lid)
+            except Exception:  # noqa: BLE001 — observers must not break net
+                pass
 
     # ------------------------------------------------------------ send side
     def send_parcel(self, dst: int, action_name: str,
@@ -259,8 +291,17 @@ class NetRuntime:
             # locality can never complete, nor can rendezvous with it
             peer = header.get("peer")
             if peer is not None:
+                with self._topo_lock:
+                    self._retired.add(peer)
                 self._port.drop_transfers(peer)
                 self._fail_pending_for(peer, f"locality#{peer} went away")
+                self._notify_peer_down(peer)
+        elif t == _pp.TOPO:
+            # the root's topology broadcast: the id space grew (elastic
+            # join).  FIFO ordering on the root channel guarantees this
+            # arrives before any parcel that *mentions* the new locality.
+            with self._topo_lock:
+                self.n_localities = max(self.n_localities, int(header["n"]))
 
     def _handle_parcel(self, fr: _pp.Frame) -> None:
         """io-pool side of a received parcel: decode, run, ack credit."""
@@ -490,6 +531,127 @@ class NetRuntime:
         for rec in _agas.default():
             self._agas_hook("register", rec)
 
+    # ------------------------------------------------------ elastic topology
+    def spawn_locality(self, pools: Optional[Dict[str, int]] = None,
+                       timeout: float = 120.0) -> int:
+        """Grow the fleet: spawn one new worker locality into the *running*
+        runtime (root only).  The worker gets the next never-used id, dials
+        home exactly like bootstrap (HELLO per lane), and every existing
+        worker learns the enlarged id space through a TOPO broadcast that
+        FIFO-precedes any parcel mentioning the newcomer.  Returns the new
+        locality id."""
+        if not self.is_root():
+            raise RuntimeError("spawn_locality is root-only")
+        import multiprocessing as _mp
+
+        with self._topo_lock:
+            lid = self.n_localities
+            self.n_localities = lid + 1
+        cfg = self.config
+        nlanes = 1 + max(0, cfg.stripes)
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(nlanes)
+        listener.settimeout(timeout)
+        port = listener.getsockname()[1]
+
+        ctx = _mp.get_context("spawn")
+        proc = ctx.Process(
+            target=_worker_main,
+            args=(lid, lid + 1, port,
+                  dict(pools) if pools else None, cfg),
+            daemon=True, name=f"repro-locality-{lid}")
+        proc.start()
+        half_open: Dict[int, Dict[int, socket.socket]] = {}
+        try:
+            _accept_worker_lanes(self, listener, 1, nlanes, timeout,
+                                 half_open)
+        except BaseException as e:
+            for lanes in half_open.values():
+                for s in lanes.values():
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+            proc.terminate()
+            proc.join(timeout=5.0)
+            with self._topo_lock:
+                self._retired.add(lid)  # the id is burned, not reusable
+            if isinstance(e, (OSError, socket.timeout)):
+                raise RuntimeError(
+                    f"spawn_locality: locality#{lid} failed to dial home "
+                    f"within {timeout}s") from e
+            raise
+        finally:
+            listener.close()
+        self._procs[lid] = proc
+        # existing workers must accept parcels addressed to the newcomer
+        # before anything can mention it — TOPO rides the same FIFO channel
+        for dst, conn in list(self._conns.items()):
+            if dst == lid or conn.closed:
+                continue
+            try:
+                conn.send({"t": _pp.TOPO, "src": self.locality, "dst": dst,
+                           "seq": 0, "n": self.n_localities})
+            except _pp.PortClosed:
+                pass
+        return lid
+
+    def retire_locality(self, lid: int, timeout: float = 30.0) -> None:
+        """Shrink the fleet: orderly shutdown of one worker locality (root
+        only).  The caller is responsible for *draining* first — migrating
+        or completing everything the locality owns; this layer fails any
+        still-pending calls, BYEs the worker, reaps the process, purges its
+        entries from the root AGAS table, and broadcasts DOWN so peers drop
+        rendezvous state.  The id is never reused."""
+        if not self.is_root():
+            raise RuntimeError("retire_locality is root-only")
+        if lid == ROOT:
+            raise ValueError("cannot retire the root locality")
+        if not self.is_live(lid):
+            raise ValueError(f"locality#{lid} is not live")
+        with self._topo_lock:
+            self._expect_down.add(lid)
+            self._retired.add(lid)
+        conn = self._conns.get(lid)
+        if conn is not None and not conn.closed:
+            try:
+                conn.send({"t": _pp.BYE, "src": self.locality, "dst": lid,
+                           "seq": 0})
+            except _pp.PortClosed:
+                pass
+            self._port.flush(timeout=min(timeout, 10.0))
+        proc = self._procs.pop(lid, None)
+        if proc is not None:
+            proc.join(timeout=timeout)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+        self._fail_pending_for(lid, f"locality#{lid} retired")
+        self._port.drop_transfers(lid)
+        self._notify_peer_down(lid)
+        # purge everything the dead locality still owned from the root
+        # table: resolvers must get UnknownGid, not a route to a ghost
+        with self._table_lock:
+            doomed = [k for k, (owner, _g) in self._table.items()
+                      if owner == lid]
+            for k in doomed:
+                del self._table[k]
+                for n, key in list(self._names.items()):
+                    if key == k:
+                        del self._names[n]
+        for k in doomed:
+            self.cache_invalidate(k)
+        for dst, other in list(self._conns.items()):
+            if dst == lid or other.closed:
+                continue
+            try:
+                other.send({"t": _pp.DOWN, "src": self.locality, "dst": dst,
+                            "seq": 0, "peer": lid})
+            except _pp.PortClosed:
+                pass
+
     # ------------------------------------------------------------- shutdown
     def shutdown(self, timeout: float = 30.0) -> None:
         """Tear down the net: BYE every worker, join processes, uninstall."""
@@ -504,9 +666,9 @@ class NetRuntime:
             # the BYE (and anything coalesced ahead of it) must hit the
             # wire before the workers are reaped
             self._port.flush(timeout=min(timeout, 10.0))
-            for proc in self._procs:
+            for proc in self._procs.values():
                 proc.join(timeout=timeout)
-            for proc in self._procs:
+            for proc in self._procs.values():
                 if proc.is_alive():
                     proc.terminate()
                     proc.join(timeout=5.0)
@@ -541,13 +703,22 @@ class NetRuntime:
         if not self.is_root() and conn.peer_id == ROOT:
             # root went away: nothing in flight can ever complete
             self._fail_pending_for(None, "lost connection to the root")
+            self._notify_peer_down(ROOT)
             self._stop.set()
         elif self.is_root():
             # a worker died: fail fast the calls routed to it (new sends
             # already raise PortClosed synchronously) and broadcast DOWN so
-            # the other workers fail their worker↔worker calls too
+            # the other workers fail their worker↔worker calls too.  An
+            # orderly retirement (retire_locality) already did all of this
+            # before the connection dropped — don't re-broadcast.
             dead = conn.peer_id
+            with self._topo_lock:
+                expected = dead in self._expect_down
+                self._retired.add(dead)
+            if expected:
+                return
             self._fail_pending_for(dead, f"locality#{dead} went away")
+            self._notify_peer_down(dead)
             for dst, other in list(self._conns.items()):
                 if other is conn or other.closed:
                     continue
@@ -591,6 +762,36 @@ def require() -> NetRuntime:
 
 
 # ---------------------------------------------------------------- bootstrap
+def _accept_worker_lanes(net: NetRuntime, listener: socket.socket,
+                         n_workers: int, nlanes: int, timeout: float,
+                         half_open: Dict[int, Dict[int, socket.socket]]
+                         ) -> None:
+    """Accept ``n_workers × nlanes`` HELLO-stamped sockets and register one
+    channel per worker as its lane set completes (bootstrap and elastic
+    join share this).  ``half_open`` is caller-owned so a failure can close
+    partially-dialed lanes."""
+    for _ in range(n_workers * nlanes):
+        sock, _addr = listener.accept()
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(timeout)  # bounded handshake read
+        frame = _pp.read_frame(sock)
+        header, _ = _pp.decode_frame(frame)
+        if header["t"] != _pp.HELLO:
+            raise RuntimeError(f"expected HELLO, got {header['t']!r}")
+        if header.get("nl", 1) != nlanes:
+            raise RuntimeError(
+                f"lane-count mismatch: worker {header['src']} dialed "
+                f"{header.get('nl')} lanes, root expects {nlanes}")
+        peer, lane = header["src"], header.get("lane", 0)
+        sock.settimeout(None)
+        lanes = half_open.setdefault(peer, {})
+        lanes[lane] = sock
+        if len(lanes) == nlanes:
+            del half_open[peer]
+            net._conns[peer] = net._port.add_channel(
+                peer, [lanes[i] for i in range(nlanes)])
+
+
 def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
               worker_pools: Optional[Dict[str, int]] = None,
               timeout: float = 120.0,
@@ -633,30 +834,12 @@ def bootstrap(n_localities: int, pools: Optional[Dict[str, int]] = None,
                            args=(lid, n_localities, port, worker_pools, cfg),
                            daemon=True, name=f"repro-locality-{lid}")
         proc.start()
-        net._procs.append(proc)
+        net._procs[lid] = proc
 
     half_open: Dict[int, Dict[int, socket.socket]] = {}
     try:
-        for _ in range((n_localities - 1) * nlanes):
-            sock, _addr = listener.accept()
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            sock.settimeout(timeout)  # bounded handshake read
-            frame = _pp.read_frame(sock)
-            header, _ = _pp.decode_frame(frame)
-            if header["t"] != _pp.HELLO:
-                raise RuntimeError(f"expected HELLO, got {header['t']!r}")
-            if header.get("nl", 1) != nlanes:
-                raise RuntimeError(
-                    f"lane-count mismatch: worker {header['src']} dialed "
-                    f"{header.get('nl')} lanes, root expects {nlanes}")
-            peer, lane = header["src"], header.get("lane", 0)
-            sock.settimeout(None)
-            lanes = half_open.setdefault(peer, {})
-            lanes[lane] = sock
-            if len(lanes) == nlanes:
-                del half_open[peer]
-                net._conns[peer] = net._port.add_channel(
-                    peer, [lanes[i] for i in range(nlanes)])
+        _accept_worker_lanes(net, listener, n_localities - 1, nlanes,
+                             timeout, half_open)
     except BaseException as e:
         # ANY handshake failure (timeout, stray client sending garbage,
         # corrupt frame) must reap the already-spawned workers — they would

@@ -102,6 +102,7 @@ CTS = "cts"         # rendezvous: clear to send (assembly allocated)
 DATA = "data"       # rendezvous: one striped window of the payload stream
 CREDIT = "credit"   # flow control: return budget bytes to the sender
 DOWN = "down"       # root broadcast: a peer locality died
+TOPO = "topo"       # root broadcast: the locality id space grew (elastic)
 
 _NO_PAYLOAD = object()
 

@@ -31,6 +31,7 @@ intra-process placement moves; this is the inter-process tier above it.
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
@@ -48,7 +49,8 @@ from repro.net.locality import (
     require,
 )
 
-_MAX_ATTEMPTS = 4
+_MAX_ATTEMPTS = 6
+_RETRY_DELAY = 0.08  # backoff base once staleness repeats (mid-migration)
 
 _Target = Union[_agas.GID, str]
 
@@ -255,7 +257,17 @@ def _apply_remote_named(net: NetRuntime, action_name: str, target: _Target,
             if isinstance(exc, UnknownGid) and n + 1 < _MAX_ATTEMPTS:
                 net.cache_invalidate(key)
                 net.c_stale.increment()
-                net._exec.post(attempt, n + 1)  # re-resolve off the pump
+                if n == 0:  # ordinary stale cache: re-resolve immediately
+                    net._exec.post(attempt, n + 1)
+                else:
+                    # repeated misses mean the object is mid-cutover (live
+                    # migration closed the source before the destination
+                    # adopted): exponential backoff stretches the retry
+                    # budget across the whole transfer window
+                    timer = threading.Timer(_RETRY_DELAY * (2 ** (n - 1)),
+                                            net._exec.post, (attempt, n + 1))
+                    timer.daemon = True
+                    timer.start()
             else:
                 promise.set_from(f)
 
@@ -293,10 +305,54 @@ def owner_of(target: _Target) -> int:
     return owner
 
 
-def query_counters(locality: Union[int, Locality], pattern: str = "*",
-                   timeout: float = 60.0):
-    """Read a remote locality's performance counters (paper §2.4: counters
-    are readable from any locality *via AGAS*) over the parcelport."""
+def _counter_sweep(localities, action, local_read, pattern: str,
+                   timeout: float) -> Dict[int, Any]:
+    """Fan a counter read out to many localities at once and survive any of
+    them dying mid-sweep: a dead peer contributes ``{"error": "..."}``
+    instead of poisoning the whole read.  The fleet controller keeps
+    steering through a failure precisely because this never raises."""
+    net = require()
+    if localities is None:
+        ids = net.live_ids()
+    else:
+        ids = [_locality_id(loc) for loc in localities]
+    futures: Dict[int, Any] = {}
+    out: Dict[int, Any] = {}
+    for lid in ids:
+        if lid == net.locality:
+            continue
+        try:
+            futures[lid] = run_on(lid, action, pattern)
+        except BaseException as e:  # noqa: BLE001 — no route: mark, move on
+            out[lid] = {"error": repr(e)}
+    for lid in ids:
+        if lid == net.locality:
+            try:
+                out[lid] = local_read(pattern)
+            except BaseException as e:  # noqa: BLE001
+                out[lid] = {"error": repr(e)}
+        elif lid in futures:
+            try:
+                out[lid] = futures[lid].get(timeout=timeout)
+            except BaseException as e:  # noqa: BLE001 — died mid-sweep
+                out[lid] = {"error": repr(e)}
+    return out
+
+
+def query_counters(locality: Union[int, Locality, list, None],
+                   pattern: str = "*", timeout: float = 60.0):
+    """Read performance counters over the parcelport (paper §2.4: counters
+    are readable from any locality *via AGAS*).
+
+    A single locality returns its ``[(name, value), ...]`` pairs (raising
+    if it is unreachable — the strict spelling).  ``None`` (every live
+    locality) or a list sweeps in parallel and returns
+    ``{locality: pairs | {"error": ...}}`` — a peer dying mid-sweep yields
+    an error marker, never an exception, so control loops keep working
+    through a failure."""
+    if locality is None or isinstance(locality, (list, tuple)):
+        return _counter_sweep(locality, _counters_query,
+                              _counters.default().query, pattern, timeout)
     net = require()
     lid = _locality_id(locality)
     if lid == net.locality:
@@ -304,11 +360,16 @@ def query_counters(locality: Union[int, Locality], pattern: str = "*",
     return run_on(lid, _counters_query, pattern).get(timeout=timeout)
 
 
-def query_counter_stats(locality: Union[int, Locality], pattern: str = "*",
-                        timeout: float = 60.0):
-    """Full per-counter statistics from a remote locality: timers and
-    histograms keep mean/max/p50/p95/p99 instead of collapsing to one
-    scalar — what ``--print-counters`` and the fleet sampler report."""
+def query_counter_stats(locality: Union[int, Locality, list, None],
+                        pattern: str = "*", timeout: float = 60.0):
+    """Full per-counter statistics: timers and histograms keep
+    mean/max/p50/p95/p99 instead of collapsing to one scalar — what
+    ``--print-counters`` and the fleet sampler report.  Same single-vs-sweep
+    contract as :func:`query_counters` (sweeps tolerate dead peers)."""
+    if locality is None or isinstance(locality, (list, tuple)):
+        return _counter_sweep(locality, _counters_stats,
+                              _counters.default().snapshot_stats,
+                              pattern, timeout)
     net = require()
     lid = _locality_id(locality)
     if lid == net.locality:

@@ -56,26 +56,26 @@ class FleetSampler:
     def _localities(self) -> List[int]:
         if self.net is None:
             return [0]
-        return list(range(self.net.n_localities))
-
-    def _snapshot(self, loc: int) -> List[Tuple[str, float]]:
-        if self.net is None or loc == self.net.locality:
-            return self.registry.query(self.pattern)
-        from repro.net import remote as _remote
-
-        return _remote.query_counters(loc, self.pattern,
-                                      timeout=max(30.0, self.interval * 4))
+        return self.net.live_ids()
 
     def sample_once(self) -> int:
-        """One sweep over every locality; returns points recorded.  A
-        locality that fails to answer (mid-shutdown) is skipped, not fatal —
-        the flight recorder outlives individual crashes."""
+        """One parallel sweep over every *live* locality; returns points
+        recorded.  Rides the fault-tolerant sweep form of
+        ``net.query_counters``: a locality dying mid-sweep contributes an
+        error marker, not an exception — the flight recorder (and the
+        fleet controller driving it) outlives individual crashes, and an
+        elastic join shows up as a new locality on the next sweep."""
         now = time.perf_counter()
         points = 0
-        for loc in self._localities():
-            try:
-                pairs = self._snapshot(loc)
-            except Exception:  # noqa: BLE001 — peer down mid-sample
+        if self.net is None:
+            sweep: Dict[int, Any] = {0: self.registry.query(self.pattern)}
+        else:
+            from repro.net import remote as _remote
+
+            sweep = _remote.query_counters(
+                None, self.pattern, timeout=max(30.0, self.interval * 4))
+        for loc, pairs in sweep.items():
+            if isinstance(pairs, dict):  # {"error": ...} — peer went away
                 self.sample_errors += 1
                 continue
             with self._lock:
@@ -119,6 +119,13 @@ class FleetSampler:
         with self._lock:
             return sorted(self._histories)
 
+    def latest(self, locality: int, name: str) -> Optional[float]:
+        """Most recent sampled value, or ``None`` if never seen — the
+        policy layer's gauge read (occupancy, queue depth)."""
+        with self._lock:
+            ring = self._histories.get((locality, name))
+            return ring[-1][1] if ring else None
+
     def rate(self, locality: int, name: str) -> float:
         """Per-second rate of a cumulative counter over the retained window.
 
@@ -152,7 +159,7 @@ def print_counter_report(pattern: str = "*", net=None,
     """HPX ``--hpx:print-counter`` parity: dump every matching counter on
     every locality — value, rate (when a sampler retained history), and
     p50/p95/p99 for timers/histograms.  Returns the printed lines."""
-    localities = [0] if net is None else list(range(net.n_localities))
+    localities = [0] if net is None else net.live_ids()
     lines = [f"{'counter':<58} {'value':>12} {'rate/s':>10} "
              f"{'p50':>9} {'p95':>9} {'p99':>9}"]
     for loc in localities:

@@ -112,6 +112,10 @@ class _Request:
     generated: List[int] = field(default_factory=list)
     submit_t: float = 0.0
     first_token_t: float = 0.0
+    # opaque picklable routing info (fleet relay: client locality, stream
+    # id) that survives live migration — the destination re-attaches its
+    # stream and completion hooks from this
+    meta: Optional[Dict[str, Any]] = None
 
 
 def _cache_batch_axis(name: str) -> int:
@@ -211,6 +215,16 @@ class _DenseSlots:
     def step_bookkeeping(self, active: List[int]) -> None:
         pass
 
+    def snapshot_slot(self, slot: int) -> Dict[str, Any]:
+        raise NotImplementedError(
+            "dense cache backend does not support live migration — "
+            "use the paged backend (ServeConfig.paged=True)")
+
+    def restore_slot(self, slot: int, snap: Dict[str, Any]) -> bool:
+        raise NotImplementedError(
+            "dense cache backend does not support live migration — "
+            "use the paged backend (ServeConfig.paged=True)")
+
 
 class _PagedSlots:
     """Block-pool paged cache backend (see :mod:`repro.serve.kv_cache`)."""
@@ -245,6 +259,12 @@ class _PagedSlots:
     def step_bookkeeping(self, active: List[int]) -> None:
         self.kv.pos[active] += 1
 
+    def snapshot_slot(self, slot: int) -> Dict[str, Any]:
+        return self.kv.snapshot_slot(slot)
+
+    def restore_slot(self, slot: int, snap: Dict[str, Any]) -> bool:
+        return self.kv.restore_slot(slot, snap)
+
 
 # ----------------------------------------------------------------- engine
 class Engine:
@@ -273,6 +293,8 @@ class Engine:
         self._work_event = threading.Event()  # prefill completion wakeup
         self._lock = threading.Lock()
         self._running = False
+        self._paused = False
+        self._migrate_key: Optional[Tuple[int, int]] = None
         self._rid = 0
         self._step_count = 0
         self._key = jax.random.PRNGKey(scfg.seed)
@@ -304,6 +326,10 @@ class Engine:
                                    percentiles=True)
         self.t_first = reg.timer(f"/serve{{{n}}}/request/first_token",
                                  percentiles=True)
+        # live-migration accounting: migrated-out counts toward completed so
+        # load() stays "requests this engine still has to do"
+        self.c_mig_out = reg.counter(f"/serve{{{n}}}/requests/migrated_out")
+        self.c_mig_in = reg.counter(f"/serve{{{n}}}/requests/migrated_in")
 
     # --------------------------------------------------------------- decode
     def _decode_fn(self, params, cache, token, key, temp, topk, topp):
@@ -322,20 +348,30 @@ class Engine:
     # ------------------------------------------------------------------ api
     def submit(self, prompt: List[int], max_new: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
-               stream: Optional[Channel] = None) -> Future:
+               stream: Optional[Channel] = None,
+               meta: Optional[Dict[str, Any]] = None) -> Future:
         """One-sided request → Future[List[int]] of generated ids.
 
-        ``stream``: optional :class:`Channel` — every generated token is
+        ``stream``: optional Channel-alike — every generated token is
         ``set()`` the step it is sampled (first token before the request
         completes) and the channel closes when the request finishes.
+        ``meta``: picklable routing info carried through live migration
+        (the fleet relay's client locality + stream id).
         """
+        if self._migrate_key is not None:
+            # engine migrated away: answer with the stale-resolution signal
+            # so the caller's apply_remote retry re-resolves to the new home
+            from repro.net.locality import UnknownGid, current as _net_current
+            net = _net_current()
+            raise UnknownGid(self._migrate_key,
+                             net.locality if net is not None else -1)
         with self._lock:
             self._rid += 1
             rid = self._rid
         req = _Request(rid, list(prompt),
                        self.scfg.max_new_tokens if max_new is None else max_new,
                        Promise(), sampling or GREEDY, stream,
-                       submit_t=time.perf_counter())
+                       submit_t=time.perf_counter(), meta=meta)
         self._queue.put(req)
         self.c_sub.increment()
         if _trace._enabled:  # request lifetime as one async span
@@ -355,11 +391,153 @@ class Engine:
         router's least-loaded dispatch metric."""
         return self.c_sub.get_value() - self.c_done.get_value()
 
+    def occupancy(self) -> float:
+        """Fraction of KV capacity in use (paged: block-pool pages; dense:
+        occupied slots) — the admission-control signal the fleet gossips."""
+        if self.paged:
+            kv = self.backend.kv
+            return kv.pages_in_use() / max(kv.num_pages - 1, 1)
+        return sum(s is not None for s in self.slots) / self.scfg.max_batch
+
     def _ensure_running(self) -> None:
         with self._lock:
-            if not self._running:
+            if not self._running and not self._paused:
                 self._running = True
                 self._loop_exec.post(self._step)
+
+    # ---------------------------------------------------------- migration
+    def pause(self, timeout: float = 30.0) -> None:
+        """Quiesce at a step boundary: stop the decode continuation chain
+        and wait for in-flight prefills to land.  Queued / ready / active
+        requests stay put; ``resume`` restarts the chain."""
+        self._paused = True
+        deadline = time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                if not self._running and self._inflight_prefills == 0:
+                    return
+            if time.perf_counter() > deadline:
+                raise TimeoutError(f"engine {self.scfg.name}: pause timed out")
+            time.sleep(0.002)
+
+    def resume(self) -> None:
+        self._paused = False
+        self._ensure_running()
+
+    def close_for_migration(self, key: Tuple[int, int]) -> None:
+        """Point of no return for live migration: every subsequent
+        ``submit`` raises :class:`UnknownGid` for ``key`` (this engine's
+        GID), so remote callers' retry loop re-resolves through the AGAS
+        root — which, once the destination adopts, names the new home."""
+        self._migrate_key = tuple(key)
+
+    def take_requests(self) -> Dict[str, Any]:
+        """Drain every in-flight request into a picklable snapshot (the
+        ship half of live migration; engine must be paused).
+
+        Active slots travel with their paged KV (``snapshot_slot``) and
+        resume mid-generation at the destination; queued / prefill-ready
+        requests travel as prompts (prefill work is discarded — nothing
+        was emitted for them yet, the destination re-prefills).  Requests
+        must carry ``meta``: promises and channels are process-local, so
+        only fleet-submitted traffic (whose relay re-attaches from meta)
+        can be re-homed — anything else fails loudly rather than hang."""
+        if not self._paused or self._running:
+            raise RuntimeError("take_requests requires a paused engine")
+
+        def _entry(req: _Request, kv=None, last_tok=None) -> Dict[str, Any]:
+            if req.meta is None:
+                raise RuntimeError(
+                    f"request {req.rid} has no relay meta; only "
+                    f"fleet-submitted requests survive migration")
+            e: Dict[str, Any] = {
+                "prompt": req.prompt, "generated": req.generated,
+                "max_new": req.max_new,
+                "sampling": (req.sampling.temperature, req.sampling.top_k,
+                             req.sampling.top_p),
+                "meta": req.meta,
+            }
+            if kv is not None:
+                e["kv"] = kv
+                e["last_tok"] = last_tok
+            return e
+
+        snap: Dict[str, Any] = {"active": [], "queued": []}
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            snap["active"].append(_entry(req, self.backend.snapshot_slot(i),
+                                         int(self._tokens[i, 0])))
+            self.slots[i] = None
+            self.backend.release(i)
+            self._temp[i], self._topk[i], self._topp[i] = 0.0, 0, 1.0
+            self.c_done.increment()
+            self.c_mig_out.increment()
+        with self._lock:
+            ready, self._ready = self._ready, []
+        queued = [r for r, _c, _l, _t in ready]
+        while True:
+            try:
+                queued.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        for req in queued:
+            snap["queued"].append(_entry(req))
+            self.c_done.increment()
+            self.c_mig_out.increment()
+        return snap
+
+    def _restored_request(self, e: Dict[str, Any]) -> _Request:
+        with self._lock:
+            self._rid += 1
+            rid = self._rid
+        t, k, p = e["sampling"]
+        req = _Request(rid, list(e["prompt"]), int(e["max_new"]), Promise(),
+                       SamplingParams(t, k, p), None,
+                       generated=list(e["generated"]),
+                       submit_t=time.perf_counter(), meta=dict(e["meta"]))
+        if req.generated:  # first token happened at the source
+            req.first_token_t = req.submit_t
+        return req
+
+    def restore_requests(self, snap: Dict[str, Any],
+                         reattach: Optional[Any] = None) -> int:
+        """Install a :meth:`take_requests` snapshot into this (paused)
+        engine.  ``reattach(req)`` runs for every rebuilt request so the
+        caller can wire a stream / completion hook from ``req.meta``
+        before any token flows.  Returns the number of requests adopted."""
+        if not self._paused or self._running:
+            raise RuntimeError("restore_requests requires a paused engine")
+        n = 0
+        for e in snap["active"]:
+            free = next((i for i, s in enumerate(self.slots) if s is None),
+                        None)
+            if free is None:
+                raise RuntimeError("destination engine has no free slot for "
+                                   "a migrated request")
+            if not self.backend.restore_slot(free, e["kv"]):
+                raise RuntimeError("destination page pool cannot hold a "
+                                   "migrated request's KV")
+            req = self._restored_request(e)
+            if reattach is not None:
+                reattach(req)
+            self.slots[free] = req
+            self._tokens[free, 0] = int(e["last_tok"])
+            self._temp[free] = req.sampling.temperature
+            self._topk[free] = req.sampling.top_k
+            self._topp[free] = req.sampling.top_p
+            self.c_sub.increment()
+            self.c_mig_in.increment()
+            n += 1
+        for e in snap["queued"]:
+            req = self._restored_request(e)
+            if reattach is not None:
+                reattach(req)
+            self._queue.put(req)
+            self.c_sub.increment()
+            self.c_mig_in.increment()
+            n += 1
+        return n
 
     # ------------------------------------------------------------ admission
     def _bucket_for(self, n: int) -> int:
@@ -567,6 +745,10 @@ class Engine:
 
     def _step(self) -> None:
         """One link of the decode continuation chain."""
+        if self._paused:  # quiesce at the step boundary; resume() restarts
+            with self._lock:
+                self._running = False
+            return
         if self.scfg.pipeline_admission:
             self._pump_prefills()
             self._integrate_ready()

@@ -33,7 +33,7 @@ Performance counters::
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -158,6 +158,48 @@ class PagedKVCache:
             self.g_in_use.set(float(self.pages_in_use()))
         self.page_table[slot, :] = 0
         self.pos[slot] = 0
+
+    # ------------------------------------------------------- migration i/o
+    def snapshot_slot(self, slot: int) -> Dict[str, Any]:
+        """Host copy of one slot's live KV state: the pages it owns (in
+        page-table order) gathered out of every pool, plus its position.
+        This is the unit live engine migration ships — pages for *live
+        tokens only*, never the whole pool."""
+        pages = self._owned[slot]
+        ids = np.asarray(pages, np.int32)
+        return {
+            "pos": int(self.pos[slot]),
+            "pages": {k: np.asarray(jax.device_get(pool[:, ids]))
+                      for k, pool in self.pools.items()} if pages else {},
+            "n_pages": len(pages),
+        }
+
+    def restore_slot(self, slot: int, snap: Dict[str, Any]) -> bool:
+        """Re-home a snapshotted slot into *this* pool: allocate fresh pages
+        (the page ids are locality-local — only the contents travel) and
+        scatter the shipped KV into them.  Returns False when this pool
+        cannot hold the slot (caller must not have dropped the source
+        yet)."""
+        assert not self._owned[slot], f"slot {slot} still owns pages"
+        npg = int(snap["n_pages"])
+        if npg == 0:
+            self.pos[slot] = snap["pos"]
+            return True
+        if npg > self.max_pages_per_req:
+            return False
+        pages = self._take(npg)
+        if pages is None:
+            return False
+        ids = jnp.asarray(pages, jnp.int32)
+        for key in self.pools:
+            self.pools[key] = _scatter_pages(self.pools[key],
+                                             jnp.asarray(snap["pages"][key]),
+                                             ids)
+        self._owned[slot] = pages
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :npg] = pages
+        self.pos[slot] = snap["pos"]
+        return True
 
     # ------------------------------------------------------------- step i/o
     def device_cache(self) -> Dict[str, jax.Array]:

@@ -1,5 +1,5 @@
-"""Multi-engine router: least-loaded dispatch over local *and remote*
-engine replicas.
+"""Multi-engine router: SLO-tiered, fault-tolerant least-loaded dispatch
+over local *and remote* engine replicas.
 
 Scaling past one engine means scaling past one decode chain: each
 :class:`~repro.serve.engine.Engine` replica owns its own page pool, decode
@@ -8,31 +8,41 @@ coordination point.  Dispatch follows the message-cost lens of the HPX+LCI
 study (PAPERS.md): the decision reads *locally held* state — local engines
 publish ``submitted - completed`` counters, remote engines a load estimate
 maintained from (a) this router's own in-flight submissions and (b) the
-authoritative load the engine's locality *gossips back over the
-parcelport*, piggybacked on every result frame — so routing a request
-costs zero extra messages; there is no global queue, no barrier, and
-replicas never talk to each other.  This is the paper's "decentralized
-control flow" one level up from the scheduler.
+authoritative load **and KV-page occupancy** the engine's locality gossips
+back, piggybacked on every completion parcel — so routing a request costs
+zero extra messages; there is no global queue, no barrier, and replicas
+never talk to each other.  This is the paper's "decentralized control
+flow" one level up from the scheduler.
 
-With :mod:`repro.net` bootstrapped, :meth:`Router.over_localities` places
-one engine per locality (each its own OS process: its own GIL, scheduler,
-page pool) and fronts them uniformly: a :class:`RemoteEngine` handle ships
-``submit`` as a parcel to the engine's locality and completes the caller's
-Future from the result frame.  Replicas build identical parameters from
-the same seed — on TPU they would be distinct meshes or pods; on host they
-are separate processes, which is what makes CPU-bound serving actually
-scale (one GIL per locality).
+The fleet tier (``repro.fleet``) layers three behaviors on top:
+
+- **SLO tiers** — engines carry a tier label (``interactive`` / ``batch``
+  / untiered); ``submit(..., slo=...)`` prefers same-tier engines, so a
+  batch flood deepens batch queues without touching interactive p99.
+  Batch submits additionally pass an admission gate driven by gossiped
+  occupancy; gated requests park in a FIFO until ``release_gated``.
+- **Failover** — a dead engine locality surfaces as
+  :class:`~repro.net.parcelport.PortClosed`; the router evicts the engine
+  and retries the submit on a healthy peer (idempotent: a streamed
+  request is retried only when zero tokens were delivered — a broken
+  prefix is :class:`~repro.serve.relay.StreamBroken`, never re-run).
+- **Elasticity** — ``add_engine`` / ``remove_engine`` / ``suspend`` admit
+  and retire replicas on a *running* router (spawn, drain, migrate).
 
 Counters::
 
     /serve{router}/requests/dispatched           cumulative
     /serve{router}/dispatch/<engine-name>        cumulative per replica
     /serve{router}/load/<engine-name>            gauge, gossiped (remote)
+    /serve{router}/failover/{evicted,retried,exhausted}   cumulative
+    /serve{router}/admission/{gated,released}    cumulative
+    /serve{router}/admission/depth               gauge
 """
 
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -45,6 +55,11 @@ from repro.models.model import Model
 from repro.serve.engine import Engine, SamplingParams, ServeConfig
 
 ENGINE_NAME_PREFIX = "/engines/"
+
+# SLO tier labels (re-exported by repro.fleet.slo — defined here so the
+# serve layer never imports the fleet layer)
+TIER_INTERACTIVE = "interactive"
+TIER_BATCH = "batch"
 
 
 def engine_name(e: Any) -> str:
@@ -75,7 +90,9 @@ def build_engine(arch: str, smoke: bool, plan: str,
     Params come from the shared init seed, so replicas built here are
     identical on every locality without ever moving weights — the
     greedy-parity guarantee depends on local and remote spawns sharing
-    this exact path."""
+    this exact path.  Live migration depends on it too: the destination
+    stages an identical engine shell and only the KV pages + request
+    state travel."""
     from repro.configs import get_config
     from repro.dist.plan import get_plan
     from repro.models.model import build_model
@@ -105,9 +122,10 @@ def _spawn_engine(rt, arch: str, smoke: bool, plan: str,
 def _engine_submit(engine: Engine, prompt: List[int], max_new: Optional[int],
                    sampling: Optional[SamplingParams]
                    ) -> Tuple[List[int], float]:
-    """Runs at the engine's locality; blocks a pool worker (help-along) and
-    returns ``(tokens, load-after-completion)`` — the second element is the
-    gossip payload the result frame carries back."""
+    """Blocking submit at the engine's locality (help-along keeps the pool
+    live); returns ``(tokens, load)``.  The fleet path uses the
+    non-blocking :func:`repro.serve.relay._fleet_submit` instead — this
+    remains the minimal one-shot spelling."""
     tokens = engine.submit(prompt, max_new, sampling).get(timeout=600)
     return tokens, engine.load()
 
@@ -117,7 +135,14 @@ class RemoteEngine:
 
     ``load()`` needs no wire traffic: it is the max of this router's own
     in-flight count and the engine-side load gossiped back on the last
-    result frame (both local reads — zero-message dispatch)."""
+    completion parcel (both local reads — zero-message dispatch).  The
+    same parcel carries the engine's KV-page occupancy, which is what the
+    fleet admission controller reads — "gossiped occupancy", not a poll.
+
+    Submits ride the relay (:mod:`repro.serve.relay`): the ack parcel is
+    gid-targeted, so after a live migration the UnknownGid retry re-routes
+    it to the engine's new home without this handle doing anything —
+    ``locality`` is then updated by the migration coordinator."""
 
     def __init__(self, net, locality: int, gid: _agas.GID, name: str):
         self.net = net
@@ -126,62 +151,113 @@ class RemoteEngine:
         self.name = name
         self._inflight = 0
         self._gossip = 0.0
+        self._occ = 0.0
         self._lock = threading.Lock()
         self._c_load = _counters.default().gauge(
             f"/serve{{router}}/load/{name}")
 
     def submit(self, prompt: List[int], max_new: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
-               stream: Optional[Channel] = None) -> Future:
-        if stream is not None:
-            raise ValueError(
-                "streaming channels are per-process; submit to a local "
-                "engine or consume the remote future instead")
+               stream: Optional[Channel] = None,
+               meta: Optional[Dict[str, Any]] = None) -> Future:
         from repro.net import remote as _remote
+        from repro.serve import relay as _relay
 
-        inner = _remote.apply_remote(_engine_submit, self.gid, list(prompt),
-                                     max_new, sampling)
-        # count in-flight only once the submit is actually in motion — a
-        # synchronous apply_remote failure must not inflate load() forever
-        with self._lock:
-            self._inflight += 1
         promise: Promise = Promise()
 
-        def done(f: Future) -> None:
+        def on_result(ok: bool, payload: Any,
+                      gossip: Optional[Dict[str, float]]) -> None:
             with self._lock:
                 self._inflight -= 1
-                exc = f.exception()
-                if exc is None:
-                    tokens, load = f._value
-                    self._gossip = float(load)
-                    self._c_load.set(self._gossip)
-            if exc is None:
-                promise.set_value(tokens)
+                if gossip:
+                    self._gossip = float(gossip.get("load", 0.0))
+                    self._occ = float(gossip.get("occ", self._occ))
+                if self._inflight == 0:
+                    # done-parcels execute on the io pool and can apply out
+                    # of order; with nothing outstanding from this (sole)
+                    # client, any gossiped load is stale — truth is zero
+                    self._gossip = 0.0
+                self._c_load.set(self._gossip)
+            if ok:
+                promise.set_value(payload)
             else:
-                promise.set_exception(exc)
+                promise.set_exception(payload)
 
-        inner.on_ready(done)
+        sid = _relay.open_sink(self.net, stream, self.locality, on_result)
+        with self._lock:
+            self._inflight += 1
+        ack = _remote.apply_remote(_relay._fleet_submit, self.gid,
+                                   list(prompt), max_new, sampling,
+                                   self.net.locality, sid,
+                                   stream is not None)
+
+        def acked(f: Future) -> None:
+            exc = f.exception()
+            if exc is not None:
+                # the engine never accepted the request: fail/abort the
+                # sink (idempotent — a no-op if a done-parcel landed first)
+                _relay.abort(sid, exc)
+
+        ack.on_ready(acked)
         return promise.future()
 
-    def submit_stream(self, *a: Any, **kw: Any):
-        raise ValueError("streaming is local-only; see RemoteEngine.submit")
+    def submit_stream(self, prompt: List[int],
+                      max_new: Optional[int] = None,
+                      sampling: Optional[SamplingParams] = None
+                      ) -> Tuple[Channel, Future]:
+        ch: Channel = Channel()
+        return ch, self.submit(prompt, max_new, sampling, stream=ch)
 
     def load(self) -> float:
         with self._lock:
             return float(max(self._gossip, self._inflight))
 
+    def occupancy(self) -> float:
+        with self._lock:
+            return self._occ
+
 
 # ------------------------------------------------------------------- router
 class Router:
-    def __init__(self, engines: List[Any]):
+    def __init__(self, engines: List[Any],
+                 tiers: Optional[Dict[str, Optional[str]]] = None):
         assert engines, "router needs at least one engine"
-        self.engines = engines
+        self.engines = list(engines)
+        self._tiers: Dict[str, Optional[str]] = {
+            engine_name(e): (tiers or {}).get(engine_name(e))
+            for e in engines
+        }
+        self._dead: set = set()       # evicted by failover
+        self._suspended: set = set()  # mid-migration: no new dispatch
+        self._lock = threading.Lock()
+        # construction recipe (over_localities): what migration staging and
+        # elastic growth need to build an identical engine elsewhere
+        self.spec: Optional[Dict[str, Any]] = None
+        # fleet admission gate (AdmissionController-alike with .allow());
+        # installed by the fleet layer, absent → batch is never gated
+        self.admission: Optional[Any] = None
+        self.max_failover = 2
+        self._gated: deque = deque()
+
         reg = _counters.default()
         self.c_dispatched = reg.counter("/serve{router}/requests/dispatched")
-        self._c_per_engine = [
-            reg.counter(f"/serve{{router}}/dispatch/{engine_name(e)}")
-            for e in engines
-        ]
+        self._c_dispatch: Dict[str, Any] = {}
+        for e in engines:
+            self._dispatch_counter(engine_name(e))
+        self.c_evicted = reg.counter("/serve{router}/failover/evicted")
+        self.c_retried = reg.counter("/serve{router}/failover/retried")
+        self.c_exhausted = reg.counter("/serve{router}/failover/exhausted")
+        self.c_gated = reg.counter("/serve{router}/admission/gated")
+        self.c_released = reg.counter("/serve{router}/admission/released")
+        self.g_gate_depth = reg.gauge("/serve{router}/admission/depth")
+
+    def _dispatch_counter(self, name: str):
+        c = self._c_dispatch.get(name)
+        if c is None:
+            c = _counters.default().counter(
+                f"/serve{{router}}/dispatch/{name}")
+            self._c_dispatch[name] = c
+        return c
 
     # ------------------------------------------------------------- factory
     @classmethod
@@ -199,7 +275,9 @@ class Router:
     @classmethod
     def over_localities(cls, net, arch: str, scfg: ServeConfig,
                         smoke: bool = True, plan: str = "serve",
-                        timeout: float = 600.0) -> "Router":
+                        timeout: float = 600.0,
+                        tiers: Optional[Dict[str, Optional[str]]] = None
+                        ) -> "Router":
         """One engine per locality: a local Engine at this locality, a
         :class:`RemoteEngine` handle per worker locality (spawned through
         ``run_on`` — the engine is built *where it runs*, by the same
@@ -221,34 +299,230 @@ class Router:
         for loc, name, fut in spawns:
             key = fut.get(timeout=timeout)
             engines.append(RemoteEngine(net, loc, _agas.GID(*key), name))
-        return cls(engines)
+        router = cls(engines, tiers=tiers)
+        router.spec = {"arch": arch, "smoke": smoke, "plan": plan,
+                       "scfg_kwargs": dict(scfg.__dict__)}
+        return router
+
+    # ---------------------------------------------------------- membership
+    def engine(self, name: str) -> Any:
+        for e in self.engines:
+            if engine_name(e) == name:
+                return e
+        raise KeyError(f"no engine named {name!r}")
+
+    def add_engine(self, e: Any, tier: Optional[str] = None) -> None:
+        """Admit a replica into a *running* router (elastic growth)."""
+        name = engine_name(e)
+        self._dispatch_counter(name)
+        with self._lock:
+            self.engines = [x for x in self.engines
+                            if engine_name(x) != name] + [e]
+            self._tiers[name] = tier
+            self._dead.discard(name)
+            self._suspended.discard(name)
+
+    def remove_engine(self, name: str) -> Optional[Any]:
+        """Take a replica out of dispatch (retirement drain starts here)."""
+        with self._lock:
+            found = next((e for e in self.engines
+                          if engine_name(e) == name), None)
+            self.engines = [e for e in self.engines
+                            if engine_name(e) != name]
+            self._tiers.pop(name, None)
+            self._dead.discard(name)
+            self._suspended.discard(name)
+        return found
+
+    def set_tier(self, name: str, tier: Optional[str]) -> None:
+        with self._lock:
+            self._tiers[name] = tier
+
+    def tier_of(self, name: str) -> Optional[str]:
+        with self._lock:
+            return self._tiers.get(name)
+
+    def suspend(self, name: str) -> None:
+        """Stop dispatching to an engine without removing it (the
+        migration cutover window)."""
+        with self._lock:
+            self._suspended.add(name)
+
+    def resume(self, name: str) -> None:
+        with self._lock:
+            self._suspended.discard(name)
+
+    def _evict(self, name: str) -> None:
+        with self._lock:
+            if name in self._dead:
+                return
+            self._dead.add(name)
+        self.c_evicted.increment()
+
+    def revive(self, name: str) -> None:
+        with self._lock:
+            self._dead.discard(name)
 
     # ------------------------------------------------------------ dispatch
     def loads(self) -> List[float]:
         return [e.load() for e in self.engines]
 
-    def pick(self, local_only: bool = False) -> int:
+    def occupancy(self) -> float:
+        """Max live-engine KV occupancy: local engines read directly,
+        remote ones report what their locality last gossiped.  This is
+        the fleet admission signal — zero extra messages."""
+        occs = []
+        with self._lock:
+            engines = [e for e in self.engines
+                       if engine_name(e) not in self._dead]
+        for e in engines:
+            try:
+                occs.append(float(e.occupancy()))
+            except Exception:  # noqa: BLE001 — engine mid-teardown
+                pass
+        return max(occs) if occs else 0.0
+
+    def pick(self, local_only: bool = False,
+             slo: Optional[str] = None) -> int:
         """Least-loaded replica (first wins ties — stable under no load).
 
-        ``local_only`` restricts to in-process engines — the streaming
-        path: token channels cannot cross a process boundary."""
-        loads = self.loads()
-        candidates = [i for i, e in enumerate(self.engines)
-                      if not (local_only and isinstance(e, RemoteEngine))]
+        ``slo``: prefer engines labeled with that tier; fall back to
+        untiered engines, then to anything alive — a tier label steers,
+        it never strands a request.  ``local_only`` restricts to
+        in-process engines (kept for API compatibility; streaming crosses
+        localities through the relay now)."""
+        with self._lock:
+            dead = set(self._dead) | set(self._suspended)
+            tiers = dict(self._tiers)
+            engines = list(self.engines)
+        candidates = [i for i, e in enumerate(engines)
+                      if engine_name(e) not in dead
+                      and not (local_only and isinstance(e, RemoteEngine))]
         if not candidates:
-            raise ValueError("no local engine available for streaming")
-        return min(candidates, key=lambda i: loads[i])
+            raise ValueError("no engine available for dispatch")
+        if slo is not None:
+            same = [i for i in candidates
+                    if tiers.get(engine_name(engines[i])) == slo]
+            neutral = [i for i in candidates
+                       if tiers.get(engine_name(engines[i])) is None]
+            candidates = same or neutral or candidates
+        loads = [engines[i].load() for i in candidates]
+        return candidates[loads.index(min(loads))]
 
     def submit(self, prompt: List[int], max_new: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
-               stream: Optional[Channel] = None) -> Future:
-        i = self.pick(local_only=stream is not None)
+               stream: Optional[Channel] = None,
+               slo: Optional[str] = None) -> Future:
+        promise: Promise = Promise()
+        if (slo == TIER_BATCH and self.admission is not None
+                and not self.admission.allow()):
+            # backpressure by occupancy, not queue depth: park until the
+            # fleet controller's release tick
+            with self._lock:
+                self._gated.append((list(prompt), max_new, sampling, stream,
+                                    slo, promise))
+                depth = len(self._gated)
+            self.c_gated.increment()
+            self.g_gate_depth.set(float(depth))
+            return promise.future()
+        self._dispatch(list(prompt), max_new, sampling, stream, slo,
+                       promise, 0)
+        return promise.future()
+
+    def release_gated(self, limit: Optional[int] = None) -> int:
+        """Dispatch parked batch requests while the admission gate allows;
+        called from the fleet controller tick.  Returns how many moved."""
+        n = 0
+        while limit is None or n < limit:
+            if self.admission is not None and not self.admission.allow():
+                break
+            with self._lock:
+                if not self._gated:
+                    break
+                prompt, max_new, sampling, stream, slo, promise = \
+                    self._gated.popleft()
+                depth = len(self._gated)
+            self.c_released.increment()
+            self.g_gate_depth.set(float(depth))
+            self._dispatch(prompt, max_new, sampling, stream, slo,
+                           promise, 0)
+            n += 1
+        return n
+
+    def gated_depth(self) -> int:
+        with self._lock:
+            return len(self._gated)
+
+    def _dispatch(self, prompt: List[int], max_new: Optional[int],
+                  sampling: Optional[SamplingParams],
+                  stream: Optional[Channel], slo: Optional[str],
+                  promise: Promise, attempt: int) -> None:
+        try:
+            i = self.pick(slo=slo)
+        except ValueError as e:
+            self._terminal(stream, promise, e)
+            return
+        engine = self.engines[i]
+        name = engine_name(engine)
         self.c_dispatched.increment()
-        self._c_per_engine[i].increment()
-        return self.engines[i].submit(prompt, max_new, sampling, stream)
+        self._dispatch_counter(name).increment()
+        try:
+            fut = engine.submit(prompt, max_new, sampling, stream)
+        except BaseException as exc:  # noqa: BLE001 — sync submit failure
+            self._failover(exc, name, prompt, max_new, sampling, stream,
+                           slo, promise, attempt)
+            return
+
+        def done(f: Future) -> None:
+            exc = f.exception()
+            if exc is None:
+                promise.set_value(f._value)
+            else:
+                self._failover(exc, name, prompt, max_new, sampling, stream,
+                               slo, promise, attempt)
+
+        fut.on_ready(done)
+
+    def _failover(self, exc: BaseException, name: str, prompt: List[int],
+                  max_new: Optional[int],
+                  sampling: Optional[SamplingParams],
+                  stream: Optional[Channel], slo: Optional[str],
+                  promise: Promise, attempt: int) -> None:
+        """Dead-engine handling: evict and retry on a healthy replica.
+
+        Retriable ⇔ the request observably did nothing and the failure
+        names a replica-level cause: *PortClosed* (locality died — evict
+        the engine) or *UnknownGid* (engine mid-migration cutover outlived
+        the resolver's retry budget — do NOT evict, it is alive elsewhere).
+        A stream that already delivered tokens comes back as StreamBroken
+        and is never re-run (the retry would re-deliver a prefix the
+        consumer already consumed)."""
+        from repro.net import parcelport as _pp
+        from repro.net.locality import UnknownGid
+
+        if isinstance(exc, (_pp.PortClosed, UnknownGid)):
+            if isinstance(exc, _pp.PortClosed):
+                self._evict(name)
+            if attempt < self.max_failover:
+                self.c_retried.increment()
+                self._dispatch(prompt, max_new, sampling, stream, slo,
+                               promise, attempt + 1)
+                return
+            self.c_exhausted.increment()
+        self._terminal(stream, promise, exc)
+
+    @staticmethod
+    def _terminal(stream: Optional[Channel], promise: Promise,
+                  exc: BaseException) -> None:
+        if stream is not None and not stream.is_closed():
+            stream.close(exc)  # blocked readers see the failure, in order
+        try:
+            promise.set_exception(exc)
+        except Exception:  # noqa: BLE001 — relay already completed it
+            pass
 
     def submit_stream(self, prompt: List[int], max_new: Optional[int] = None,
-                      sampling: Optional[SamplingParams] = None
-                      ) -> Tuple[Channel, Future]:
+                      sampling: Optional[SamplingParams] = None,
+                      slo: Optional[str] = None) -> Tuple[Channel, Future]:
         ch: Channel = Channel()
-        return ch, self.submit(prompt, max_new, sampling, stream=ch)
+        return ch, self.submit(prompt, max_new, sampling, stream=ch, slo=slo)

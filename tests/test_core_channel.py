@@ -51,6 +51,71 @@ def test_channel_close_wakes_blocked_waiters():
         f.get(timeout=1)
 
 
+def test_channel_close_with_exception_reaches_blocked_readers():
+    """close(exc) must deliver the producer's failure to readers already
+    blocked in get() — they cannot observe a bare ChannelClosed when the
+    stream died of something specific."""
+    ch = Channel()
+    errs = []
+
+    def consumer():
+        try:
+            ch.get(timeout=5)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=consumer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    while len(ch._waiters) < 3:  # all three parked before the close
+        pass
+    boom = RuntimeError("engine fell over")
+    ch.close(boom)
+    for t in threads:
+        t.join(timeout=5)
+    assert len(errs) == 3
+    assert all(e is boom for e in errs)
+
+
+def test_channel_close_exception_takes_fifo_position_after_buffer():
+    """Tokens produced before the failure drain first, *then* the error —
+    a streaming consumer sees everything the producer actually emitted."""
+    ch = Channel()
+    ch.set("a")
+    ch.set("b")
+    boom = ValueError("mid-stream death")
+    ch.close(boom)
+    assert ch.get(timeout=1) == "a"
+    assert ch.get(timeout=1) == "b"
+    with pytest.raises(ValueError, match="mid-stream death"):
+        ch.get(timeout=1)
+    # and it keeps raising the same failure, not a bare ChannelClosed
+    with pytest.raises(ValueError):
+        ch.get_future().get(timeout=1)
+
+
+def test_channel_second_close_keeps_first_outcome():
+    ch = Channel()
+    boom = RuntimeError("first")
+    ch.close(boom)
+    ch.close(ValueError("second"))  # no-op: first outcome wins
+    with pytest.raises(RuntimeError, match="first"):
+        ch.get(timeout=1)
+
+
+def test_channel_close_exception_not_swallowed_by_iteration():
+    """__iter__ stops only at ChannelClosed; an error close propagates out
+    of the for-loop instead of silently ending it."""
+    ch = Channel()
+    ch.set(1)
+    ch.close(RuntimeError("stream broke"))
+    got = []
+    with pytest.raises(RuntimeError, match="stream broke"):
+        for tok in ch:
+            got.append(tok)
+    assert got == [1]
+
+
 def test_channel_cross_thread_stream():
     ch = Channel()
     got = []

@@ -1,0 +1,166 @@
+"""Fleet control plane, no network: Policy threshold/sustain/cooldown
+semantics, AdmissionController hysteresis, FleetController tick wiring
+(measure → decide → act → release) against stub engines."""
+
+from repro.fleet import AdmissionController, FleetController, Policy
+from repro.fleet.policy import EngineView, FleetView
+
+
+def _view(occ=0.0, now=0.0, gated=0, engines=()):
+    return FleetView(now=now, engines=list(engines), occupancy=occ,
+                     gated_depth=gated)
+
+
+# ------------------------------------------------------------------- Policy
+def test_policy_fires_up_after_sustain_ticks():
+    p = Policy("scale", metric=lambda v: v.occupancy,
+               high=0.8, up="grow", sustain=3, cooldown=0.0)
+    assert p.evaluate(_view(0.9), now=1.0) is None
+    assert p.evaluate(_view(0.9), now=2.0) is None
+    assert p.evaluate(_view(0.9), now=3.0) == "grow"
+
+
+def test_policy_streak_resets_on_dip():
+    p = Policy("scale", metric=lambda v: v.occupancy,
+               high=0.8, up="grow", sustain=2, cooldown=0.0)
+    assert p.evaluate(_view(0.9), now=1.0) is None
+    assert p.evaluate(_view(0.5), now=2.0) is None  # dip resets the streak
+    assert p.evaluate(_view(0.9), now=3.0) is None
+    assert p.evaluate(_view(0.9), now=4.0) == "grow"
+
+
+def test_policy_cooldown_silences_refire():
+    p = Policy("scale", metric=lambda v: v.occupancy,
+               high=0.8, up="grow", sustain=1, cooldown=10.0)
+    assert p.evaluate(_view(0.9), now=0.0) == "grow"
+    assert p.evaluate(_view(0.9), now=5.0) is None   # inside cooldown
+    assert p.evaluate(_view(0.9), now=11.0) == "grow"
+
+
+def test_policy_two_sided():
+    p = Policy("elastic", metric=lambda v: v.total_load(),
+               high=8.0, up="grow", low=1.0, down="shrink",
+               sustain=1, cooldown=0.0)
+    heavy = _view(engines=[EngineView("e", 1, None, 9.0, 0.5)])
+    idle = _view(engines=[EngineView("e", 1, None, 0.0, 0.1)])
+    assert p.evaluate(heavy, now=0.0) == "grow"
+    assert p.evaluate(idle, now=1.0) == "shrink"
+    assert p.evaluate(_view(engines=[EngineView("e", 1, None, 4.0, 0.3)]),
+                      now=2.0) is None
+
+
+def test_policy_one_sided_requires_pairing():
+    import pytest
+
+    with pytest.raises(AssertionError):
+        Policy("bad", metric=lambda v: 0.0, high=1.0)  # high without up
+
+
+# -------------------------------------------------------------- Admission
+def test_admission_hysteresis_edges():
+    sig = {"occ": 0.0}
+    gate = AdmissionController(lambda: sig["occ"], high=0.85, low=0.60)
+    assert gate.allow()
+    sig["occ"] = 0.86
+    assert not gate.allow()       # closed at high
+    sig["occ"] = 0.70
+    assert not gate.allow()       # still closed between low and high
+    sig["occ"] = 0.59
+    assert gate.allow()           # reopened at low
+    sig["occ"] = 0.84
+    assert gate.allow()           # stays open below high
+
+
+def test_admission_fails_open_without_signal():
+    def broken():
+        raise RuntimeError("no gossip yet")
+
+    gate = AdmissionController(broken, high=0.85, low=0.60)
+    assert gate.allow()
+
+
+# ---------------------------------------------------------- FleetController
+class _StubEngine:
+    def __init__(self, name, load=0.0, occ=0.0):
+        self.name = name
+        self._load = load
+        self._occ = occ
+
+    def load(self):
+        return self._load
+
+    def occupancy(self):
+        return self._occ
+
+
+class _StubRouter:
+    def __init__(self, engines):
+        self.engines = engines
+        self.released = 0
+
+    def tier_of(self, name):
+        return None
+
+    def gated_depth(self):
+        return 0
+
+    def release_gated(self, limit=None):
+        self.released += 1
+        return 0
+
+
+class _StubNet:
+    locality = 0
+
+    def live_ids(self):
+        return [0]
+
+
+def _local_sampler():
+    from repro.obs.sampler import FleetSampler
+
+    return FleetSampler(pattern="/serve*", interval=0.01)  # net=None: local
+
+
+def test_controller_tick_measures_decides_acts(rt):
+    router = _StubRouter([_StubEngine("a", load=2.0, occ=0.9),
+                          _StubEngine("b", load=1.0, occ=0.4)])
+    fired = []
+    ctl = FleetController(_StubNet(), router, interval=0.01,
+                          sampler=_local_sampler())
+    ctl.add_policy(Policy("scale", metric=lambda v: v.occupancy,
+                          high=0.8, up="grow", sustain=1, cooldown=0.0))
+    ctl.register("grow", lambda view: fired.append(view.occupancy))
+    view = ctl.tick()
+    assert view.occupancy == 0.9          # max across engines
+    assert view.total_load() == 3.0
+    assert fired == [0.9]                 # actuator ran with the view
+    assert router.released == 1           # release sweep every tick
+
+
+def test_controller_actuator_failure_is_contained(rt):
+    router = _StubRouter([_StubEngine("a", occ=1.0)])
+    ctl = FleetController(_StubNet(), router, interval=0.01,
+                          sampler=_local_sampler())
+    ctl.add_policy(Policy("scale", metric=lambda v: v.occupancy,
+                          high=0.5, up="grow", sustain=1, cooldown=0.0))
+
+    def boom(view):
+        raise RuntimeError("spawn failed")
+
+    ctl.register("grow", boom)
+    before = ctl.c_action_errors.get_value()
+    ctl.tick()                            # must not raise
+    assert ctl.c_action_errors.get_value() == before + 1
+
+
+def test_controller_unknown_actuator_counts_error(rt):
+    router = _StubRouter([_StubEngine("a", occ=1.0)])
+    ctl = FleetController(_StubNet(), router, interval=0.01,
+                          sampler=_local_sampler())
+    ctl.add_policy(Policy("scale", metric=lambda v: v.occupancy,
+                          high=0.5, up="nonexistent", sustain=1,
+                          cooldown=0.0))
+    before = ctl.c_action_errors.get_value()
+    ctl.tick()
+    assert ctl.c_action_errors.get_value() == before + 1

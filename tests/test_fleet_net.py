@@ -1,0 +1,178 @@
+"""Fleet control plane over real localities: elastic grow/retire, SLO
+admission gating, zero-drop live engine migration, router failover onto a
+healthy replica when a locality dies, and the fault-tolerant counter sweep.
+
+Tests in this module share one running fleet and are order-dependent (the
+topology evolves: grow -> migrate -> retire -> crash)."""
+
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro import net as rnet
+from repro.core.future import Channel
+from repro.fleet import (AdmissionController, grow_engine, migrate_engine,
+                         retire_engine)
+from repro.serve.engine import ServeConfig
+from repro.serve.router import (TIER_BATCH, TIER_INTERACTIVE, RemoteEngine,
+                                Router)
+
+pytestmark = pytest.mark.usefixtures("rt")
+
+
+def _relay_total(name: str) -> float:
+    return sum(v for _, v in
+               core.counters.query(f"/serve{{relay}}/tokens/{name}"))
+
+
+@pytest.fixture(scope="module")
+def fleet(rt):
+    pools = {"default": 4, "prefill": 2, "io": 1}
+    with rnet.running(2, pools=pools, worker_pools=pools) as net:
+        scfg = ServeConfig(max_batch=2, cache_len=96, max_new_tokens=24)
+        router = Router.over_localities(net, "qwen25_3b", scfg, smoke=True,
+                                        plan="serve")
+        yield net, router
+
+
+def _prompts(n, rng=None):
+    rng = rng or np.random.default_rng(7)
+    return [rng.integers(1, 512, size=rng.integers(4, 16)).tolist()
+            for _ in range(n)]
+
+
+def test_grow_engine_joins_running_fleet(fleet):
+    net, router = fleet
+    before = set(net.live_ids())
+    e = grow_engine(net, router, tier=TIER_BATCH)
+    assert e.locality not in before
+    assert net.is_live(e.locality)
+    assert router.engine(e.name) is e
+    assert router.tier_of(e.name) == TIER_BATCH
+    # the newcomer actually serves
+    out = e.submit(list(range(1, 9))).get(timeout=600)
+    assert len(out) == 25  # max_new + prefill token
+    # and it decodes identically to the seed replicas (greedy parity)
+    assert out == router.engines[0].submit(list(range(1, 9))).get(timeout=600)
+
+
+def test_slo_routing_prefers_tier(fleet):
+    net, router = fleet
+    interactive = router.engines[1]  # the loc-1 remote
+    router.set_tier(interactive.name, TIER_INTERACTIVE)
+    name = f"/serve{{router}}/dispatch/{interactive.name}"
+    before = dict(core.counters.query(name))[name]
+    futs = [router.submit(p, slo=TIER_INTERACTIVE) for p in _prompts(4)]
+    for f in futs:
+        assert len(f.get(timeout=600)) == 25
+    after = dict(core.counters.query(name))[name]
+    assert after - before == 4  # every interactive submit hit its tier
+
+
+def test_admission_gate_parks_then_releases_batch(fleet):
+    net, router = fleet
+    sig = {"occ": 0.95}
+    router.admission = AdmissionController(lambda: sig["occ"],
+                                           high=0.85, low=0.60)
+    assert not router.admission.allow()  # gate closed by synthetic signal
+    futs = [router.submit(p, slo=TIER_BATCH) for p in _prompts(3)]
+    assert router.gated_depth() == 3
+    assert not any(f.is_ready() for f in futs)
+    sig["occ"] = 0.10  # pressure gone: next release tick drains the park
+    assert router.release_gated() == 3
+    assert router.gated_depth() == 0
+    for f in futs:
+        assert len(f.get(timeout=600)) == 25
+    router.admission = None
+
+
+def test_live_migration_zero_dropped_zero_duplicated(fleet):
+    """The headline: move engine#1 (locality 1) to locality 2 while it is
+    streaming.  Every stream must deliver exactly the tokens its future
+    returns — no gap at the cutover, no duplicate — and the relay's
+    duplicate counter must not move."""
+    net, router = fleet
+    e1 = router.engine("engine#1")
+    assert isinstance(e1, RemoteEngine) and e1.locality == 1
+    dest = next(e.locality for e in router.engines
+                if isinstance(e, RemoteEngine) and e.locality != 1)
+    dups_before = _relay_total("duplicates")
+
+    # enough work that the cutover lands mid-generation: 8 requests on a
+    # max_batch=2 engine is four full decode waves
+    pairs = []
+    for p in _prompts(8):
+        ch = Channel()
+        pairs.append((ch, e1.submit(p, stream=ch)))
+    t0 = time.monotonic()
+    moved = migrate_engine(net, router, "engine#1", dest)
+    cutover = time.monotonic() - t0
+
+    for ch, fut in pairs:
+        out = fut.get(timeout=600)
+        assert list(ch) == out  # streamed == authoritative, in order
+        assert len(out) == 25
+    assert e1.locality == dest
+    assert _relay_total("duplicates") == dups_before
+    assert moved >= 0
+    mig = dict(rnet.query_counters(
+        dest, "/serve{engine#1}/requests/migrated_in"))
+    assert sum(mig.values()) == moved
+    print(f"migrated {moved} in-flight requests in {cutover:.2f}s")
+
+    # the engine keeps serving from its new home, same greedy stream
+    out = router.engine("engine#1").submit(
+        list(range(1, 9))).get(timeout=600)
+    assert out == router.engines[0].submit(list(range(1, 9))).get(timeout=600)
+
+
+def test_retire_engine_drains_then_removes_locality(fleet):
+    net, router = fleet
+    e = grow_engine(net, router)  # disposable capacity to retire
+    lid = e.locality
+    # park some work on it first so the drain loop has something to wait on
+    futs = [e.submit(p) for p in _prompts(3)]
+    for f in futs:
+        f.get(timeout=600)
+    retired = retire_engine(net, router, e.name)
+    assert retired == lid
+    assert not net.is_live(lid)
+    assert all(en.name != e.name for en in router.engines
+               if hasattr(en, "name"))
+    # fleet still serves
+    assert len(router.submit(list(range(1, 9))).get(timeout=600)) == 25
+
+
+def test_failover_and_sweep_survive_locality_crash(fleet):
+    """Kill a worker process outright: the router must evict its engines
+    and land retried submits on a healthy replica; the counter sweep must
+    report the corpse as an error marker, not raise."""
+    net, router = fleet
+    victim = max(e.locality for e in router.engines
+                 if isinstance(e, RemoteEngine))
+    doomed = [e.name for e in router.engines
+              if isinstance(e, RemoteEngine) and e.locality == victim]
+    router.max_failover = 4
+    net._procs[victim].kill()  # simulated crash, not an orderly BYE
+
+    deadline = time.monotonic() + 30
+    while victim in net.live_ids() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert victim not in net.live_ids()
+
+    # dead-peer sweep: explicit id list includes the corpse -> error marker
+    sweep = rnet.query_counters([0, victim], "/serve*")
+    assert isinstance(sweep[victim], dict) and "error" in sweep[victim]
+    assert isinstance(sweep[0], list)
+
+    # submits keep completing (failover may need a few picks to evict all
+    # of the victim's engines)
+    futs = [router.submit(p) for p in _prompts(6)]
+    for f in futs:
+        assert len(f.get(timeout=600)) == 25
+    for name in doomed:
+        assert name in router._dead
+    evicted = dict(core.counters.query("/serve{router}/failover/evicted"))
+    assert sum(evicted.values()) >= len(doomed)

@@ -13,7 +13,7 @@ def test_running_reaps_workers_when_body_raises(rt):
     procs = []
     with pytest.raises(RuntimeError, match="boom"):
         with rnet.running(3) as net:
-            procs = list(net._procs)
+            procs = list(net._procs.values())
             assert len(procs) == 2 and all(p.is_alive() for p in procs)
             raise RuntimeError("boom")
     assert rnet.current() is None, "runtime must be uninstalled"

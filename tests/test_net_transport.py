@@ -388,7 +388,7 @@ def test_pending_promise_fails_with_portclosed_on_peer_death(net_factory):
     big = np.zeros(8 << 20, dtype=np.uint8)  # forces the rendezvous tier
     fut = net.send_parcel(1, _remote._slow_sink._action_name, None,
                           (big, 30.0))
-    net._procs[0].terminate()
+    net._procs[1].terminate()
     with pytest.raises(pp.PortClosed):
         fut.get(timeout=30)
     # the port must not leak the parked out-transfer for the dead peer
@@ -403,7 +403,7 @@ def test_down_broadcast_fails_worker_to_worker_pending(net_factory):
     net = net_factory(3, pools={"default": 2, "io": 1})
     outer = rnet.run_on(1, call_slow_peer, 2)
     time.sleep(1.0)  # let the nested worker→worker call get in flight
-    net._procs[1].terminate()
+    net._procs[2].terminate()
     assert outer.get(timeout=60) == "portclosed"
 
 
