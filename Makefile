@@ -4,8 +4,8 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-serve bench-algorithms bench-net \
-	bench-net-check bench-container bench-obs bench-fleet \
+.PHONY: verify test bench bench-compare bench-serve bench-algorithms \
+	bench-net bench-net-check bench-container bench-obs bench-fleet \
 	bench-fleet-check smoke
 
 verify:
@@ -16,6 +16,12 @@ test:
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+# Regression gate: re-run the fast suites and band-check their headline
+# metrics against the committed results/ baselines (benchmarks/run.py GATES).
+bench-compare:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run \
+		--suites algorithms,obs --compare results/
 
 bench-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serve

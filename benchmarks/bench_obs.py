@@ -142,11 +142,13 @@ def _bench_overhead():
 
 
 def _bench_fleet_demo():
-    """3-locality traced serve run → one merged Perfetto-loadable JSON."""
+    """3-locality traced serve run → one merged Perfetto-loadable JSON,
+    then the ISSUE 9 analyzer over it: attribution coverage (how much of
+    each request's wall time the critical path explains) is a recorded,
+    regression-gated metric like the overhead numbers above."""
     from repro import net as rnet
-    from repro.net import remote
-    from repro.obs import export, trace
-    from repro.serve.router import Router
+    from repro.obs import attribution, export, trace
+    from repro.serve.router import TIER_BATCH, TIER_INTERACTIVE, Router
 
     trace.clear()
     with rnet.running(3) as net:
@@ -159,9 +161,12 @@ def _bench_fleet_demo():
                 ServeConfig(max_batch=4, cache_len=CACHE_LEN,
                             max_new_tokens=8, page_size=16, paged=True,
                             pipeline_admission=True),
-                smoke=True, plan="serve")
+                smoke=True, plan="serve",
+                tiers={"engine#1": TIER_INTERACTIVE, "engine#2": TIER_BATCH})
             prompts = _workload(1000, 6, seed=11)
-            outs = [router.submit(p).get(timeout=600) for p in prompts]
+            slos = [TIER_INTERACTIVE, TIER_BATCH, None] * 2
+            outs = [router.submit(p, slo=s).get(timeout=600)
+                    for p, s in zip(prompts, slos)]
             tr = export.export_chrome_trace(str(DEMO), net=net)
         finally:
             export.disable_fleet(net)
@@ -172,6 +177,10 @@ def _bench_fleet_demo():
                 if v["src"] is not None and v["dst"] is not None]
     cross = [v for v in complete if v["src"] != v["dst"]]
     pids = sorted({e["pid"] for e in tr["traceEvents"]})
+
+    cps = attribution.analyze_requests(tr)
+    report = attribution.slow_report(tr, cps)
+    fracs = [cp.fraction for cp in cps.values()]
     return {
         "localities": 3,
         "requests": len(outs),
@@ -181,6 +190,16 @@ def _bench_fleet_demo():
         "flow_links_complete": len(complete),
         "flow_links_cross_locality": len(cross),
         "all_localities_present": pids == [0, 1, 2],
+        "requests_analyzed": len(cps),
+        "attributed_fraction_min": round(min(fracs), 4) if fracs else 0.0,
+        "attributed_fraction_mean": round(sum(fracs) / len(fracs), 4)
+        if fracs else 0.0,
+        "cross_locality_requests": sum(
+            1 for cp in cps.values() if len(cp.localities()) >= 2),
+        "clock_clamps": sum(cp.clamped_count for cp in cps.values()),
+        "lossy": bool(tr.get("lossy", False)),
+        "tiers": sorted(report["tiers"]),
+        "attribution_95pct_met": bool(fracs) and min(fracs) >= 0.95,
     }
 
 
@@ -201,6 +220,10 @@ def run():
         ("obs/fleet_demo_flow_links", 0.0,
          f"{demo['flow_links_cross_locality']} cross-locality arrows, "
          f"{demo['trace_events']} events"),
+        ("obs/attribution", 0.0,
+         f"{demo['attributed_fraction_min'] * 100:.1f}% min attributed "
+         f"over {demo['requests_analyzed']} reqs (>=95% "
+         f"{'OK' if demo['attribution_95pct_met'] else 'FAIL'})"),
     ]
 
 

@@ -1,10 +1,126 @@
 """Benchmark driver — one benchmark per paper table/figure (DESIGN.md §8).
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV.
+
+``--suites a,b`` runs a subset.  ``--compare DIR`` turns the run into a
+regression gate: the headline metrics in DIR's committed BENCH_*.json
+baselines are snapshotted *before* the suites overwrite them, then the
+fresh values are checked against tolerance bands (generous for
+throughput-type metrics — CI containers are noisy — tight for the
+absolute contracts like tracing overhead).  Any band violation makes the
+exit status non-zero, so CI fails loudly with the fresh artifacts
+uploaded for diffing.
+"""
+import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
+
+# (file, dotted.path, kind, bound) — the regression contract.
+#  abs_max : fresh <= bound                      (absolute ceiling)
+#  abs_min : fresh >= bound                      (absolute floor)
+#  rel_min : fresh >= baseline * (1 - bound)     (throughput-type)
+#  rel_max : fresh <= baseline * (1 + bound)     (latency-type)
+# Relative bands are generous (50-100%): they catch order-of-magnitude
+# regressions, not scheduler jitter.  Missing baselines or metrics warn
+# and are skipped — a new metric must not fail the first CI run that
+# introduces it.
+GATES = [
+    # absolute contracts (ISSUE 6/9 acceptance: tracing cost, attribution)
+    ("BENCH_obs.json", "overhead.tracing_disabled_overhead", "abs_max", 0.02),
+    ("BENCH_obs.json", "overhead.tracing_enabled_overhead", "abs_max", 0.10),
+    ("BENCH_obs.json", "fleet_demo.attributed_fraction_min", "abs_min", 0.95),
+    ("BENCH_fleet.json", "migration.duplicate_tokens", "abs_max", 0.0),
+    # relative bands against the committed baseline
+    ("BENCH_obs.json", "fleet_demo.flow_links_cross_locality",
+     "rel_min", 0.5),
+    ("BENCH_algorithms.json", "transform.par_speedup", "rel_min", 0.5),
+    ("BENCH_algorithms.json", "pool_isolation.p99_improvement",
+     "rel_min", 0.6),
+    ("BENCH_serve.json", "speedup_tokens_per_s", "rel_min", 0.5),
+    ("BENCH_net.json", "throughput.speedup_vs_baseline", "rel_min", 0.5),
+    ("BENCH_net.json", "latency.parcel_round_trip_us", "rel_max", 1.0),
+    ("BENCH_fleet.json", "slo.p99_improvement", "rel_min", 0.6),
+    ("BENCH_dist.json", "bsp_over_futurized", "rel_min", 0.3),
+]
 
 
-def main() -> None:
+def _lookup(obj, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj if isinstance(obj, (int, float)) else None
+
+
+def snapshot_baselines(compare_dir: str):
+    """Read every gated metric out of DIR before the suites overwrite the
+    files in place (DIR is usually results/ itself)."""
+    base = {}
+    for fname, path, _kind, _bound in GATES:
+        p = Path(compare_dir) / fname
+        if not p.exists():
+            continue
+        try:
+            base[(fname, path)] = _lookup(json.loads(p.read_text()), path)
+        except (json.JSONDecodeError, OSError):
+            base[(fname, path)] = None
+    return base
+
+
+def compare(baselines, results_dir: str, only_files=None) -> int:
+    """Check fresh results against the snapshotted baselines; prints one
+    line per gate, returns the number of violations."""
+    violations = 0
+    fresh_cache = {}
+    for fname, path, kind, bound in GATES:
+        if only_files is not None and fname not in only_files:
+            continue
+        p = Path(results_dir) / fname
+        if fname not in fresh_cache:
+            try:
+                fresh_cache[fname] = json.loads(p.read_text())
+            except (json.JSONDecodeError, OSError):
+                fresh_cache[fname] = None
+        doc = fresh_cache[fname]
+        fresh = _lookup(doc, path) if doc is not None else None
+        if fresh is None:
+            print(f"COMPARE skip {fname}:{path} (no fresh value)")
+            continue
+        if kind == "abs_max":
+            ok, want = fresh <= bound, f"<= {bound}"
+        elif kind == "abs_min":
+            ok, want = fresh >= bound, f">= {bound}"
+        else:
+            basev = baselines.get((fname, path))
+            if basev is None:
+                print(f"COMPARE skip {fname}:{path} (no baseline)")
+                continue
+            if kind == "rel_min":
+                lim = basev * (1.0 - bound)
+                ok, want = fresh >= lim, f">= {lim:.4g} ({basev:.4g} -{bound:.0%})"
+            else:  # rel_max
+                lim = basev * (1.0 + bound)
+                ok, want = fresh <= lim, f"<= {lim:.4g} ({basev:.4g} +{bound:.0%})"
+        tag = "ok " if ok else "REGRESSION"
+        print(f"COMPARE {tag} {fname}:{path} = {fresh:.6g} (want {want})")
+        violations += 0 if ok else 1
+    return violations
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="repro benchmark driver (DESIGN.md §8)")
+    ap.add_argument("--suites", metavar="a,b",
+                    help="comma-separated subset of suites to run")
+    ap.add_argument("--compare", metavar="DIR",
+                    help="regression-gate fresh results against the "
+                         "baselines committed in DIR (exit non-zero on a "
+                         "band violation)")
+    args = ap.parse_args(argv)
+
+    baselines = snapshot_baselines(args.compare) if args.compare else None
+
     import repro.core as core
 
     core.init(num_workers=4)
@@ -27,18 +143,34 @@ def main() -> None:
         ("obs", bench_obs),
         ("fleet", bench_fleet),
     ]
+    if args.suites:
+        wanted = {s.strip() for s in args.suites.split(",") if s.strip()}
+        unknown = wanted - {name for name, _ in suites}
+        if unknown:
+            ap.error(f"unknown suites: {sorted(unknown)}")
+        suites = [(n, m) for n, m in suites if n in wanted]
+
     print("name,us_per_call,derived")
     failures = 0
+    ran_files = set()
     for name, mod in suites:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.2f},{derived}")
+            ran_files.add(f"BENCH_{name}.json")
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     core.finalize()
-    sys.exit(1 if failures else 0)
+
+    regressions = 0
+    if baselines is not None:
+        # only gate on metrics the selected suites actually refreshed
+        regressions = compare(baselines, args.compare, only_files=ran_files)
+        print(f"COMPARE {'PASS' if regressions == 0 else 'FAIL'} "
+              f"({regressions} regression(s))")
+    sys.exit(1 if failures or regressions else 0)
 
 
 if __name__ == "__main__":

@@ -228,6 +228,12 @@ class TimerCounter:
             if self._hist is None:
                 self._hist = Histogram(self.name)
 
+    def quantile(self, q: float) -> float:
+        """Histogram quantile in seconds (0.0 without percentiles=True) —
+        the live p99 the flight-recorder trigger polls."""
+        h = self._hist
+        return h.quantile(q) if h is not None else 0.0
+
     def get_value(self) -> float:  # mean, for the uniform interface
         with self._lock:
             return self.total / self.count if self.count else 0.0

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, Iterable, Optional
 
 from repro.core import counters as _counters
 from repro.fleet.policy import EngineView, FleetView, Policy
+from repro.obs import trace as _trace
 from repro.obs.sampler import FleetSampler
 from repro.serve.router import RemoteEngine, Router, engine_name
 
@@ -105,6 +106,12 @@ class FleetController:
 
     # ------------------------------------------------------------------ act
     def tick(self) -> FleetView:
+        if _trace._enabled:
+            with _trace.span("controller/tick", "fleet"):
+                return self._tick_body()
+        return self._tick_body()
+
+    def _tick_body(self) -> FleetView:
         self.sampler.sample_once()
         view = self.view()
         self.last_view = view
@@ -116,12 +123,22 @@ class FleetController:
             fn = self.actuators.get(action)
             if fn is None:
                 self.c_action_errors.increment()
+                if _trace._enabled:
+                    _trace.instant("controller/action_error", "fleet",
+                                   policy=policy.name, action=action,
+                                   missing=True)
                 continue
             self.c_actions.increment()
+            if _trace._enabled:
+                _trace.instant("controller/action", "fleet",
+                               policy=policy.name, action=action)
             try:
                 fn(view)
             except Exception:  # noqa: BLE001 — one failed actuation must
                 self.c_action_errors.increment()  # not kill the loop
+                if _trace._enabled:
+                    _trace.instant("controller/action_error", "fleet",
+                                   policy=policy.name, action=action)
         released = self.router.release_gated()
         if released:
             self.c_released.increment(released)

@@ -71,7 +71,22 @@ def main() -> None:
     ap.add_argument("--print-counters", metavar="PATTERN", default=None,
                     help="end-of-run fleet counter report (HPX "
                          "--hpx:print-counter parity), e.g. '/serve*'")
+    ap.add_argument("--slow-report", action="store_true",
+                    help="after --trace export, run the critical-path "
+                         "analyzer and print the per-tier SLOW blame "
+                         "report (python -m repro.obs.analyze parity)")
+    ap.add_argument("--flight-recorder", metavar="PREFIX", default=None,
+                    help="arm the anomaly flight recorder on the fleet "
+                         "controller: always-on rings + dump_trace trigger "
+                         "rules, anomaly traces written to "
+                         "results/PREFIX-N.json (needs --fleet)")
     args = ap.parse_args()
+    if args.slow_report and not args.trace:
+        ap.error("--slow-report needs --trace PATH (it analyzes the "
+                 "exported merged trace)")
+    if args.flight_recorder and not args.fleet:
+        ap.error("--flight-recorder needs --fleet (the controller's tick "
+                 "evaluates the trigger rules)")
     if (args.fleet or args.slo) and args.localities < 2:
         ap.error("--fleet/--slo need --localities > 1 (the control plane "
                  "manages remote engines)")
@@ -131,10 +146,18 @@ def main() -> None:
         for i, e in enumerate(remote):
             router.set_tier(e.name, INTERACTIVE if i == 0 else BATCH)
         AdmissionController.for_router(router, high=0.85, low=0.60)
+    recorder = None
     if args.fleet:
         from repro.fleet import FleetController
 
-        controller = FleetController(net, router, interval=0.25).start()
+        controller = FleetController(net, router, interval=0.25)
+        if args.flight_recorder:
+            from repro.obs.recorder import FlightRecorder
+
+            recorder = FlightRecorder(net, prefix=args.flight_recorder)
+            recorder.start()  # always-on rings, fleet-wide
+            recorder.install(controller, p99_high=5.0)
+        controller.start()
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(0)
@@ -194,6 +217,19 @@ def main() -> None:
         tr = obs_export.export_chrome_trace(args.trace, net=net)
         report["trace"] = {"path": args.trace,
                            "events": len(tr["traceEvents"])}
+        if args.slow_report:
+            from repro.obs import attribution as obs_attr
+
+            rep = obs_attr.slow_report(tr)
+            print(obs_attr.format_report(rep))
+            report["slow_report"] = {"requests": rep["requests"],
+                                     "tiers": sorted(rep["tiers"])}
+    if recorder is not None:
+        report["flight_recorder"] = {
+            "dumps": int(recorder.c_dumps.get_value()),
+            "last": recorder.last_path,
+        }
+        recorder.stop()
     if args.print_counters:
         from repro.obs import sampler as obs_sampler
 

@@ -412,7 +412,7 @@ class _Coalesce:
 class _OutXfer:
     """Sender-side pending rendezvous: encoded stream parked until CTS."""
 
-    __slots__ = ("xid", "dst", "stream", "size")
+    __slots__ = ("xid", "dst", "stream", "size", "t0")
 
     def __init__(self, xid: int, dst: int, stream: List[memoryview],
                  size: int):
@@ -420,6 +420,7 @@ class _OutXfer:
         self.dst = dst
         self.stream = stream
         self.size = size
+        self.t0 = 0.0  # RTS send time when tracing — the CTS-wait clock
 
 
 class _InXfer:
@@ -595,9 +596,15 @@ class Channel:
             if over() and not can_block:
                 led.deferred.append((chunks, nbytes))
                 self.c_deferred.increment()
+                if _trace._enabled:
+                    # Waiting (W): parcel parked on the deferred FIFO until
+                    # CREDIT returns — visible contention, not lost time
+                    _trace.instant("credit/defer", "net", dst=dst,
+                                   bytes=nbytes)
                 return False
             if over():
                 self.c_blocked.increment()
+                t_blk = time.perf_counter() if _trace._enabled else 0.0
                 deadline = time.monotonic() + self.port.config.block_timeout
                 while not self._closed and over():
                     remaining = deadline - time.monotonic()
@@ -607,6 +614,11 @@ class Channel:
                             f"{self.port.config.block_timeout}s by "
                             f"backpressure ({led.inflight} bytes unacked)")
                     led.cv.wait(timeout=min(remaining, 1.0))
+                if t_blk:
+                    # Waiting (W): the sender thread sat in cv.wait until
+                    # enough CREDIT flowed back
+                    _trace.complete("credit/block", "net", t_blk, dst=dst,
+                                    bytes=nbytes)
             if self._closed:
                 raise PortClosed(
                     f"connection to locality#{self.peer_id} closed")
@@ -669,10 +681,15 @@ class Channel:
         if created:
             self.port.wake()  # (re)arm the progress thread's flush timer
 
-    def _flush_locked(self, dst: int) -> None:
+    def _flush_locked(self, dst: int, reason: str = "size") -> None:
         buf = self._cbufs.pop(dst, None)
         if buf is None:
             return
+        if reason == "deadline" and _trace._enabled:
+            # Overhead (O): these parcels sat out the aggregation window
+            # without filling the container — latency traded for bandwidth
+            _trace.instant("coalesce/deadline_flush", "net", dst=dst,
+                           parcels=buf.count, bytes=buf.nbytes)
         self._last_flush[dst] = time.monotonic()
         self._adapt_window(buf)
         if buf.count == 1:
@@ -712,7 +729,7 @@ class Channel:
             for dst in list(self._cbufs):
                 dl = self._cbufs[dst].deadline
                 if dl <= now:
-                    self._flush_locked(dst)
+                    self._flush_locked(dst, reason="deadline")
                 elif nxt is None or dl < nxt:
                     nxt = dl
         return nxt
@@ -724,8 +741,10 @@ class Channel:
         header["blens"] = [v.nbytes for v in views]
         header["bodylen"] = len(body)
         stream: List[memoryview] = [memoryview(body), *views]
-        xid = self.port._register_out(
-            _OutXfer(0, header.get("dst", self.peer_id), stream, size))
+        xfer = _OutXfer(0, header.get("dst", self.peer_id), stream, size)
+        if _trace._enabled:
+            xfer.t0 = time.perf_counter()
+        xid = self.port._register_out(xfer)
         rts = {"t": RTS, "src": self.local_id,
                "dst": header.get("dst", self.peer_id), "x": xid,
                "size": size, "h": header}
@@ -1243,6 +1262,11 @@ class Port:
         elif t == CTS:
             xf = self._outx.pop(header.get("x"), None)
             if xf is not None:
+                if xf.t0 and _trace._enabled:
+                    # Waiting (W): payload parked sender-side from RTS send
+                    # until the receiver granted CTS
+                    _trace.complete("rendezvous/cts_wait", "net", xf.t0,
+                                    dst=xf.dst, bytes=xf.size)
                 out = self._safe_route(xf.dst)
                 if out is not None and not out.closed:
                     out._stream_data(xf)

@@ -1,6 +1,8 @@
 """repro.obs — APEX-style observability for the distributed runtime.
 
-Three pillars (see DESIGN.md §10):
+Two tiers (see DESIGN.md §10):
+
+**Recording** —
 
 - :mod:`repro.obs.trace`   — per-thread ring-buffer task/parcel tracer,
   off by default, near-zero disabled cost;
@@ -9,18 +11,33 @@ Three pillars (see DESIGN.md §10):
 - :mod:`repro.obs.sampler` — counter time-series (histories, rates) and
   the ``--print-counters`` fleet report.
 
+**Analysis** (ISSUE 9) —
+
+- :mod:`repro.obs.critical_path` — per-request dependency-path
+  reconstruction with SLOW-taxonomy interval blame;
+- :mod:`repro.obs.attribution`   — aggregate per-tier reports, folded
+  into live histogram counters;
+- :mod:`repro.obs.recorder`      — anomaly-triggered fleet flight
+  recorder (controller-driven ``dump_trace`` actuator);
+- :mod:`repro.obs.analyze`       — the ``python -m repro.obs.analyze``
+  CLI.
+
 Only :mod:`trace` is imported eagerly: it is a leaf the core runtime
 instruments, so this package must never pull in the net tier at import
-time (export/sampler load on first attribute access).
+time (everything else loads on first attribute access).
 """
 
 from repro.obs import trace  # noqa: F401 — the leaf recorder
 
-__all__ = ["trace", "export", "sampler"]
+__all__ = ["trace", "export", "sampler", "critical_path", "attribution",
+           "recorder", "analyze"]
+
+_LAZY = ("export", "sampler", "critical_path", "attribution", "recorder",
+         "analyze")
 
 
 def __getattr__(name):
-    if name in ("export", "sampler"):
+    if name in _LAZY:
         import importlib
 
         return importlib.import_module(f"repro.obs.{name}")

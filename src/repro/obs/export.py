@@ -60,10 +60,27 @@ def _obs_collect(rt) -> List[Dict[str, Any]]:
     return _trace.export_buffers()
 
 
+# Fault-injection hook for clock-correction tests: a skew added to the
+# clock *as reported to probes* emulates the correction error left by
+# asymmetric link latency (the Cristian midpoint assumes symmetry).
+_probe_skew = 0.0
+
+
+def set_probe_skew(delta: float) -> None:
+    global _probe_skew
+    _probe_skew = float(delta)
+
+
+@_parcel.action
+def _obs_set_probe_skew(rt, delta: float) -> bool:
+    set_probe_skew(delta)
+    return True
+
+
 @_parcel.action
 def _obs_clock(rt) -> float:
     """Read this locality's monotonic clock (the handshake probe)."""
-    return time.perf_counter()
+    return time.perf_counter() + _probe_skew
 
 
 def clock_offset(net, locality: int, probes: int = 5) -> float:
@@ -105,6 +122,18 @@ def disable_fleet(net=None) -> None:
                 _remote.run_on(loc, _obs_disable).get(timeout=30)
 
 
+def clear_fleet(net=None) -> None:
+    """Drop every locality's ring buffers — the flight recorder arms from
+    an empty window so a dump's evidence has a well-defined start."""
+    _trace.clear()
+    if net is not None:
+        from repro.net import remote as _remote
+
+        for loc in range(net.n_localities):
+            if loc != net.locality:
+                _remote.run_on(loc, _obs_clear).get(timeout=30)
+
+
 # ------------------------------------------------------------- conversion
 def _chrome_events(buffers: List[Dict[str, Any]], pid: int,
                    offset: float) -> List[Dict[str, Any]]:
@@ -123,6 +152,18 @@ def _chrome_events(buffers: List[Dict[str, Any]], pid: int,
             }
             if ph == "X":
                 ev["dur"] = dur * 1e6
+                if eid is not None:
+                    # the span's own id, in the same "loc:seq" form that
+                    # child spans reference via args["parent"] — the
+                    # analyzer's parent->child link
+                    sid = f"{eid[0]}:{eid[1]}"
+                    if args:
+                        ev["args"] = dict(args)
+                        ev["args"]["sid"] = sid
+                    else:
+                        ev["args"] = {"sid": sid}
+                    out.append(ev)
+                    continue
             elif ph == "i":
                 ev["s"] = "t"  # instant scoped to its thread
             elif ph in ("s", "f"):
@@ -163,6 +204,7 @@ def merged_trace(net=None, probes: int = 5) -> Dict[str, Any]:
     each parcel stitch the localities together.
     """
     events: List[Dict[str, Any]] = []
+    ring_drops: Dict[str, int] = {}
     local_pid = 0
     if net is not None:
         local_pid = net.locality
@@ -175,6 +217,12 @@ def merged_trace(net=None, probes: int = 5) -> Dict[str, Any]:
         except Exception:
             local_pid = 0
 
+    def _account_drops(bufs: List[Dict[str, Any]], pid: int) -> None:
+        for buf in bufs:
+            if buf.get("dropped"):
+                key = f"{pid}/{buf.get('thread_name', buf.get('tid'))}"
+                ring_drops[key] = ring_drops.get(key, 0) + int(buf["dropped"])
+
     if net is not None:
         from repro.net import remote as _remote
 
@@ -183,6 +231,7 @@ def merged_trace(net=None, probes: int = 5) -> Dict[str, Any]:
                 continue
             off = clock_offset(net, loc, probes=probes)
             bufs = _remote.run_on(loc, _obs_collect).get(timeout=60)
+            _account_drops(bufs, loc)
             events.extend(_metadata(bufs, loc))
             events.extend(_chrome_events(bufs, loc, offset=off))
 
@@ -190,11 +239,18 @@ def merged_trace(net=None, probes: int = 5) -> Dict[str, Any]:
     # trips above record send spans here whose execute spans are already
     # in the remote snapshots — collecting locally first would orphan them
     local = _trace.export_buffers()
+    _account_drops(local, local_pid)
     events.extend(_metadata(local, local_pid))
     events.extend(_chrome_events(local, local_pid, offset=0.0))
 
     events.sort(key=lambda e: (e["ph"] != "M", e.get("ts", 0.0)))
-    return {"traceEvents": events, "displayTimeUnit": "ms"}
+    tr: Dict[str, Any] = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if ring_drops:
+        # any wrapped ring means the trace is a *suffix* of reality —
+        # analyses must not claim completeness, so say so in the header
+        tr["lossy"] = True
+        tr["ring_drops"] = ring_drops
+    return tr
 
 
 def export_chrome_trace(path: str, net=None, probes: int = 5) -> Dict[str, Any]:

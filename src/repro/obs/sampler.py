@@ -158,18 +158,25 @@ def print_counter_report(pattern: str = "*", net=None,
                          file=None) -> List[str]:
     """HPX ``--hpx:print-counter`` parity: dump every matching counter on
     every locality — value, rate (when a sampler retained history), and
-    p50/p95/p99 for timers/histograms.  Returns the printed lines."""
-    localities = [0] if net is None else net.live_ids()
+    p50/p95/p99 for timers/histograms.  The SLOW blame histograms
+    (``/obs{blame/...}``) ride along regardless of ``pattern`` — once an
+    analysis folded them, the report shows p50/p95/p99 *blame* next to
+    whatever was asked for.  Output is sorted by locality then counter
+    path (stable diffs in CI logs).  Returns the printed lines."""
+    localities = sorted([0] if net is None else net.live_ids())
+    blame_pat = "/obs{blame/*"
     lines = [f"{'counter':<58} {'value':>12} {'rate/s':>10} "
              f"{'p50':>9} {'p95':>9} {'p99':>9}"]
     for loc in localities:
         if net is None or loc == net.locality:
             stats = _counters.default().snapshot_stats(pattern)
+            stats.update(_counters.default().snapshot_stats(blame_pat))
         else:
             from repro.net import remote as _remote
 
             try:
                 stats = _remote.query_counter_stats(loc, pattern)
+                stats.update(_remote.query_counter_stats(loc, blame_pat))
             except Exception:  # noqa: BLE001 — locality gone
                 lines.append(f"locality#{loc}: <unreachable>")
                 continue

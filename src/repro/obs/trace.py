@@ -123,12 +123,41 @@ def _detect_locality() -> int:
 
 
 # ------------------------------------------------------------------ control
+def recorded_events() -> int:
+    """Events currently resident across every thread's ring."""
+    with _lock:
+        bufs = list(_buffers)
+    return sum(min(b.idx, b.capacity) for b in bufs)
+
+
+def dropped_events() -> int:
+    """Events overwritten by ring wraparound (lost to the exporter)."""
+    with _lock:
+        bufs = list(_buffers)
+    return sum(max(0, b.idx - b.capacity) for b in bufs)
+
+
+def _register_counters(locality: int) -> None:
+    """Publish ring occupancy/drop gauges so lossiness is visible *live*
+    (before any export) — ``/obs{locality#L}/trace/{events,dropped}``."""
+    try:
+        from repro.core import counters as _counters
+
+        reg = _counters.default()
+        prefix = f"/obs{{locality#{locality}}}/trace"
+        reg.register_callable(f"{prefix}/events", recorded_events)
+        reg.register_callable(f"{prefix}/dropped", dropped_events)
+    except Exception:  # pragma: no cover - counters tier not initialised
+        pass
+
+
 def enable(capacity: int = DEFAULT_CAPACITY) -> None:
     """Turn the recorder on (idempotent).  ``capacity`` is per thread."""
     global _enabled, _capacity, _locality
     with _lock:
         _capacity = int(capacity)
     _locality = _detect_locality()
+    _register_counters(_locality)
     _enabled = True
 
 
@@ -215,7 +244,7 @@ class _Span:
                 args = dict(args) if args else {}
                 args["parent"] = f"{self.prev[0]}:{self.prev[1]}"
             _buf().append(("X", self.name, self.cat, self.t0, t1 - self.t0,
-                           None, args))
+                           self.sid, args))
         return False
 
 

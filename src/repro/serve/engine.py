@@ -116,6 +116,9 @@ class _Request:
     # id) that survives live migration — the destination re-attaches its
     # stream and completion hooks from this
     meta: Optional[Dict[str, Any]] = None
+    # fleet-global request tag ("r<loc>:<seq>" from the router, or a local
+    # fallback) stamped into every span — the critical-path join key
+    tag: str = ""
 
 
 def _cache_batch_axis(name: str) -> int:
@@ -330,6 +333,12 @@ class Engine:
         # load() stays "requests this engine still has to do"
         self.c_mig_out = reg.counter(f"/serve{{{n}}}/requests/migrated_out")
         self.c_mig_in = reg.counter(f"/serve{{{n}}}/requests/migrated_in")
+        # live tail-latency gauges: what the flight-recorder trigger polls
+        # through the fleet sampler (seconds, from the timer histograms)
+        reg.register_callable(f"/serve{{{n}}}/request/latency/p99",
+                              lambda: self.t_latency.quantile(0.99))
+        reg.register_callable(f"/serve{{{n}}}/request/first_token/p99",
+                              lambda: self.t_first.quantile(0.99))
 
     # --------------------------------------------------------------- decode
     def _decode_fn(self, params, cache, token, key, temp, topk, topp):
@@ -368,15 +377,17 @@ class Engine:
         with self._lock:
             self._rid += 1
             rid = self._rid
+        tag = (meta or {}).get("req") or f"{self.scfg.name}/{rid}"
         req = _Request(rid, list(prompt),
                        self.scfg.max_new_tokens if max_new is None else max_new,
                        Promise(), sampling or GREEDY, stream,
-                       submit_t=time.perf_counter(), meta=meta)
+                       submit_t=time.perf_counter(), meta=meta, tag=tag)
         self._queue.put(req)
         self.c_sub.increment()
         if _trace._enabled:  # request lifetime as one async span
             _trace.async_begin("request", rid, "serve",
-                               prompt_len=len(req.prompt))
+                               prompt_len=len(req.prompt), req=tag,
+                               slo=(meta or {}).get("slo"))
         self._ensure_running()
         return req.promise.future()
 
@@ -446,7 +457,9 @@ class Engine:
             raise RuntimeError("take_requests requires a paused engine")
 
         def _entry(req: _Request, kv=None, last_tok=None) -> Dict[str, Any]:
-            if req.meta is None:
+            # "client" marks relay meta specifically: router-tagged local
+            # submits carry meta={"req","slo"} but no re-homeable sink
+            if not req.meta or "client" not in req.meta:
                 raise RuntimeError(
                     f"request {req.rid} has no relay meta; only "
                     f"fleet-submitted requests survive migration")
@@ -492,10 +505,12 @@ class Engine:
             self._rid += 1
             rid = self._rid
         t, k, p = e["sampling"]
+        meta = dict(e["meta"])
         req = _Request(rid, list(e["prompt"]), int(e["max_new"]), Promise(),
                        SamplingParams(t, k, p), None,
                        generated=list(e["generated"]),
-                       submit_t=time.perf_counter(), meta=dict(e["meta"]))
+                       submit_t=time.perf_counter(), meta=meta,
+                       tag=meta.get("req") or f"{self.scfg.name}/{rid}")
         if req.generated:  # first token happened at the source
             req.first_token_t = req.submit_t
         return req
@@ -551,7 +566,7 @@ class Engine:
     def _run_prefill(self, req: _Request):
         """Compute the request's KV cache + first token (any thread)."""
         if _trace._enabled:
-            with _trace.span("prefill", "serve", rid=req.rid,
+            with _trace.span("prefill", "serve", rid=req.rid, req=req.tag,
                              prompt_len=len(req.prompt)):
                 return self._run_prefill_body(req)
         return self._run_prefill_body(req)
@@ -592,7 +607,8 @@ class Engine:
                 req.stream.close()
             self.c_done.increment()  # terminated: keep load() = in-flight
             if _trace._enabled:
-                _trace.async_end("request", req.rid, "serve", failed=True)
+                _trace.async_end("request", req.rid, "serve", failed=True,
+                                 req=req.tag)
             req.promise.set_exception(e)
             self._work_event.set()
             return
@@ -646,7 +662,7 @@ class Engine:
         self.t_latency.add(time.perf_counter() - req.submit_t)
         if _trace._enabled:
             _trace.async_end("request", req.rid, "serve",
-                             tokens=len(req.generated))
+                             tokens=len(req.generated), req=req.tag)
         if req.stream is not None:
             req.stream.close()
         req.promise.set_value(req.generated)
@@ -688,6 +704,11 @@ class Engine:
                         f"page-pool capacity"))
                     self.c_done.increment()
                     continue
+                if _trace._enabled:
+                    # Waiting (W): the request has its KV ready but cannot
+                    # enter a slot — page-pool contention, not queue wait
+                    _trace.instant("admit_stall", "serve", req=req.tag,
+                                   rid=req.rid)
                 with self._lock:  # pool exhausted — retry after completions
                     self._ready.insert(0, payload)
                 return
@@ -767,7 +788,12 @@ class Engine:
             self._loop_exec.post(self._step)
             return
 
-        with _trace.span("decode_step", "serve", batch=len(active)), \
+        step_args: Dict[str, Any] = {"batch": len(active)}
+        if _trace._enabled:
+            # which requests this step advanced — the analyzer charges the
+            # step's duration to every request decoding in it
+            step_args["reqs"] = [self.slots[i].tag for i in active]
+        with _trace.span("decode_step", "serve", **step_args), \
                 self.t_step.time():
             key = jax.random.fold_in(self._key, self._step_count)
             nxt, new_cache = self._decode(

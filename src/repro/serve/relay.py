@@ -299,7 +299,8 @@ def live_sids() -> List[int]:
 
 
 # ------------------------------------------------------------- engine hooks
-def attach_done(engine, fut: Future, client: int, sid: int) -> None:
+def attach_done(engine, fut: Future, client: int, sid: int,
+                tag: Optional[str] = None) -> None:
     """Wire a request future (at the engine's locality) to the client's
     sink: completion ships a done-parcel carrying the outcome plus this
     engine's load/occupancy gossip.  Re-attachable — migration calls this
@@ -307,6 +308,7 @@ def attach_done(engine, fut: Future, client: int, sid: int) -> None:
     process, so the sink still sees exactly one done-parcel."""
     def done(f: Future) -> None:
         from repro.net import locality as _locality
+        from repro.obs import trace as _trace
 
         net = _locality.current()
         if net is None:
@@ -320,8 +322,16 @@ def attach_done(engine, fut: Future, client: int, sid: int) -> None:
         args = ((sid, True, f._value, gossip) if exc is None
                 else (sid, False, exc, gossip))
         try:
-            net.send_parcel(client, _DELIVER_DONE_NAME, None, args,
-                            want_result=False)
+            if _trace._enabled and tag:
+                # tagged wrapper: the nested send:_deliver_done span's
+                # parent is this sid, so the analyzer can attribute the
+                # completion leg's wire time to the request
+                with _trace.span("relay/done", "serve", req=tag, dst=client):
+                    net.send_parcel(client, _DELIVER_DONE_NAME, None, args,
+                                    want_result=False)
+            else:
+                net.send_parcel(client, _DELIVER_DONE_NAME, None, args,
+                                want_result=False)
         except Exception:  # noqa: BLE001 — client gone; nothing to tell
             pass
 
@@ -330,18 +340,21 @@ def attach_done(engine, fut: Future, client: int, sid: int) -> None:
 
 @_parcel.action
 def _fleet_submit(engine, prompt: List[int], max_new: Optional[int],
-                  sampling, client: int, sid: int, want_stream: bool) -> bool:
+                  sampling, client: int, sid: int, want_stream: bool,
+                  tag: Optional[str] = None,
+                  slo: Optional[str] = None) -> bool:
     """Non-blocking engine submit (object-targeted, so live migration's
     UnknownGid self-heal re-routes it): builds the request's relay + meta,
     attaches the done hook, acks immediately.  Tokens and completion flow
     back as separate one-sided parcels — no pool worker blocks per
     request, which is what lets one locality hold hundreds of in-flight
     remote requests."""
+    tag = tag or f"s{int(client)}:{int(sid)}"
     meta = {"client": int(client), "sid": int(sid),
-            "stream": bool(want_stream)}
+            "stream": bool(want_stream), "req": tag, "slo": slo}
     relay = TokenRelay(int(client), int(sid), 0, bool(want_stream))
     fut = engine.submit(prompt, max_new, sampling, stream=relay, meta=meta)
-    attach_done(engine, fut, int(client), int(sid))
+    attach_done(engine, fut, int(client), int(sid), tag=tag)
     return True
 
 
@@ -353,6 +366,7 @@ def reattach_for(engine) -> Callable[[Any], None]:
         m = req.meta
         req.stream = TokenRelay(m["client"], m["sid"], len(req.generated),
                                 m["stream"])
-        attach_done(engine, req.promise.future(), m["client"], m["sid"])
+        attach_done(engine, req.promise.future(), m["client"], m["sid"],
+                    tag=m.get("req"))
 
     return reattach

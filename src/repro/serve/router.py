@@ -41,6 +41,7 @@ Counters::
 
 from __future__ import annotations
 
+import itertools
 import threading
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
@@ -52,6 +53,7 @@ from repro.core import counters as _counters
 from repro.core import parcel as _parcel
 from repro.core.future import Channel, Future, Promise
 from repro.models.model import Model
+from repro.obs import trace as _trace
 from repro.serve.engine import Engine, SamplingParams, ServeConfig
 
 ENGINE_NAME_PREFIX = "/engines/"
@@ -186,10 +188,12 @@ class RemoteEngine:
         sid = _relay.open_sink(self.net, stream, self.locality, on_result)
         with self._lock:
             self._inflight += 1
+        meta = meta or {}
         ack = _remote.apply_remote(_relay._fleet_submit, self.gid,
                                    list(prompt), max_new, sampling,
                                    self.net.locality, sid,
-                                   stream is not None)
+                                   stream is not None,
+                                   meta.get("req"), meta.get("slo"))
 
         def acked(f: Future) -> None:
             exc = f.exception()
@@ -238,6 +242,9 @@ class Router:
         self.admission: Optional[Any] = None
         self.max_failover = 2
         self._gated: deque = deque()
+        # fleet-global request tags ("r<locality>:<seq>") stamped into
+        # every span the request touches — the critical-path join key
+        self._req_seq = itertools.count(1)
 
         reg = _counters.default()
         self.c_dispatched = reg.counter("/serve{router}/requests/dispatched")
@@ -409,24 +416,36 @@ class Router:
         loads = [engines[i].load() for i in candidates]
         return candidates[loads.index(min(loads))]
 
+    def new_tag(self) -> str:
+        """Fleet-global request tag: ``r<locality>:<seq>``.  The one id
+        joining every span/async event a request touches anywhere in the
+        fleet (DESIGN.md §10.4)."""
+        return f"r{_trace._detect_locality()}:{next(self._req_seq)}"
+
     def submit(self, prompt: List[int], max_new: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
                stream: Optional[Channel] = None,
                slo: Optional[str] = None) -> Future:
         promise: Promise = Promise()
+        tag = self.new_tag()
         if (slo == TIER_BATCH and self.admission is not None
                 and not self.admission.allow()):
             # backpressure by occupancy, not queue depth: park until the
             # fleet controller's release tick
             with self._lock:
                 self._gated.append((list(prompt), max_new, sampling, stream,
-                                    slo, promise))
+                                    slo, promise, tag))
                 depth = len(self._gated)
             self.c_gated.increment()
             self.g_gate_depth.set(float(depth))
+            if _trace._enabled:
+                # the analyzer reads this instant as the start of the
+                # request's Waiting (admission-gate) interval
+                _trace.instant("router/gated", "serve", req=tag, slo=slo,
+                               depth=depth)
             return promise.future()
         self._dispatch(list(prompt), max_new, sampling, stream, slo,
-                       promise, 0)
+                       promise, 0, tag=tag)
         return promise.future()
 
     def release_gated(self, limit: Optional[int] = None) -> int:
@@ -439,13 +458,13 @@ class Router:
             with self._lock:
                 if not self._gated:
                     break
-                prompt, max_new, sampling, stream, slo, promise = \
+                prompt, max_new, sampling, stream, slo, promise, tag = \
                     self._gated.popleft()
                 depth = len(self._gated)
             self.c_released.increment()
             self.g_gate_depth.set(float(depth))
             self._dispatch(prompt, max_new, sampling, stream, slo,
-                           promise, 0)
+                           promise, 0, tag=tag, gated=True)
             n += 1
         return n
 
@@ -456,7 +475,8 @@ class Router:
     def _dispatch(self, prompt: List[int], max_new: Optional[int],
                   sampling: Optional[SamplingParams],
                   stream: Optional[Channel], slo: Optional[str],
-                  promise: Promise, attempt: int) -> None:
+                  promise: Promise, attempt: int,
+                  tag: Optional[str] = None, gated: bool = False) -> None:
         try:
             i = self.pick(slo=slo)
         except ValueError as e:
@@ -466,11 +486,21 @@ class Router:
         name = engine_name(engine)
         self.c_dispatched.increment()
         self._dispatch_counter(name).increment()
+        meta = {"req": tag, "slo": slo} if tag else None
         try:
-            fut = engine.submit(prompt, max_new, sampling, stream)
+            if _trace._enabled and tag:
+                # span wraps the submit so a remote dispatch's
+                # send:_fleet_submit span records this sid as its parent
+                with _trace.span("router/submit", "serve", req=tag, slo=slo,
+                                 engine=name, gated=gated):
+                    fut = engine.submit(prompt, max_new, sampling, stream,
+                                        meta=meta)
+            else:
+                fut = engine.submit(prompt, max_new, sampling, stream,
+                                    meta=meta)
         except BaseException as exc:  # noqa: BLE001 — sync submit failure
             self._failover(exc, name, prompt, max_new, sampling, stream,
-                           slo, promise, attempt)
+                           slo, promise, attempt, tag)
             return
 
         def done(f: Future) -> None:
@@ -479,7 +509,7 @@ class Router:
                 promise.set_value(f._value)
             else:
                 self._failover(exc, name, prompt, max_new, sampling, stream,
-                               slo, promise, attempt)
+                               slo, promise, attempt, tag)
 
         fut.on_ready(done)
 
@@ -487,7 +517,8 @@ class Router:
                   max_new: Optional[int],
                   sampling: Optional[SamplingParams],
                   stream: Optional[Channel], slo: Optional[str],
-                  promise: Promise, attempt: int) -> None:
+                  promise: Promise, attempt: int,
+                  tag: Optional[str] = None) -> None:
         """Dead-engine handling: evict and retry on a healthy replica.
 
         Retriable ⇔ the request observably did nothing and the failure
@@ -506,7 +537,7 @@ class Router:
             if attempt < self.max_failover:
                 self.c_retried.increment()
                 self._dispatch(prompt, max_new, sampling, stream, slo,
-                               promise, attempt + 1)
+                               promise, attempt + 1, tag=tag)
                 return
             self.c_exhausted.increment()
         self._terminal(stream, promise, exc)

@@ -1,0 +1,419 @@
+"""Critical-path analyzer, SLOW blame, and the anomaly flight recorder
+(repro.obs.critical_path / attribution / recorder / analyze).
+
+Two halves:
+
+- deterministic unit tests over hand-built merged traces (known gaps,
+  known classes, injected negative edges);
+- the ISSUE 9 acceptance scenarios on a real 3-locality fleet: >=95%
+  attribution of every sampled request, a batch flood tripping the
+  controller's ``dump_trace`` trigger into a cross-locality anomaly
+  trace, and a skewed worker clock whose edges clamp instead of running
+  backwards.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro import net as rnet
+from repro.obs import attribution, export, trace
+from repro.obs import critical_path as cpm
+from repro.serve.engine import ServeConfig
+from repro.serve.router import TIER_BATCH, TIER_INTERACTIVE, Router
+
+pytestmark = pytest.mark.usefixtures("rt")
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    trace.disable()
+    trace.clear()
+    yield
+    trace.disable()
+    trace.clear()
+
+
+# ------------------------------------------------------- synthetic traces
+def _ev(events, **kw):
+    events.append(kw)
+    return kw
+
+
+def _span(events, name, pid, tid, ts, dur, **args):
+    return _ev(events, name=name, cat="t", ph="X", pid=pid, tid=tid,
+               ts=float(ts), dur=float(dur), args=args)
+
+
+def _remote_trace(engine_shift=0.0, decode_dur=400.0, tag="r0:1"):
+    """One interactive request dispatched from locality 0 to an engine on
+    locality 1, completion delivered back — both wire legs present.
+    ``engine_shift`` slides every locality-1 timestamp (emulates residual
+    clock-correction error); ``decode_dur`` stretches the decode step."""
+    ev = []
+    sh = float(engine_shift)
+    _span(ev, "router/submit", 0, 1, 0, 300, sid="0:1", req=tag,
+          slo="interactive")
+    _span(ev, "send:_fleet_submit", 0, 1, 50, 200, sid="0:2", parent="0:1")
+    _ev(ev, name="send:_fleet_submit", cat="t", ph="s", pid=0, tid=1,
+        ts=50.0, id="0:3")
+    _span(ev, "execute:_fleet_submit", 1, 9, 800 + sh, 100, sid="1:1",
+          parent="0:3")
+    _ev(ev, name="execute:_fleet_submit", cat="t", ph="f", pid=1, tid=9,
+        ts=800.0 + sh, id="0:3", bp="e")
+    _ev(ev, name="request", cat="serve", ph="b", pid=1, tid=9,
+        ts=850.0 + sh, id="1:1", args={"req": tag, "slo": "interactive"})
+    _span(ev, "prefill", 1, 10, 1200 + sh, 1000, sid="1:2", req=tag)
+    _span(ev, "decode_step", 1, 11, 2500 + sh, decode_dur, sid="1:3",
+          reqs=[tag])
+    _ev(ev, name="request", cat="serve", ph="e", pid=1, tid=11,
+        ts=3000.0 + sh, id="1:1", args={"req": tag})
+    _span(ev, "relay/done", 1, 11, 3050 + sh, 100, sid="1:4", req=tag)
+    _span(ev, "send:_deliver_done", 1, 11, 3060 + sh, 80, sid="1:6",
+          parent="1:4")
+    _ev(ev, name="send:_deliver_done", cat="t", ph="s", pid=1, tid=11,
+        ts=3060.0 + sh, id="1:5")
+    _span(ev, "execute:_deliver_done", 0, 2, 3900, 150, sid="0:4",
+          parent="1:5")
+    _ev(ev, name="execute:_deliver_done", cat="t", ph="f", pid=0, tid=2,
+        ts=3900.0, id="1:5", bp="e")
+    return {"traceEvents": ev}
+
+
+def _gated_local_trace(tag="r0:7"):
+    """A batch request parked at the gate, then KV-pool stalled: the two
+    Waiting causes, plus prefill/ready starvation, on one locality."""
+    ev = []
+    _ev(ev, name="router/gated", cat="serve", ph="i", pid=0, tid=1,
+        ts=100.0, s="t", args={"req": tag, "slo": "batch"})
+    _span(ev, "router/submit", 0, 1, 5000, 200, sid="0:9", req=tag,
+          slo="batch")
+    _ev(ev, name="request", cat="serve", ph="b", pid=0, tid=3, ts=5300.0,
+        id="0:10", args={"req": tag, "slo": "batch"})
+    _span(ev, "prefill", 0, 4, 6000, 800, sid="0:11", req=tag)
+    _ev(ev, name="admit_stall", cat="serve", ph="i", pid=0, tid=3,
+        ts=7000.0, args={"req": tag})
+    _span(ev, "decode_step", 0, 3, 8000, 300, sid="0:12", reqs=[tag])
+    _ev(ev, name="request", cat="serve", ph="e", pid=0, tid=3, ts=8400.0,
+        id="0:10", args={"req": tag})
+    return {"traceEvents": ev}
+
+
+# ------------------------------------------------------------- unit tests
+def test_critical_path_tiles_the_full_wall_time():
+    cp = cpm.critical_path(_remote_trace(), "r0:1")
+    assert cp is not None and cp.slo == "interactive"
+    # tiled: every microsecond lands in exactly one classified interval
+    assert cp.fraction == pytest.approx(1.0)
+    assert cp.residual_us == pytest.approx(0.0)
+    assert cp.clamped_count == 0
+    assert sum(cp.by_class.values()) == pytest.approx(cp.total_us)
+    for iv in cp.intervals:
+        assert iv.t1 >= iv.t0 and iv.cls in cpm.SLOW_CLASSES
+    # contiguous coverage, in order
+    for a, b in zip(cp.intervals, cp.intervals[1:]):
+        assert b.t0 == pytest.approx(a.t1)
+
+
+def test_cross_locality_wire_time_classified_latency():
+    cp = cpm.critical_path(_remote_trace(), "r0:1")
+    assert cp.localities() == {0, 1}
+    wires = [iv for iv in cp.intervals if iv.cls == "L"]
+    assert len(wires) == 2  # submit leg and completion leg
+    assert cp.by_class["L"] == pytest.approx(500.0 + 750.0)
+    assert cp.by_class["work"] == pytest.approx(1400.0)
+    # starvation on both queues, work on prefill+decode
+    whats = [(iv.cls, iv.what) for iv in cp.intervals]
+    assert ("S", "prefill queue") in whats
+    assert ("S", "ready queue") in whats
+
+
+def test_gate_and_pool_stalls_classified_waiting():
+    cp = cpm.critical_path(_gated_local_trace(), "r0:7")
+    whats = [(iv.cls, iv.what) for iv in cp.intervals]
+    assert ("W", "admission gate") in whats
+    assert ("W", "kv-pool stall") in whats
+    assert cp.slo == "batch"
+    # the gate park dominates this request: W is the top class
+    assert max(cp.by_class, key=cp.by_class.get) == "W"
+    assert cp.fraction == pytest.approx(1.0)
+
+
+def test_negative_edges_clamped_and_counted_not_silent():
+    tr = _remote_trace(engine_shift=-800.0)
+    edges = cpm.flow_edges(tr)
+    clamped = [e for e in edges if e["clamped"]]
+    assert clamped and all(e["raw_us"] < 0.0 for e in clamped)
+    assert all(e["transit_us"] >= 0.0 for e in edges)  # never backwards
+    cp = cpm.critical_path(tr, "r0:1")
+    assert cp.clamped_count >= 1 and cp.clamped_us > 0.0
+    assert all(iv.t1 >= iv.t0 for iv in cp.intervals)
+    assert cp.fraction >= 0.95  # still fully tiled after clipping
+
+
+def test_mark_critical_path_injects_anomaly_track():
+    tr = _remote_trace()
+    cp = cpm.critical_path(tr, "r0:1")
+    cpm.mark_critical_path(tr, cp)
+    marked = [e for e in tr["traceEvents"] if e.get("cat") == "anomaly"]
+    assert len(marked) == len(cp.intervals)
+    assert {e["tid"] for e in marked} == {cpm.CP_TID}
+    assert {e["pid"] for e in marked} == {0, 1}
+    names = [e["name"] for e in tr["traceEvents"]
+             if e.get("ph") == "M" and e.get("tid") == cpm.CP_TID]
+    assert len(names) == 2  # one blame track per locality
+    assert tr["critical_path"]["req"] == "r0:1"
+
+
+def test_slow_report_groups_by_tier_and_diffs():
+    a = {"traceEvents": (_remote_trace()["traceEvents"]
+                         + _gated_local_trace()["traceEvents"])}
+    ra = attribution.slow_report(a)
+    assert ra["requests"] == 2 and not ra["lossy"]
+    assert set(ra["tiers"]) == {"interactive", "batch"}
+    t = ra["tiers"]["interactive"]
+    assert t["attributed_fraction"]["min"] >= 0.95
+    assert sum(t["shares"].values()) == pytest.approx(1.0)
+    # B stretches the decode step by 200us: the diff shows work moving
+    rb = attribution.slow_report(_remote_trace(decode_dur=600.0))
+    d = attribution.diff_reports(attribution.slow_report(_remote_trace()),
+                                 rb)
+    assert d["tiers"]["interactive"]["delta_us"]["work"] == \
+        pytest.approx(200.0)
+    # renderers don't choke
+    assert "interactive" in attribution.format_report(ra)
+    assert "wire" in attribution.format_critical_path(
+        cpm.critical_path(_remote_trace(), "r0:1"))
+
+
+def test_fold_into_counters_feeds_blame_histograms():
+    cps = attribution.analyze_requests(_remote_trace())
+    reg = core.counters.CounterRegistry()
+    assert attribution.fold_into_counters(cps, registry=reg) == 1
+    stats = reg.snapshot_stats("/obs{blame/interactive}*")
+    for cls in ("work", "starvation", "latency", "overhead", "waiting"):
+        assert f"/obs{{blame/interactive}}/{cls}" in stats
+    assert stats["/obs{blame/interactive}/total"]["count"] == 1.0
+    # latency histogram holds seconds: 1.25ms of wire time
+    assert stats["/obs{blame/interactive}/latency"]["p50"] == \
+        pytest.approx(1.25e-3, rel=0.2)
+
+
+def test_print_counter_report_includes_blame_sorted():
+    from repro.obs.sampler import print_counter_report
+
+    attribution.fold_into_counters(attribution.analyze_requests(
+        _remote_trace(tag="r0:42")))
+    lines = print_counter_report(pattern="/no/such/counter*", net=None)
+    body = [ln for ln in lines[1:] if ln.startswith("L0 ")]
+    # blame histograms ride along regardless of the asked-for pattern...
+    assert any("/obs{blame/interactive}/latency" in ln for ln in body)
+    # ...with percentile cells populated, sorted by counter path
+    blame_line = next(ln for ln in body
+                      if "/obs{blame/interactive}/total" in ln)
+    assert blame_line.rstrip()[-1] != "-"
+    names = [ln.split()[1] for ln in body]
+    assert names == sorted(names)
+
+
+def test_ring_drop_counters_and_lossy_header():
+    trace.enable(capacity=64)
+    for i in range(200):
+        trace.instant("spam", "t", i=i)
+    assert trace.recorded_events() == 64
+    assert trace.dropped_events() == 136
+    vals = dict(core.counters.query("/obs{locality#0}/trace/*"))
+    assert vals["/obs{locality#0}/trace/events"] == 64.0
+    assert vals["/obs{locality#0}/trace/dropped"] == 136.0
+    tr = export.merged_trace(None)
+    assert tr["lossy"] is True
+    assert any(n > 0 for n in tr["ring_drops"].values())
+    assert attribution.slow_report(tr)["lossy"] is True
+
+
+def test_analyze_cli(tmp_path, capsys):
+    from repro.obs import analyze
+
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(_remote_trace()))
+    b.write_text(json.dumps(_remote_trace(decode_dur=600.0)))
+
+    assert analyze.main([str(a), "--requests"]) == 0
+    assert "r0:1" in capsys.readouterr().out
+
+    assert analyze.main([str(a), "--critical-path", "r0:1"]) == 0
+    out = capsys.readouterr().out
+    assert "wire" in out and "prefill" in out
+
+    assert analyze.main([str(a), "--critical-path", "nope"]) == 1
+    capsys.readouterr()
+
+    assert analyze.main([str(a), "--slow-report", "--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["requests"] == 1 and "interactive" in rep["tiers"]
+
+    assert analyze.main(["--diff", str(a), str(b)]) == 0
+    assert "work" in capsys.readouterr().out
+
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"traceEvents": []}))
+    assert analyze.main([str(empty)]) == 1  # nothing to chew on
+
+
+# --------------------------------------------- 3-locality fleet scenarios
+@pytest.fixture(scope="module")
+def fleet(rt):
+    pools = {"default": 4, "prefill": 2, "io": 1}
+    with rnet.running(3, pools=pools, worker_pools=pools) as net:
+        scfg = ServeConfig(max_batch=2, cache_len=96, max_new_tokens=24)
+        router = Router.over_localities(
+            net, "qwen25_3b", scfg, smoke=True, plan="serve",
+            tiers={"engine#1": TIER_INTERACTIVE, "engine#2": TIER_BATCH})
+        yield net, router
+
+
+def _prompts(n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 512, size=rng.integers(4, 16)).tolist()
+            for _ in range(n)]
+
+
+def test_traced_fleet_attribution_covers_95_percent(fleet):
+    """Acceptance: on a traced 3-locality run the analyzer attributes
+    >=95% of every sampled request's admission->finish wall time, with
+    the residual explicit, and remote requests span >=2 localities."""
+    net, router = fleet
+    export.enable_fleet(net)
+    try:
+        futs = [router.submit(p, slo=TIER_INTERACTIVE)
+                for p in _prompts(2, seed=3)]
+        futs += [router.submit(p, slo=TIER_BATCH) for p in _prompts(2)]
+        futs += [router.submit(p) for p in _prompts(1, seed=5)]
+        for f in futs:
+            assert len(f.get(timeout=600)) == 25
+        tr = export.merged_trace(net)
+    finally:
+        export.disable_fleet(net)
+
+    idx = cpm.TraceIndex(tr)
+    tags = cpm.request_ids(idx)
+    assert len(tags) >= 5
+    cps = attribution.analyze_requests(idx)
+    assert set(cps) == set(tags)
+    for tag, cp in cps.items():
+        assert cp.fraction >= 0.95, (tag, cp.summary())
+        s = cp.summary()
+        assert s["attributed_us"] + s["residual_us"] >= 0.95 * s["total_us"]
+    # the interactive tier lives on locality 1: its paths cross the wire
+    remote_cps = [cp for cp in cps.values() if cp.slo == TIER_INTERACTIVE]
+    assert remote_cps
+    assert all(len(cp.localities()) >= 2 for cp in remote_cps)
+    assert all(cp.by_class["L"] > 0.0 for cp in remote_cps)
+    # clock-corrected edges never go backwards in the merged trace
+    assert all(e["transit_us"] >= 0.0 for e in cpm.flow_edges(idx))
+    # per-tier report covers what we submitted
+    rep = attribution.slow_report(idx, cps)
+    assert {TIER_INTERACTIVE, TIER_BATCH} <= set(rep["tiers"])
+    # the live p99 gauge the flight-recorder trigger polls is published
+    p99s = dict(core.counters.query("/serve{*}/request/latency/p99"))
+    assert p99s and max(p99s.values()) > 0.0
+
+
+def test_batch_flood_trips_flight_recorder_cross_locality(fleet, tmp_path):
+    """Acceptance: an injected batch flood closes the admission gate; the
+    controller's trigger rule fires ``dump_trace``; the exported anomaly
+    trace is fleet-merged with the offender's critical path marked across
+    >=2 localities."""
+    from repro.fleet import AdmissionController, FleetController
+    from repro.obs.recorder import FlightRecorder
+
+    net, router = fleet
+    rec = FlightRecorder(net, out_dir=str(tmp_path), capacity=16384,
+                         rearm_s=120.0, probes=2)
+    rec.start()
+    sig = {"occ": 0.95}
+    flood = []
+    try:
+        # real traffic first, so the frozen rings hold completed requests
+        for f in [router.submit(p, slo=TIER_INTERACTIVE)
+                  for p in _prompts(3, seed=11)]:
+            assert len(f.get(timeout=600)) == 25
+
+        router.admission = AdmissionController(lambda: sig["occ"],
+                                               high=0.85, low=0.60)
+        flood = [router.submit(p, slo=TIER_BATCH)
+                 for p in _prompts(4, seed=13)]
+        assert router.gated_depth() == 4
+
+        controller = FleetController(net, router, interval=60.0)
+        rec.install(controller, gate_trigger=True, error_trigger=False,
+                    sustain=1)
+        controller.tick()  # gate closed -> recorder/gate_closed fires
+
+        path = rec.last_path
+        assert path is not None and os.path.exists(path)
+        assert rec.c_dumps.get_value() == 1.0
+        with open(path) as f:
+            tr = json.load(f)
+        assert tr["anomaly"]["reason"] == "controller"
+        assert tr["anomaly"]["detail"]["gated_depth"] >= 1
+        assert tr["anomaly"]["requests_analyzed"] >= 3
+        # the marked offender crosses the wire and is >=95% attributed
+        off = tr["critical_path"]
+        assert off["req"] == rec.last_offender
+        assert len(off["localities"]) >= 2
+        assert off["fraction"] >= 0.95
+        marked = [e for e in tr["traceEvents"] if e.get("cat") == "anomaly"]
+        assert marked and {e["tid"] for e in marked} == {cpm.CP_TID}
+        assert {e["pid"] for e in marked} >= set(off["localities"])
+        # a second trigger inside the re-arm window must not dump again
+        controller.tick()
+        assert rec.c_dumps.get_value() == 1.0
+        # the dump folded blame into the live histograms
+        blame = core.counters.default().snapshot_stats("/obs{blame/*")
+        assert any("/total" in k for k in blame)
+    finally:
+        sig["occ"] = 0.10  # reopen the gate and drain the park
+        router.release_gated()
+        for f in flood:
+            assert len(f.get(timeout=600)) == 25
+        router.admission = None
+        rec.stop()
+
+
+def test_skewed_worker_clock_edges_clamp_not_reverse(fleet):
+    """Acceptance satellite: skew one worker's probe clock by +50ms —
+    min-RTT correction then maps its events too early, so wire edges into
+    it would run backwards.  The analyzer must clamp (and count) those,
+    never emit a negative duration."""
+    from repro.net import remote
+
+    net, router = fleet
+    remote.run_on(1, export._obs_set_probe_skew, 0.05).get(timeout=60)
+    export.enable_fleet(net)
+    try:
+        for f in [router.submit(p, slo=TIER_INTERACTIVE)
+                  for p in _prompts(2, seed=17)]:
+            assert len(f.get(timeout=600)) == 25
+        tr = export.merged_trace(net)
+    finally:
+        export.disable_fleet(net)
+        remote.run_on(1, export._obs_set_probe_skew, 0.0).get(timeout=60)
+
+    edges = cpm.flow_edges(tr)
+    into_skewed = [e for e in edges if e["dst"] == 1 and e["src"] != 1]
+    assert into_skewed
+    # 50ms of injected error dwarfs real loopback transit: edges into the
+    # skewed worker run backwards raw, and every one is clamped + flagged
+    assert any(e["clamped"] and e["raw_us"] < 0.0 for e in into_skewed)
+    assert all(e["transit_us"] >= 0.0 for e in edges)
+    cps = attribution.analyze_requests(tr)
+    assert cps
+    for cp in cps.values():
+        assert all(iv.t1 >= iv.t0 for iv in cp.intervals)
+        assert cp.fraction >= 0.95
+    assert sum(cp.clamped_count for cp in cps.values()) >= 1
