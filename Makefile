@@ -5,8 +5,8 @@
 PY ?= python
 
 .PHONY: verify test bench bench-compare bench-serve bench-algorithms \
-	bench-net bench-net-check bench-container bench-obs bench-fleet \
-	bench-fleet-check smoke
+	bench-net bench-net-check bench-container bench-obs bench-obs-check \
+	bench-fleet bench-fleet-check smoke
 
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -40,6 +40,9 @@ bench-container:
 
 bench-obs:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_obs
+
+bench-obs-check:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_obs --check
 
 bench-fleet:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_fleet

@@ -203,11 +203,76 @@ def _bench_fleet_demo():
     }
 
 
+def _bench_export_tier():
+    """ISSUE 10 smoke: a 2-locality fleet scraped over real HTTP through
+    the strict OpenMetrics parser, a counter timeline persisted through
+    the fleet sampler, and one fleet-top frame rendered from the scrape —
+    the whole export tier exercised end to end, CI-gated."""
+    from repro import net as rnet
+    from repro.core import counters as C
+    from repro.net.httpd import http_get
+    from repro.obs import metrics as M
+    from repro.obs import timeseries as TS
+    from repro.obs import top as T
+    from repro.obs.sampler import FleetSampler
+
+    tl_path = REPO / "results" / "obs_timeline_demo.jsonl"
+    # a histogram with real content so the scrape carries >= 1 native one
+    h = C.default().histogram("/serve{engine#0}/request/latency")
+    for v in (0.005, 0.01, 0.02, 0.04, 0.08):
+        h.add(v)
+
+    with rnet.running(2) as net:
+        timeline = TS.TimelineWriter(str(tl_path), pattern="*",
+                                     interval=0.05,
+                                     meta={"source": "bench_obs"})
+        sampler = FleetSampler(pattern="*", interval=0.05, net=net,
+                               timeline=timeline)
+        sampler.sample_once()
+        with M.MetricsExporter(net=net) as ex:
+            t0 = time.perf_counter()
+            status, body = http_get(ex.url, timeout=120.0)
+            scrape_s = time.perf_counter() - t0
+        sampler.sample_once()
+        timeline.close()
+
+    parse_ok, fams, err = 0.0, {}, ""
+    try:
+        fams = M.parse_prometheus_text(body, strict=True)
+        parse_ok = 1.0 if status == 200 else 0.0
+    except ValueError as e:
+        err = str(e)
+    locs = {labels.get("locality")
+            for info in fams.values() if info["type"] == "counter"
+            for _n, labels, _v in info["samples"]}
+    hist_fams = [f for f, i in fams.items() if i["type"] == "histogram"]
+
+    summary = TS.summarize(str(tl_path))
+    frame = T.render_frame(T.snapshot_from_metrics(body))
+    return {
+        "scrape_status": status,
+        "scrape_s": round(scrape_s, 4),
+        "scrape_bytes": len(body.encode("utf-8")),
+        "scrape_strict_parse_ok": parse_ok,
+        "scrape_parse_error": err,
+        "scrape_families": len(fams),
+        "scrape_histograms": len(hist_fams),
+        "scrape_localities": len(locs - {None}),
+        "timeline_path": str(tl_path.relative_to(REPO)),
+        "timeline_records": summary["records"],
+        "timeline_final_stride": summary["final_stride"],
+        "timeline_has_utilization": bool(summary["utilization"]),
+        "top_frame_lines": len(frame.splitlines()),
+        "top_frame_ok": 1.0 if "fleet-top" in frame else 0.0,
+    }
+
+
 def run():
-    res = {"overhead": _bench_overhead(), "fleet_demo": _bench_fleet_demo()}
+    res = {"overhead": _bench_overhead(), "fleet_demo": _bench_fleet_demo(),
+           "export_tier": _bench_export_tier()}
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps(res, indent=1))
-    ov, demo = res["overhead"], res["fleet_demo"]
+    ov, demo, exp = res["overhead"], res["fleet_demo"], res["export_tier"]
     return [
         ("obs/noop_call_ns", ov["noop_call_ns"] * 1e-3,
          f"{ov['noop_call_ns']:.0f} ns/call disabled"),
@@ -224,10 +289,62 @@ def run():
          f"{demo['attributed_fraction_min'] * 100:.1f}% min attributed "
          f"over {demo['requests_analyzed']} reqs (>=95% "
          f"{'OK' if demo['attribution_95pct_met'] else 'FAIL'})"),
+        ("obs/export_scrape", exp["scrape_s"] * 1e6,
+         f"{exp['scrape_families']} families, "
+         f"{exp['scrape_histograms']} histograms, "
+         f"{exp['scrape_localities']} localities, strict-parse "
+         f"{'OK' if exp['scrape_strict_parse_ok'] else 'FAIL'}"),
+        ("obs/export_timeline", 0.0,
+         f"{exp['timeline_records']} records (stride "
+         f"{exp['timeline_final_stride']}), utilization "
+         f"{'OK' if exp['timeline_has_utilization'] else 'MISSING'}; "
+         f"top frame {exp['top_frame_lines']} lines"),
     ]
 
 
+def check() -> int:
+    """``--check``: re-read the last run's JSON and enforce the ISSUE 10
+    export-tier acceptance bars (CI calls this as ``make bench-obs-check``
+    right after the bench job)."""
+    try:
+        res = json.loads(OUT.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"GATE FAILED — cannot read {OUT}: {e}")
+        return 1
+    ov = res.get("overhead", {})
+    exp = res.get("export_tier", {})
+    gates = [
+        ("tracing disabled overhead <= 2%",
+         ov.get("tracing_disabled_overhead", 1.0) <= 0.02),
+        ("metrics scrape 200 + strict parse",
+         exp.get("scrape_strict_parse_ok", 0.0) >= 1.0),
+        (">= 1 native histogram in scrape",
+         exp.get("scrape_histograms", 0) >= 1),
+        ("counters from >= 2 localities",
+         exp.get("scrape_localities", 0) >= 2),
+        ("timeline persisted >= 2 records",
+         exp.get("timeline_records", 0) >= 2),
+        ("timeline yields utilization",
+         bool(exp.get("timeline_has_utilization"))),
+        ("fleet-top frame rendered",
+         exp.get("top_frame_ok", 0.0) >= 1.0),
+    ]
+    bad = [name for name, ok in gates if not ok]
+    for name, ok in gates:
+        print(f"GATE {'ok  ' if ok else 'FAIL'} {name}")
+    if bad:
+        print(f"GATE FAILED — {len(bad)} export-tier gate(s): {bad}")
+        return 1
+    print("GATE PASS — export tier healthy")
+    return 0
+
+
 def main() -> None:
+    import sys
+
+    if "--check" in sys.argv:
+        sys.exit(check())
+
     import repro.core as core
 
     core.init(pools={"default": 4, "prefill": 2, "io": 1})

@@ -31,6 +31,11 @@ GATES = [
     ("BENCH_obs.json", "overhead.tracing_enabled_overhead", "abs_max", 0.10),
     ("BENCH_obs.json", "fleet_demo.attributed_fraction_min", "abs_min", 0.95),
     ("BENCH_fleet.json", "migration.duplicate_tokens", "abs_max", 0.0),
+    # ISSUE 10 acceptance: idle-rate accounting overhead and the export tier
+    ("BENCH_algorithms.json", "sched_accounting.overhead", "abs_max", 0.02),
+    ("BENCH_obs.json", "export_tier.scrape_strict_parse_ok", "abs_min", 1.0),
+    ("BENCH_obs.json", "export_tier.scrape_localities", "abs_min", 2.0),
+    ("BENCH_obs.json", "export_tier.timeline_records", "abs_min", 2.0),
     # relative bands against the committed baseline
     ("BENCH_obs.json", "fleet_demo.flow_links_cross_locality",
      "rel_min", 0.5),

@@ -171,6 +171,34 @@ class Histogram:
     def get_value(self) -> float:  # median, for the uniform interface
         return self.quantile(0.5)
 
+    def _buckets_locked(self) -> List[Tuple[float, int]]:
+        out: List[Tuple[float, int]] = []
+        if self._zero:
+            out.append((0.0, self._zero))
+        for idx in sorted(self._buckets):
+            out.append((math.exp((idx + 1) * self._log_growth),
+                        self._buckets[idx]))
+        return out
+
+    def buckets(self) -> List[Tuple[float, int]]:
+        """Occupied buckets as ``[(upper_bound, count), ...]`` ascending —
+        the raw material for a native Prometheus histogram.  Bucket ``idx``
+        holds samples in ``[growth**idx, growth**(idx+1))`` so its upper
+        bound is ``growth**(idx+1)``; samples ``<= 0`` surface as an
+        explicit leading ``(0.0, n)`` bucket."""
+        with self._lock:
+            return self._buckets_locked()
+
+    def export(self) -> Dict[str, Any]:
+        """Typed export record (kind + raw buckets + sum/count) — what the
+        OpenMetrics exposition tier ships over the wire, since
+        ``snapshot_stats`` collapses the distribution to quantiles.  One
+        lock hold: bucket counts always sum to ``count`` (the +Inf bucket
+        of the rendered histogram must equal ``_count`` exactly)."""
+        with self._lock:
+            return {"kind": "histogram", "sum": self._sum, "count": self.count,
+                    "buckets": self._buckets_locked()}
+
     def reset(self) -> None:
         with self._lock:
             self._buckets.clear()
@@ -251,6 +279,20 @@ class TimerCounter:
         if self._hist is not None:
             out.update(self._hist.percentiles())
         return out
+
+    def export(self) -> Dict[str, Any]:
+        """Typed export record: with ``percentiles=True`` the attached
+        histogram's raw buckets ride along (rendered as a native Prometheus
+        histogram in seconds); without, count/total still expose the
+        ``_count``/``_sum`` pair."""
+        h = self._hist
+        if h is not None:
+            rec = h.export()
+            rec["kind"] = "timer"
+            return rec
+        with self._lock:
+            return {"kind": "timer", "sum": self.total,
+                    "count": self.count, "buckets": None}
 
     def reset(self) -> None:
         with self._lock:
@@ -353,9 +395,14 @@ class CounterRegistry:
     def histogram(self, name: str, growth: float = 1.08) -> Histogram:
         return self._get_or_create(name, lambda n: Histogram(n, growth=growth))
 
-    def register_callable(self, name: str, fn: Callable[[], float]) -> None:
-        """Lazily-evaluated counter (e.g. instantaneous queue length)."""
-        c = _CallableCounter(name, fn)
+    def register_callable(self, name: str, fn: Callable[[], float],
+                          kind: str = "gauge") -> None:
+        """Lazily-evaluated counter (e.g. instantaneous queue length).
+
+        ``kind`` declares the exposition semantics: ``"gauge"`` (default,
+        may go up or down) or ``"counter"`` (monotonic — e.g. the
+        scheduler's cumulative busy/idle time, computed on read)."""
+        c = _CallableCounter(name, fn, kind=kind)
         with self._lock:
             self._counters[name] = c
         self._publish(name, c)
@@ -415,6 +462,25 @@ class CounterRegistry:
             out[n] = stats if stats is not None else {"value": c.get_value()}
         return out
 
+    def snapshot_export(self, pattern: str = "*") -> Dict[str, Dict[str, Any]]:
+        """Typed export records for every matching counter — the payload of
+        ``net.query_counter_export`` and the ``/metrics`` endpoint.  Unlike
+        :meth:`snapshot_stats` this keeps histogram *buckets* (native
+        Prometheus rendering needs them) and each counter's kind.
+        Membership is fixed under the lock, values read outside it (see
+        :meth:`query`); a counter whose read raises contributes an
+        ``{"kind": "error"}`` record instead of killing the scrape."""
+        with self._lock:
+            items = [(n, self._counters[n]) for n in sorted(self._counters)
+                     if fnmatch.fnmatch(n, pattern)]
+        out: Dict[str, Dict[str, Any]] = {}
+        for n, c in items:
+            try:
+                out[n] = export_record(c)
+            except Exception as e:  # noqa: BLE001 — probe racing teardown
+                out[n] = {"kind": "error", "error": repr(e)}
+        return out
+
     def republish_to_agas(self) -> int:
         """Publish every registered counter into AGAS (idempotent rebinds).
 
@@ -429,17 +495,37 @@ class CounterRegistry:
 
 
 class _CallableCounter:
-    __slots__ = ("name", "_fn")
+    __slots__ = ("name", "_fn", "kind")
 
-    def __init__(self, name: str, fn: Callable[[], float]):
+    def __init__(self, name: str, fn: Callable[[], float],
+                 kind: str = "gauge"):
         self.name = name
         self._fn = fn
+        self.kind = kind
 
     def get_value(self) -> float:
         return float(self._fn())
 
     def reset(self) -> None:
         pass
+
+
+def export_record(c: Any) -> Dict[str, Any]:
+    """One counter -> a typed, wire-friendly export record.
+
+    ``kind`` drives the OpenMetrics rendering: ``counter`` (monotonic,
+    ``_total`` suffix), ``gauge``, ``histogram``/``timer`` (native
+    Prometheus histogram from the log buckets).  Callable counters carry
+    their declared kind; reading one may raise (a probe racing teardown),
+    which the caller maps to an error record rather than dropping the
+    whole sweep."""
+    if isinstance(c, (Histogram, TimerCounter)):
+        return c.export()
+    if isinstance(c, Counter):
+        return {"kind": "counter", "value": c.get_value()}
+    if isinstance(c, _CallableCounter):
+        return {"kind": c.kind, "value": c.get_value()}
+    return {"kind": "gauge", "value": c.get_value()}
 
 
 _default: Optional[CounterRegistry] = None

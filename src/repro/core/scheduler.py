@@ -35,6 +35,29 @@ Performance counters published per pool (HPX names, §2.4)::
     /scheduler{<pool>}/tasks/pending        (instantaneous)
     /scheduler{<pool>}/task/duration        (timer)
 
+Utilization accounting (HPX ``/threads{...}/idle-rate`` parity): every
+worker accumulates *monotonic* busy/idle wall time at its own state
+transitions — two clock reads per task, no locks, written only by the
+owning worker and read racily by the counters (a torn read is one task
+wide).  Published per pool::
+
+    /scheduler{<pool>}/idle-rate            fraction [0,1] since pool start
+    /scheduler{<pool>}/utilization          1 - idle-rate
+    /scheduler{<pool>}/time/busy            cumulative busy seconds (counter)
+    /scheduler{<pool>}/time/idle            cumulative idle seconds (counter)
+    /scheduler{<pool>}/steals/victim#V/thief#T   steal matrix (counters)
+    /scheduler{<pool>}/queue/worker#I/depth      per-worker queue gauge
+    /scheduler{<pool>}/queue/high/depth          shared hi-prio queue gauge
+
+The cumulative ``time/*`` counters are the windowed form: the fleet
+sampler's positive-delta *rates* of busy vs idle give utilization over
+any window (``FleetView.pool_utilization``), which is what adaptive
+policies predicate on — the instantaneous fraction counters are the
+since-birth summary an operator reads.  ``accounting=False`` disables
+the transition bookkeeping (and skips registering the counters) for A/B
+overhead measurement; the measured cost is gated ≤2% on the algorithms
+bench (``BENCH_algorithms.json: sched_accounting``).
+
 Outside :mod:`repro.core`, tasks reach a pool exclusively through the
 executors of :mod:`repro.core.executor` (``Runtime.get_executor``); the
 ``spawn``/``spawn_raw`` entry points here are the runtime's internal
@@ -46,7 +69,8 @@ from __future__ import annotations
 import collections
 import random
 import threading
-from typing import Any, Callable, Deque, Dict, List, Optional
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core import counters as _counters
 from repro.core.future import Future, Promise
@@ -98,6 +122,7 @@ class ThreadPool:
         num_workers: int = 4,
         policy: str = "local",
         steal_seed: int = 0,
+        accounting: bool = True,
     ):
         if policy not in _POLICIES:
             raise ValueError(f"unknown scheduling policy {policy!r}; choose from {_POLICIES}")
@@ -115,6 +140,17 @@ class ThreadPool:
         self._rng = random.Random(steal_seed)
         self._rr = 0
 
+        # --- utilization accounting (single-writer per worker, racy reads)
+        self.accounting = bool(accounting)
+        now = time.perf_counter()
+        self._busy = [0.0] * self.num_workers   # cumulative busy seconds
+        self._idle = [0.0] * self.num_workers   # cumulative idle seconds
+        self._mark = [now] * self.num_workers   # last state-transition time
+        self._state = [0] * self.num_workers    # 0 = idle, 1 = busy
+        # victim -> thief steal matrix; incremented under self._lock (the
+        # steal itself happens there), read via steal_matrix()/counters
+        self._steals: Dict[Tuple[int, int], int] = {}
+
         reg = _counters.default()
         p = f"/scheduler{{{name}}}"
         self.c_spawned = reg.counter(f"{p}/tasks/spawned")
@@ -123,6 +159,32 @@ class ThreadPool:
         self.c_failed = reg.counter(f"{p}/tasks/failed")
         self.t_task = reg.timer(f"{p}/task/duration")
         reg.register_callable(f"{p}/tasks/pending", self._pending_count)
+        if self.accounting:
+            reg.register_callable(f"{p}/idle-rate", self.idle_rate)
+            reg.register_callable(f"{p}/utilization", self.utilization)
+            reg.register_callable(f"{p}/time/busy",
+                                  lambda: self.time_totals()[0],
+                                  kind="counter")
+            reg.register_callable(f"{p}/time/idle",
+                                  lambda: self.time_totals()[1],
+                                  kind="counter")
+            reg.register_callable(f"{p}/queue/high/depth",
+                                  lambda: float(len(self._hi_queue)))
+            for i in range(self.num_workers):
+                reg.register_callable(
+                    f"{p}/queue/worker#{i}/depth",
+                    lambda q=self._queues[i]: float(len(q)))
+            # the steal matrix is published pairwise only on small pools —
+            # a 64-worker pool would mint 4k counters for no reader
+            if self.policy == "local" and 1 < self.num_workers <= 16:
+                for v in range(self.num_workers):
+                    for t in range(self.num_workers):
+                        if v == t:
+                            continue
+                        reg.register_callable(
+                            f"{p}/steals/victim#{v}/thief#{t}",
+                            lambda k=(v, t): float(self._steals.get(k, 0)),
+                            kind="counter")
 
         for i in range(self.num_workers):
             t = threading.Thread(target=self._worker, args=(i,), daemon=True,
@@ -158,6 +220,44 @@ class ThreadPool:
 
     def pending(self) -> int:
         return int(self._pending_count())
+
+    # ------------------------------------------------- utilization accounting
+    def utilization_snapshot(self) -> Dict[str, Any]:
+        """Per-worker busy/idle seconds with a live correction for the
+        in-progress interval (a worker 10 s into a long task reads as 10 s
+        busier than its last transition recorded).  Reads are lock-free and
+        may tear by one task — monotonic accumulators make that benign."""
+        now = time.perf_counter()
+        busy, idle = [], []
+        for i in range(self.num_workers):
+            b, d, m, s = (self._busy[i], self._idle[i],
+                          self._mark[i], self._state[i])
+            live = max(0.0, now - m)
+            busy.append(b + (live if s else 0.0))
+            idle.append(d + (0.0 if s else live))
+        return {"busy": busy, "idle": idle}
+
+    def time_totals(self) -> Tuple[float, float]:
+        """(cumulative busy seconds, cumulative idle seconds) across all
+        workers — the monotonic counters whose *rates* give windowed
+        utilization."""
+        snap = self.utilization_snapshot()
+        return sum(snap["busy"]), sum(snap["idle"])
+
+    def idle_rate(self) -> float:
+        """Fraction of worker wall time spent idle since pool start
+        (HPX ``/threads{...}/idle-rate``, as a [0,1] fraction)."""
+        busy, idle = self.time_totals()
+        total = busy + idle
+        return idle / total if total > 0.0 else 0.0
+
+    def utilization(self) -> float:
+        return 1.0 - self.idle_rate()
+
+    def steal_matrix(self) -> Dict[Tuple[int, int], int]:
+        """Copy of the (victim, thief) -> count steal matrix."""
+        with self._lock:
+            return dict(self._steals)
 
     def shutdown(self, wait: bool = True) -> None:
         with self._lock:
@@ -220,6 +320,8 @@ class ThreadPool:
                 victim = self._queues[vid]
                 if victim:
                     self.c_stolen.increment()
+                    key = (vid, wid)
+                    self._steals[key] = self._steals.get(key, 0) + 1
                     if _trace._enabled:
                         _trace.instant("task/steal", "sched", pool=self.name,
                                        thief=wid, victim=vid)
@@ -249,6 +351,8 @@ class ThreadPool:
     def _worker(self, wid: int) -> None:
         _tls.pool = self
         _tls.worker_id = wid
+        acct = self.accounting
+        perf = time.perf_counter  # bound method: the accounting hot path
         while True:
             with self._lock:
                 task = self._try_pop(wid)
@@ -257,7 +361,19 @@ class ThreadPool:
                         return
                     self._work_available.wait(timeout=0.05)
                     continue
+            if acct:
+                # idle -> busy transition (two clock reads per task total;
+                # written only by this worker, read racily by counters)
+                now = perf()
+                self._idle[wid] += now - self._mark[wid]
+                self._mark[wid] = now
+                self._state[wid] = 1
             self._run_task(task)
+            if acct:
+                now = perf()
+                self._busy[wid] += now - self._mark[wid]
+                self._mark[wid] = now
+                self._state[wid] = 0
 
     def _help_until(self, future: Future, timeout: Optional[float]) -> None:
         """Help-along loop: a worker blocked on ``future`` executes other
@@ -313,6 +429,7 @@ class Runtime:
         pool_name: str = DEFAULT_POOL,
         steal_seed: int = 0,
         pools: Optional[Dict[str, int]] = None,
+        accounting: bool = True,
     ):
         if pools is None:
             pools = {pool_name: num_workers}
@@ -321,13 +438,14 @@ class Runtime:
         self._pools: Dict[str, ThreadPool] = {}
         self._pool_lock = threading.Lock()
         self.policy = policy
+        self.accounting = bool(accounting)
         self._default_name = (
             pool_name if pool_name in pools
             else (DEFAULT_POOL if DEFAULT_POOL in pools else next(iter(pools)))
         )
         for name, n in pools.items():
             p = ThreadPool(name=name, num_workers=n, policy=policy,
-                           steal_seed=steal_seed)
+                           steal_seed=steal_seed, accounting=accounting)
             p._runtime = self
             self._pools[name] = p
 
@@ -365,7 +483,8 @@ class Runtime:
             p = self._pools.get(name)
             if p is None:
                 p = ThreadPool(name=name, num_workers=num_workers,
-                               policy=policy or self.policy)
+                               policy=policy or self.policy,
+                               accounting=self.accounting)
                 p._runtime = self
                 self._pools[name] = p
             return p

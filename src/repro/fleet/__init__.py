@@ -21,11 +21,16 @@ hysteresis, and actuates —
 from repro.fleet.controller import FleetController
 from repro.fleet.elastic import grow_engine, retire_engine
 from repro.fleet.migrate import migrate_engine
-from repro.fleet.policy import EngineView, FleetView, Policy
+from repro.fleet.policy import (
+    EngineView,
+    FleetView,
+    Policy,
+    utilization_policy,
+)
 from repro.fleet.slo import BATCH, INTERACTIVE, AdmissionController
 
 __all__ = [
     "AdmissionController", "BATCH", "EngineView", "FleetController",
     "FleetView", "INTERACTIVE", "Policy", "grow_engine", "migrate_engine",
-    "retire_engine",
+    "retire_engine", "utilization_policy",
 ]

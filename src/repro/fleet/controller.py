@@ -48,8 +48,10 @@ class FleetController:
                  interval: float = 0.5):
         self.net = net
         self.router = router
+        # "*" not "/serve*": policies now also predicate on scheduler
+        # health (idle-rate / time-busy clocks) — see FleetView.pool_utilization
         self.sampler = sampler or FleetSampler(
-            pattern="/serve*", interval=interval, net=net)
+            pattern="*", interval=interval, net=net)
         self.policies = list(policies)
         self.actuators: Dict[str, Callable[..., Any]] = dict(actuators or {})
         self.interval = interval

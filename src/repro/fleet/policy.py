@@ -20,7 +20,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-__all__ = ["EngineView", "FleetView", "Policy"]
+__all__ = ["EngineView", "FleetView", "Policy", "utilization_policy"]
 
 
 @dataclass
@@ -53,6 +53,50 @@ class FleetView:
 
     def rate(self, locality: int, name: str) -> float:
         return self.rates.get((locality, name), 0.0)
+
+    # ------------------------------------------- scheduler health signals
+    def pool_utilization(self, locality: int, pool: str = "default") -> float:
+        """Windowed utilization of one locality's pool, derived from the
+        cumulative ``time/busy`` / ``time/idle`` clock rates the sampler
+        retained — the fraction of worker wall-time spent running tasks
+        over the sampler's window.  0.0 when the counters were never
+        sampled (an unreachable locality reads as idle, not saturated,
+        so a grow policy can't be spooked by a dead peer)."""
+        busy = self.rate(locality, f"/scheduler{{{pool}}}/time/busy")
+        idle = self.rate(locality, f"/scheduler{{{pool}}}/time/idle")
+        total = busy + idle
+        return busy / total if total > 0.0 else 0.0
+
+    def pool_idle_rate(self, locality: int, pool: str = "default") -> float:
+        busy = self.rate(locality, f"/scheduler{{{pool}}}/time/busy")
+        idle = self.rate(locality, f"/scheduler{{{pool}}}/time/idle")
+        total = busy + idle
+        return idle / total if total > 0.0 else 1.0
+
+    def mean_utilization(self, pool: str = "default") -> float:
+        """Fleet-wide mean pool utilization across every locality the
+        sampler has busy/idle clocks for — the saturation signal a
+        grow-on-starvation policy predicates on."""
+        suffix = f"/scheduler{{{pool}}}/time/busy"
+        locs = sorted({loc for (loc, name) in self.rates if name == suffix})
+        if not locs:
+            return 0.0
+        return sum(self.pool_utilization(loc, pool) for loc in locs) / len(locs)
+
+
+def utilization_policy(high: float = 0.85, low: float = 0.15,
+                       up: Optional[str] = "grow",
+                       down: Optional[str] = "shrink",
+                       pool: str = "default", sustain: int = 3,
+                       cooldown: float = 10.0) -> "Policy":
+    """The canonical scale-on-saturation rule: fleet mean utilization of
+    ``pool`` sustained ≥ ``high`` fires ``up``; sustained ≤ ``low`` fires
+    ``down``.  Starvation (SLOW's S) measured by the scheduler itself —
+    the idle-rate counters — rather than inferred from queue proxies."""
+    return Policy(f"utilization:{pool}",
+                  lambda view: view.mean_utilization(pool),
+                  high=high, up=up, low=low, down=down,
+                  sustain=sustain, cooldown=cooldown)
 
 
 class Policy:

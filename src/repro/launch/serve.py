@@ -75,6 +75,14 @@ def main() -> None:
                     help="after --trace export, run the critical-path "
                          "analyzer and print the per-tier SLOW blame "
                          "report (python -m repro.obs.analyze parity)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve an OpenMetrics /metrics endpoint from "
+                         "locality 0 (0 = ephemeral port); every scrape "
+                         "sweeps the fleet's counters live")
+    ap.add_argument("--timeline", metavar="PATH", default=None,
+                    help="persist a JSONL counter timeline (bounded by "
+                         "stride-doubling downsample); summarize later "
+                         "with python -m repro.obs.analyze --timeline")
     ap.add_argument("--flight-recorder", metavar="PREFIX", default=None,
                     help="arm the anomaly flight recorder on the fleet "
                          "controller: always-on rings + dump_trace trigger "
@@ -158,6 +166,29 @@ def main() -> None:
             recorder.start()  # always-on rings, fleet-wide
             recorder.install(controller, p99_high=5.0)
         controller.start()
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.metrics import MetricsExporter
+
+        exporter = MetricsExporter(net=net, port=args.metrics_port).start()
+        print(f"metrics: {exporter.url}", flush=True)
+    timeline = None
+    tl_sampler = None
+    if args.timeline:
+        from repro.obs.sampler import FleetSampler
+        from repro.obs.timeseries import TimelineWriter
+
+        timeline = TimelineWriter(args.timeline, pattern="*", interval=0.25,
+                                  meta={"launcher": "serve",
+                                        "arch": args.arch})
+        if controller is not None:
+            # ride the control plane's sweep — one sampler, two consumers
+            controller.sampler.timeline = timeline
+        else:
+            tl_sampler = FleetSampler(pattern="*", interval=0.25, net=net,
+                                      timeline=timeline)
+            tl_sampler.sample_once()  # t=0 baseline record
+            tl_sampler.start()
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     rng = np.random.default_rng(0)
@@ -234,6 +265,17 @@ def main() -> None:
         from repro.obs import sampler as obs_sampler
 
         obs_sampler.print_counter_report(args.print_counters, net=net)
+    if timeline is not None:
+        if tl_sampler is not None:
+            tl_sampler.stop()
+            tl_sampler.sample_once()  # end-of-run record (≥2 guaranteed)
+        timeline.close()
+        report["timeline"] = {"path": args.timeline,
+                              "records": timeline.records_written,
+                              "stride": timeline.stride}
+    if exporter is not None:
+        report["metrics_url"] = exporter.url
+        exporter.close()
     if net is not None:
         net.shutdown()
     print(json.dumps(report, indent=1))

@@ -49,6 +49,12 @@ def main() -> None:
     ap.add_argument("--print-counters", metavar="PATTERN", default=None,
                     help="end-of-run fleet counter report (HPX "
                          "--hpx:print-counter parity), e.g. '/train*'")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve an OpenMetrics /metrics endpoint from "
+                         "locality 0 (0 = ephemeral port)")
+    ap.add_argument("--timeline", metavar="PATH", default=None,
+                    help="persist a JSONL counter timeline; summarize with "
+                         "python -m repro.obs.analyze --timeline")
     args = ap.parse_args()
 
     import contextlib
@@ -81,6 +87,26 @@ def main() -> None:
             from repro.obs import export as obs_export
 
             obs_export.enable_fleet(net)
+        exporter = None
+        if args.metrics_port is not None:
+            from repro.obs.metrics import MetricsExporter
+
+            exporter = MetricsExporter(net=net,
+                                       port=args.metrics_port).start()
+            print(f"metrics: {exporter.url}", flush=True)
+        timeline = tl_sampler = None
+        if args.timeline:
+            from repro.obs.sampler import FleetSampler
+            from repro.obs.timeseries import TimelineWriter
+
+            timeline = TimelineWriter(args.timeline, pattern="*",
+                                      interval=0.25,
+                                      meta={"launcher": "train",
+                                            "arch": args.arch})
+            tl_sampler = FleetSampler(pattern="*", interval=0.25, net=net,
+                                      timeline=timeline)
+            tl_sampler.sample_once()  # t=0 baseline record
+            tl_sampler.start()
         cfg = get_config(args.arch, smoke=args.smoke)
         plan = get_plan(args.plan, **({"microbatches": args.microbatches}
                                       if args.plan != "bsp" and args.microbatches > 1 else {}))
@@ -117,6 +143,15 @@ def main() -> None:
             from repro.obs import sampler as obs_sampler
 
             obs_sampler.print_counter_report(args.print_counters, net=net)
+        if timeline is not None:
+            tl_sampler.stop()
+            tl_sampler.sample_once()  # end-of-run record (≥2 guaranteed)
+            timeline.close()
+            print(json.dumps({"timeline": args.timeline,
+                              "records": timeline.records_written,
+                              "stride": timeline.stride}))
+        if exporter is not None:
+            exporter.close()
     core.finalize()
 
 

@@ -36,6 +36,7 @@ from repro.net.remote import (
     fetch,
     migrate_remote,
     owner_of,
+    query_counter_export,
     query_counter_stats,
     query_counters,
     run_on,
@@ -45,5 +46,5 @@ __all__ = [
     "ROOT", "Locality", "NetConfig", "NetRuntime", "UnknownGid", "PortClosed",
     "bootstrap", "current", "require", "running",
     "apply_remote", "describe", "fetch", "migrate_remote", "owner_of",
-    "query_counter_stats", "query_counters", "run_on",
+    "query_counter_export", "query_counter_stats", "query_counters", "run_on",
 ]

@@ -99,6 +99,11 @@ def _counters_stats(rt: NetRuntime, pattern: str):
 
 
 @_parcel.action
+def _counters_export(rt: NetRuntime, pattern: str):
+    return _counters.default().snapshot_export(pattern)
+
+
+@_parcel.action
 def _echo(rt: NetRuntime, value: Any) -> Any:
     """Round-trip probe (latency benchmarks, liveness checks)."""
     return value
@@ -375,6 +380,24 @@ def query_counter_stats(locality: Union[int, Locality, list, None],
     if lid == net.locality:
         return _counters.default().snapshot_stats(pattern)
     return run_on(lid, _counters_stats, pattern).get(timeout=timeout)
+
+
+def query_counter_export(locality: Union[int, Locality, list, None],
+                         pattern: str = "*", timeout: float = 60.0):
+    """Typed export records (kind + histogram buckets) — the read the
+    OpenMetrics ``/metrics`` endpoint fans out on every scrape.  Same
+    single-vs-sweep contract as :func:`query_counters` (sweeps tolerate a
+    locality dying mid-scrape: it contributes an ``{"error": ...}``
+    marker, which the exposition renders as ``repro_up 0``)."""
+    if locality is None or isinstance(locality, (list, tuple)):
+        return _counter_sweep(locality, _counters_export,
+                              _counters.default().snapshot_export,
+                              pattern, timeout)
+    net = require()
+    lid = _locality_id(locality)
+    if lid == net.locality:
+        return _counters.default().snapshot_export(pattern)
+    return run_on(lid, _counters_export, pattern).get(timeout=timeout)
 
 
 def fetch(target: _Target, timeout: float = 120.0) -> Any:

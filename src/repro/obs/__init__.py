@@ -11,6 +11,15 @@ Two tiers (see DESIGN.md §10):
 - :mod:`repro.obs.sampler` — counter time-series (histories, rates) and
   the ``--print-counters`` fleet report.
 
+**Export** (ISSUE 10) —
+
+- :mod:`repro.obs.metrics`    — OpenMetrics/Prometheus text exposition
+  of the fleet counter tree (the listener lives in ``repro.net.httpd``);
+- :mod:`repro.obs.timeseries` — append-only JSONL counter timelines,
+  bounded by stride-doubling downsample;
+- :mod:`repro.obs.top`        — the ``python -m repro.obs.top`` live
+  fleet dashboard ("hpx-top").
+
 **Analysis** (ISSUE 9) —
 
 - :mod:`repro.obs.critical_path` — per-request dependency-path
@@ -30,10 +39,10 @@ time (everything else loads on first attribute access).
 from repro.obs import trace  # noqa: F401 — the leaf recorder
 
 __all__ = ["trace", "export", "sampler", "critical_path", "attribution",
-           "recorder", "analyze"]
+           "recorder", "analyze", "metrics", "timeseries", "top"]
 
 _LAZY = ("export", "sampler", "critical_path", "attribution", "recorder",
-         "analyze")
+         "analyze", "metrics", "timeseries", "top")
 
 
 def __getattr__(name):

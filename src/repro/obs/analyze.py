@@ -14,6 +14,9 @@ Makes merged Chrome traces consumable without a browser:
     # A/B two traces (did the fix move waiting into work?)
     python -m repro.obs.analyze --diff before.json after.json
 
+    # digest a persisted counter timeline (--timeline from a launcher)
+    python -m repro.obs.analyze --timeline results/serve_timeline.jsonl
+
 ``--json`` emits machine-readable output for CI diffing.  Exit status is
 non-zero when the requested analysis has nothing to chew on (unknown
 request tag, no complete requests) so scripts fail loudly.
@@ -50,9 +53,32 @@ def main(argv=None) -> int:
                     help="list analyzable request tags")
     ap.add_argument("--diff", nargs=2, metavar=("A", "B"),
                     help="diff two traces' slow reports (B minus A)")
+    ap.add_argument("--timeline", metavar="JSONL",
+                    help="summarize a persisted counter timeline")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="machine-readable output")
     args = ap.parse_args(argv)
+
+    if args.timeline:
+        from repro.obs import timeseries as _ts
+
+        try:
+            summary = _ts.summarize(args.timeline)
+        except (OSError, ValueError) as e:
+            print(f"cannot read timeline {args.timeline!r}: {e}",
+                  file=sys.stderr)
+            return 1
+        if args.as_json:
+            # tuple keys aren't JSON — flatten to "L{loc} {name}" strings
+            out = dict(summary)
+            out["counters"] = {f"L{loc} {name}": st for (loc, name), st
+                               in summary["counters"].items()}
+            out["utilization"] = {f"L{loc} {pool}": d for (loc, pool), d
+                                  in summary["utilization"].items()}
+            print(json.dumps(out, indent=2))
+        else:
+            print("\n".join(_ts.format_summary(summary)))
+        return 0 if summary["records"] else 1
 
     if args.diff:
         ra = _attribution.slow_report(_load(args.diff[0]))
@@ -104,4 +130,12 @@ def main(argv=None) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # `... | head` closed stdout — not an error
+        import os
+
+        # point stdout at devnull so the interpreter's exit-time flush
+        # doesn't raise the same error again as "Exception ignored"
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)

@@ -61,8 +61,14 @@ def slow_report(tr: Dict[str, Any],
     for cp in cps.values():
         tiers.setdefault(cp.slo or UNTIERED, []).append(cp)
 
+    # per-locality drop totals ("{pid}/{thread}" keys folded by pid) so a
+    # lossy trace's header says *how much* each locality's rings lost
+    drops_by_loc: Dict[str, int] = {}
+    for key, n in getattr(idx, "ring_drops", {}).items():
+        loc = str(key).split("/", 1)[0]
+        drops_by_loc[loc] = drops_by_loc.get(loc, 0) + int(n)
     report: Dict[str, Any] = {"requests": len(cps), "lossy": idx.lossy,
-                              "tiers": {}}
+                              "ring_drops": drops_by_loc, "tiers": {}}
     for tier, group in sorted(tiers.items()):
         totals = sorted(cp.total_us for cp in group)
         by_class = {CLASS_NAMES[c]: sum(cp.by_class[c] for cp in group)
@@ -130,9 +136,13 @@ def diff_reports(a: Dict[str, Any], b: Dict[str, Any]) -> Dict[str, Any]:
 
 def format_report(report: Dict[str, Any]) -> str:
     """Terminal rendering of :func:`slow_report` output."""
-    lines = [f"requests analyzed: {report.get('requests', 0)}"
-             + ("   [LOSSY TRACE — rings wrapped]"
-                if report.get("lossy") else "")]
+    drops = report.get("ring_drops") or {}
+    drop_note = ""
+    if report.get("lossy"):
+        per_loc = ", ".join(f"L{loc}={n}" for loc, n in sorted(drops.items()))
+        drop_note = (f"   [LOSSY TRACE — rings wrapped: dropped {per_loc}]"
+                     if per_loc else "   [LOSSY TRACE — rings wrapped]")
+    lines = [f"requests analyzed: {report.get('requests', 0)}" + drop_note]
     order = [CLASS_NAMES[c] for c in SLOW_CLASSES]
     for tier, t in sorted(report.get("tiers", {}).items()):
         lat = t.get("latency_us", {})

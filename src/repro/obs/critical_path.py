@@ -111,6 +111,9 @@ class TraceIndex:
     def __init__(self, tr: Dict[str, Any]):
         self.events: List[Dict[str, Any]] = tr.get("traceEvents", [])
         self.lossy = bool(tr.get("lossy"))
+        # "{pid}/{thread}" → events the ring overwrote (export header);
+        # kept so reports can *quantify* the loss, not just flag it
+        self.ring_drops: Dict[str, int] = dict(tr.get("ring_drops") or {})
         self.spans_by_name: Dict[str, List[dict]] = defaultdict(list)
         self.span_by_sid: Dict[str, dict] = {}
         self.children: Dict[str, List[dict]] = defaultdict(list)

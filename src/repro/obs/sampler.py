@@ -37,12 +37,16 @@ class FleetSampler:
 
     def __init__(self, pattern: str = "*", interval: float = 1.0,
                  depth: int = 240, net=None,
-                 registry: Optional[_counters.CounterRegistry] = None):
+                 registry: Optional[_counters.CounterRegistry] = None,
+                 timeline=None):
         self.pattern = pattern
         self.interval = interval
         self.depth = depth
         self.net = net
         self.registry = registry or _counters.default()
+        # optional repro.obs.timeseries.TimelineWriter — every sweep this
+        # sampler takes is also offered to the on-disk timeline
+        self.timeline = timeline
         # (locality, counter name) → ring of (perf_counter, value)
         self._histories: Dict[Tuple[int, str],
                               Deque[Tuple[float, float]]] = {}
@@ -86,6 +90,11 @@ class FleetSampler:
                         self._histories[(loc, name)] = ring
                     ring.append((now, float(value)))
                     points += 1
+        if self.timeline is not None:
+            try:
+                self.timeline.append(sweep, now=now)
+            except ValueError:  # writer closed mid-run — stop offering
+                self.timeline = None
         self.samples_taken += 1
         return points
 
@@ -163,23 +172,34 @@ def print_counter_report(pattern: str = "*", net=None,
     analysis folded them, the report shows p50/p95/p99 *blame* next to
     whatever was asked for.  Output is sorted by locality then counter
     path (stable diffs in CI logs).  Returns the printed lines."""
-    localities = sorted([0] if net is None else net.live_ids())
     blame_pat = "/obs{blame/*"
+    if net is None:
+        sweep = {0: _counters.default().snapshot_stats(pattern)}
+        blame = {0: _counters.default().snapshot_stats(blame_pat)}
+    else:
+        from repro.net import remote as _remote
+
+        # fault-tolerant sweep form: a dead peer contributes an
+        # {"error": ...} marker, not an exception — the report says so
+        # explicitly instead of silently shrinking the fleet
+        sweep = _remote.query_counter_stats(None, pattern)
+        blame = _remote.query_counter_stats(None, blame_pat)
+
+    def _unreachable(result) -> bool:
+        # counter names always start with "/" so the shapes can't collide
+        return ("error" in result
+                and not any(k.startswith("/") for k in result))
+
     lines = [f"{'counter':<58} {'value':>12} {'rate/s':>10} "
              f"{'p50':>9} {'p95':>9} {'p99':>9}"]
-    for loc in localities:
-        if net is None or loc == net.locality:
-            stats = _counters.default().snapshot_stats(pattern)
-            stats.update(_counters.default().snapshot_stats(blame_pat))
-        else:
-            from repro.net import remote as _remote
-
-            try:
-                stats = _remote.query_counter_stats(loc, pattern)
-                stats.update(_remote.query_counter_stats(loc, blame_pat))
-            except Exception:  # noqa: BLE001 — locality gone
-                lines.append(f"locality#{loc}: <unreachable>")
-                continue
+    for loc in sorted(sweep):
+        stats = sweep[loc]
+        if _unreachable(stats):
+            lines.append(f"locality#{loc} UNREACHABLE ({stats['error']})")
+            continue
+        extra = blame.get(loc, {})
+        if not _unreachable(extra):
+            stats.update(extra)
         for name, st in sorted(stats.items()):
             value = st.get("value", st.get("count", 0.0))
             rate = sampler.rate(loc, name) if sampler is not None else None

@@ -34,6 +34,8 @@ _ALLOWED_DIRS = {SRC / "core"}
 # transport primitives: sockets and process creation
 _NET_BANNED = re.compile(
     r"(\bimport\s+socket\b|\bfrom\s+socket\s+import"
+    r"|\bimport\s+socketserver\b|\bfrom\s+socketserver\s+import"
+    r"|\bimport\s+http\.server\b|\bfrom\s+http\.server\s+import"
     r"|\bimport\s+multiprocessing\b|\bfrom\s+multiprocessing\s+import"
     r"|\bos\.fork\b|\bpty\.fork\b"
     r"|\bimport\s+subprocess\b|\bfrom\s+subprocess\s+import)"
@@ -85,7 +87,9 @@ def test_no_sockets_or_process_creation_outside_net():
 def test_net_guard_matches_known_spellings():
     for bad in ("import socket", "from socket import socketpair",
                 "import multiprocessing as mp", "os.fork()",
-                "import subprocess", "from subprocess import run"):
+                "import subprocess", "from subprocess import run",
+                "from http.server import ThreadingHTTPServer",
+                "import socketserver"):
         assert _NET_BANNED.search(bad), bad
     for ok in ("websocket_url = 1", "# talks over a socket", "forked = True",
                "import socketserver_shim"):

@@ -60,3 +60,74 @@ def test_counters_track_execution():
 def test_oversubscription_many_tasks(rt):
     futs = [core.spawn(lambda i=i: i) for i in range(2000)]
     assert sum(f.get() for f in futs) == sum(range(2000))
+
+
+# ------------------------- utilization accounting (fleet health observatory)
+def test_accounting_busy_idle_clocks_accumulate():
+    with Runtime(num_workers=2, policy="local", pool_name="acct-test") as rt:
+        for f in [rt.spawn(lambda: time.sleep(0.005)) for _ in range(20)]:
+            f.get()
+        from repro.core import counters
+
+        busy = counters.get_value("/scheduler{acct-test}/time/busy")
+        idle = counters.get_value("/scheduler{acct-test}/time/idle")
+        util = counters.get_value("/scheduler{acct-test}/utilization")
+        idle_rate = counters.get_value("/scheduler{acct-test}/idle-rate")
+        assert busy > 0.0 and idle >= 0.0
+        assert 0.0 < util <= 1.0
+        assert 0.0 <= idle_rate < 1.0
+        # the two gauges are lock-free reads taken moments apart, so allow
+        # the live-interval drift — they must still be near-complementary
+        assert abs((util + idle_rate) - 1.0) < 0.1
+        pool = rt.pool("acct-test")
+        b, i = pool.time_totals()
+        snap = pool.utilization_snapshot()
+        assert len(snap["busy"]) == 2 and len(snap["idle"]) == 2
+        assert abs(sum(snap["busy"]) - b) < 0.1
+
+
+def test_steal_matrix_attributes_victim_and_thief():
+    with Runtime(num_workers=3, policy="local",
+                 pool_name="acct-steal") as rt:
+        # all work lands on worker 0; the other two must steal from it
+        futs = [rt.spawn(lambda: time.sleep(0.002), worker_hint=0)
+                for _ in range(64)]
+        for f in futs:
+            f.get()
+        pool = rt.pool("acct-steal")
+        m = pool.steal_matrix()
+        assert sum(m.values()) > 0
+        assert sum(n for (v, _t), n in m.items() if v == 0) > 0
+        from repro.core import counters
+
+        published = sum(
+            counters.get_value(
+                f"/scheduler{{acct-steal}}/steals/victim#{v}/thief#{t}")
+            for v in range(3) for t in range(3) if v != t)
+        assert published == sum(m.values())
+
+
+def test_queue_depth_gauges_registered():
+    with Runtime(num_workers=2, policy="local", pool_name="qd-test") as rt:
+        from repro.core import counters
+
+        reg = counters.default()
+        assert reg.get("/scheduler{qd-test}/queue/worker#0/depth") is not None
+        assert reg.get("/scheduler{qd-test}/queue/worker#1/depth") is not None
+        assert counters.get_value("/scheduler{qd-test}/queue/high/depth") >= 0
+        for f in [rt.spawn(lambda: None) for _ in range(10)]:
+            f.get()
+
+
+def test_accounting_opt_out_registers_nothing():
+    with Runtime(num_workers=2, pool_name="noacct-test",
+                 accounting=False) as rt:
+        for f in [rt.spawn(lambda: None) for _ in range(10)]:
+            f.get()
+        from repro.core import counters
+
+        reg = counters.default()
+        assert reg.get("/scheduler{noacct-test}/idle-rate") is None
+        assert reg.get("/scheduler{noacct-test}/time/busy") is None
+        # the execution counters are unconditional — only accounting is off
+        assert counters.get_value("/scheduler{noacct-test}/tasks/executed") >= 10

@@ -2,6 +2,8 @@
 semantics, AdmissionController hysteresis, FleetController tick wiring
 (measure → decide → act → release) against stub engines."""
 
+import pytest
+
 from repro.fleet import AdmissionController, FleetController, Policy
 from repro.fleet.policy import EngineView, FleetView
 
@@ -164,3 +166,25 @@ def test_controller_unknown_actuator_counts_error(rt):
     before = ctl.c_action_errors.get_value()
     ctl.tick()
     assert ctl.c_action_errors.get_value() == before + 1
+
+
+def test_view_pool_utilization_from_busy_idle_rates():
+    from repro.fleet import utilization_policy
+
+    rates = {
+        (0, "/scheduler{default}/time/busy"): 0.9,
+        (0, "/scheduler{default}/time/idle"): 0.1,
+        (1, "/scheduler{default}/time/busy"): 0.7,
+        (1, "/scheduler{default}/time/idle"): 0.3,
+    }
+    view = FleetView(now=0.0, rates=rates)
+    assert view.pool_utilization(0) == pytest.approx(0.9)
+    assert view.pool_idle_rate(0) == pytest.approx(0.1)
+    assert view.mean_utilization() == pytest.approx(0.8)
+    # never-sampled locality reads idle, not saturated
+    assert view.pool_utilization(7) == 0.0
+    assert view.pool_idle_rate(7) == 1.0
+
+    pol = utilization_policy(high=0.75, low=0.1, sustain=2, cooldown=0.0)
+    assert pol.evaluate(view, now=0.0) is None      # streak 1
+    assert pol.evaluate(view, now=1.0) == "grow"    # sustained saturation

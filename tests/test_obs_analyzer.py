@@ -417,3 +417,30 @@ def test_skewed_worker_clock_edges_clamp_not_reverse(fleet):
         assert all(iv.t1 >= iv.t0 for iv in cp.intervals)
         assert cp.fraction >= 0.95
     assert sum(cp.clamped_count for cp in cps.values()) >= 1
+
+
+def test_lossy_report_quantifies_drops_per_locality():
+    report = attribution.slow_report({
+        "traceEvents": [], "lossy": True,
+        "ring_drops": {"0/worker-0": 100, "0/worker-1": 36, "2/pump": 7},
+    })
+    assert report["ring_drops"] == {"0": 136, "2": 7}
+    head = attribution.format_report(report).splitlines()[0]
+    assert "LOSSY TRACE" in head and "L0=136" in head and "L2=7" in head
+
+
+def test_print_counter_report_marks_unreachable_peer(monkeypatch):
+    from repro.net import remote as _remote
+    from repro.obs.sampler import print_counter_report
+
+    def fake_sweep(locality, pattern, timeout=60.0):
+        assert locality is None, "report must use the fault-tolerant sweep"
+        if "blame" in pattern:
+            return {0: {}, 3: {"error": "PortClosed('peer 3 gone')"}}
+        return {0: {"/fleet{x}/ok": {"value": 1.0}},
+                3: {"error": "PortClosed('peer 3 gone')"}}
+
+    monkeypatch.setattr(_remote, "query_counter_stats", fake_sweep)
+    lines = print_counter_report(pattern="*", net=object())
+    assert any(ln.startswith("locality#3 UNREACHABLE") for ln in lines)
+    assert any("/fleet{x}/ok" in ln for ln in lines)

@@ -1,0 +1,176 @@
+"""OpenMetrics exposition: renderer ↔ strict-parser round trip, and a
+live 2-locality fleet scrape over real HTTP (ISSUE 10 tentpole)."""
+
+import math
+
+import pytest
+
+from repro.core import counters as C
+from repro.obs import metrics as M
+
+
+# ------------------------------------------------------------ name mapping
+def test_counter_to_metric_mapping():
+    cases = {
+        "/scheduler{default}/idle-rate":
+            ("repro_scheduler_idle_rate", {"pool": "default"}),
+        "/scheduler{default}/steals/victim#0/thief#1":
+            ("repro_scheduler_steals",
+             {"pool": "default", "victim": "0", "thief": "1"}),
+        "/serve{engine#2}/request/latency":
+            ("repro_serve_request_latency", {"engine": "2"}),
+        "/obs{blame/compute}/total":
+            ("repro_obs_total", {"tier": "compute"}),
+        "/net{locality#0/peer#1}/credit/inflight_bytes":
+            ("repro_net_credit_inflight_bytes",
+             {"locality": "0", "peer": "1"}),
+        "/fleet{admission}/open":
+            ("repro_fleet_open", {"instance": "admission"}),
+    }
+    for path, (name, labels) in cases.items():
+        got_name, got_labels = M.counter_to_metric(path)
+        assert got_name == name, path
+        assert got_labels == labels, path
+        assert M._NAME_OK_RE.match(got_name), got_name
+
+
+# ------------------------------------------------------------- round trip
+def _registry_with_everything():
+    reg = C.CounterRegistry()
+    reg.counter("/scheduler{default}/tasks/cumulative").increment(42)
+    reg.gauge("/fleet{controller}/occupancy").set(0.75)
+    reg.register_callable("/scheduler{default}/idle-rate", lambda: 0.125)
+    reg.register_callable("/scheduler{default}/time/busy", lambda: 9.5,
+                          kind="counter")
+    h = reg.histogram("/serve{engine#0}/request/latency")
+    for v in [0.001, 0.002, 0.5, 1.0, -1.0, 0.004] * 3:
+        h.add(v)
+    return reg
+
+
+def test_render_parse_round_trip_strict():
+    reg = _registry_with_everything()
+    sweep = {0: reg.snapshot_export("*"),
+             1: {"error": "ConnectionError('peer gone')"}}
+    text = M.render_openmetrics(sweep)
+    fams = M.parse_prometheus_text(text, strict=True)
+
+    # counter-vs-gauge typing: cumulative counters got _total + counter
+    assert fams["repro_scheduler_tasks_cumulative_total"]["type"] == "counter"
+    assert fams["repro_scheduler_time_busy_total"]["type"] == "counter"
+    assert fams["repro_scheduler_idle_rate"]["type"] == "gauge"
+    assert fams["repro_fleet_occupancy"]["type"] == "gauge"
+
+    # histogram: cumulative buckets, +Inf == _count, sum preserved
+    hist = fams["repro_serve_request_latency"]
+    assert hist["type"] == "histogram"
+    buckets = [(labels["le"], v) for name, labels, v in hist["samples"]
+               if name.endswith("_bucket")]
+    assert buckets[-1][0] == "+Inf" and buckets[-1][1] == 18
+    cums = [v for _le, v in buckets]
+    assert cums == sorted(cums), "buckets must be cumulative-monotone"
+    (sum_v,) = [v for name, _l, v in hist["samples"]
+                if name.endswith("_sum")]
+    assert sum_v == pytest.approx(1.521, abs=1e-9)
+
+    # dead peer degraded to repro_up 0, live one reads 1
+    ups = {labels["locality"]: v
+           for _n, labels, v in fams["repro_up"]["samples"]}
+    assert ups == {"0": 1.0, "1": 0.0}
+
+
+def test_label_escaping_round_trip():
+    raw = 'weird\\value"with\nnewline'
+    line = f'm_x{{a="{M._escape_label(raw)}"}} 1\n'
+    fams = M.parse_prometheus_text("# TYPE m_x gauge\n" + line, strict=True)
+    (_n, labels, v) = fams["m_x"]["samples"][0]
+    assert labels["a"] == raw and v == 1.0
+
+
+def test_bucket_cap_merges_and_conserves_counts():
+    reg = C.CounterRegistry()
+    h = reg.histogram("/serve{engine#0}/step/duration")
+    for i in range(200):  # hundreds of distinct log buckets
+        h.add(1.0001 * (1.2 ** (i % 90)))
+    text = M.render_openmetrics({0: reg.snapshot_export("*")})
+    fams = M.parse_prometheus_text(text, strict=True)
+    samples = fams["repro_serve_step_duration"]["samples"]
+    buckets = [s for s in samples if s[0].endswith("_bucket")]
+    assert len(buckets) <= M.BUCKET_CAP + 1  # merged buckets + the +Inf one
+    assert buckets[-1][2] == 200  # nothing lost in the merge
+
+
+@pytest.mark.parametrize("bad", [
+    "no_type_declared 1\n",                                   # undeclared
+    "# TYPE m counter\nm 1\n",                                # no _total
+    "# TYPE m counter\nm_total -5\n",                         # negative
+    "# TYPE m histogram\nm_bucket{le=\"1\"} 2\nm_count 2\n",  # no +Inf
+    ("# TYPE m histogram\nm_bucket{le=\"1\"} 5\n"
+     "m_bucket{le=\"+Inf\"} 2\nm_count 2\n"),                 # non-monotone
+    ("# TYPE m histogram\nm_bucket{le=\"+Inf\"} 3\n"
+     "m_count 7\n"),                                          # +Inf != count
+])
+def test_strict_parser_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        M.parse_prometheus_text(bad, strict=True)
+
+
+def test_error_kind_records_become_scrape_error_gauge():
+    sweep = {0: {"/fleet{x}/boom": {"kind": "error", "error": "ZeroDiv"},
+                 "/fleet{x}/ok": {"kind": "gauge", "value": 1.0}}}
+    fams = M.parse_prometheus_text(M.render_openmetrics(sweep), strict=True)
+    (_n, labels, v) = fams["repro_scrape_counter_errors"]["samples"][0]
+    assert labels["locality"] == "0" and v == 1.0
+    assert "repro_fleet_ok" in fams
+
+
+# ------------------------------------------------- live endpoint, 1 locality
+def test_http_endpoint_scrape_local(rt):
+    from repro.net.httpd import http_get
+
+    reg = _registry_with_everything()
+    with M.MetricsExporter(registry=reg) as ex:
+        status, body = http_get(ex.url)
+        assert status == 200
+        fams = M.parse_prometheus_text(body, strict=True)
+        assert "repro_serve_request_latency" in fams
+        status, _ = http_get(f"http://127.0.0.1:{ex.port}/nope")
+        assert status == 404
+        assert ex.scrapes >= 1
+
+
+# ------------------------------------------------- live fleet, 2 localities
+def test_fleet_scrape_two_localities(rt, net_factory):
+    from repro.net.httpd import http_get
+
+    net = net_factory(2)
+    # give the exposition a histogram with real content on locality 0
+    h = C.default().histogram("/serve{engine#0}/request/latency")
+    for v in (0.01, 0.02, 0.04):
+        h.add(v)
+    with M.MetricsExporter(net=net) as ex:
+        status, body = http_get(ex.url, timeout=120.0)
+    assert status == 200
+    fams = M.parse_prometheus_text(body, strict=True)
+
+    # ≥1 native histogram made it through the strict parser
+    hist_fams = [f for f, info in fams.items() if info["type"] == "histogram"]
+    assert "repro_serve_request_latency" in hist_fams
+
+    # counters arrived from BOTH localities (every locality registers its
+    # scheduler's cumulative task counters at bootstrap)
+    locs = {labels.get("locality")
+            for info in fams.values() if info["type"] == "counter"
+            for _n, labels, _v in info["samples"]}
+    assert {"0", "1"} <= locs
+
+    # both peers were reachable
+    ups = {labels["locality"]: v
+           for _n, labels, v in fams["repro_up"]["samples"]}
+    assert ups.get("0") == 1.0 and ups.get("1") == 1.0
+
+    # the scheduler's idle-rate gauges are part of the exposition
+    assert "repro_scheduler_idle_rate" in fams
+    for _n, labels, v in fams["repro_scheduler_idle_rate"]["samples"]:
+        assert 0.0 <= v <= 1.0
+        assert "pool" in labels

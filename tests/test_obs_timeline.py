@@ -1,0 +1,161 @@
+"""Persisted counter timelines + the fleet-top dashboard (ISSUE 10)."""
+
+import json
+
+import pytest
+
+from repro.obs import timeseries as TS
+
+
+def _sweep(busy, idle, extra=None):
+    pairs = [("/scheduler{default}/time/busy", busy),
+             ("/scheduler{default}/time/idle", idle),
+             ("/scheduler{default}/idle-rate", idle / (busy + idle)),
+             ("/scheduler{default}/utilization", busy / (busy + idle))]
+    if extra:
+        pairs += extra
+    return {0: pairs}
+
+
+# ------------------------------------------------------------------ writer
+def test_writer_round_trip(tmp_path):
+    path = str(tmp_path / "tl.jsonl")
+    with TS.TimelineWriter(path, pattern="/scheduler*") as w:
+        w.append(_sweep(1.0, 1.0), now=1.0)
+        w.append(_sweep(2.0, 1.5), now=2.0)
+    header, records = TS.read_timeline(path)
+    assert header["pattern"] == "/scheduler*"
+    assert header["version"] == TS.VERSION
+    assert len(records) == 2
+    pts = TS.series(records, 0, "/scheduler{default}/time/busy")
+    assert pts == [(1.0, 1.0), (2.0, 2.0)]
+
+
+def test_writer_records_dead_peer_markers(tmp_path):
+    path = str(tmp_path / "tl.jsonl")
+    with TS.TimelineWriter(path) as w:
+        sweep = dict(_sweep(1.0, 1.0))
+        sweep[3] = {"error": "ConnectionError('gone')"}
+        w.append(sweep, now=1.0)
+    _h, records = TS.read_timeline(path)
+    assert records[0]["errors"] == [3]
+
+
+def test_stride_doubling_bounds_the_file(tmp_path):
+    path = str(tmp_path / "tl.jsonl")
+    w = TS.TimelineWriter(path, max_records=8)
+    for i in range(100):
+        w.append(_sweep(float(i + 1), float(i + 1)), now=float(i))
+    w.close()
+    _h, records = TS.read_timeline(path)
+    assert len(records) <= 8
+    assert w.stride > 1 and w.compactions >= 1
+    # newest data survives every compaction
+    assert records[-1]["t"] >= 96.0
+    # strides recorded per record, monotone non-decreasing
+    strides = [r["stride"] for r in records]
+    assert strides == sorted(strides)
+
+
+def test_append_after_close_raises(tmp_path):
+    w = TS.TimelineWriter(str(tmp_path / "tl.jsonl"))
+    w.close()
+    with pytest.raises(ValueError):
+        w.append(_sweep(1.0, 1.0))
+
+
+def test_read_rejects_non_timeline(tmp_path):
+    p = tmp_path / "not_tl.jsonl"
+    p.write_text('{"foo": 1}\n')
+    with pytest.raises(ValueError):
+        TS.read_timeline(str(p))
+
+
+# --------------------------------------------------------------- summarize
+def test_summarize_derives_utilization(tmp_path):
+    path = str(tmp_path / "tl.jsonl")
+    with TS.TimelineWriter(path) as w:
+        busy = idle = 0.0
+        for i in range(10):
+            busy += 0.7
+            idle += 0.3
+            w.append(_sweep(busy, idle), now=float(i))
+    s = TS.summarize(path)
+    assert s["records"] == 10
+    util = s["utilization"][(0, "default")]
+    assert util["utilization"] == pytest.approx(0.7, abs=1e-9)
+    assert util["idle_rate"] == pytest.approx(0.3, abs=1e-9)
+    st = s["counters"][(0, "/scheduler{default}/time/busy")]
+    assert st["rate"] == pytest.approx(0.7, abs=1e-9)
+    lines = TS.format_summary(s)
+    assert any("utilization" in ln for ln in lines)
+
+
+def test_analyze_timeline_cli(tmp_path, capsys):
+    from repro.obs import analyze
+
+    path = str(tmp_path / "tl.jsonl")
+    with TS.TimelineWriter(path) as w:
+        for i in range(5):
+            w.append(_sweep(0.6 * (i + 1), 0.4 * (i + 1)), now=float(i))
+    assert analyze.main(["--timeline", path]) == 0
+    out = capsys.readouterr().out
+    assert "timeline:" in out and "scheduler{default}" in out
+
+    assert analyze.main(["--timeline", path, "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["utilization"]["L0 default"]["utilization"] == \
+        pytest.approx(0.6, abs=1e-9)
+
+    assert analyze.main(["--timeline", str(tmp_path / "missing.jsonl")]) == 1
+
+
+# -------------------------------------------------------------- fleet-top
+def test_top_snapshot_and_frame_from_sampler(rt):
+    import repro.core as core
+    from repro.obs import top as T
+    from repro.obs.sampler import FleetSampler
+
+    ex = rt.get_executor("default")
+    for f in [ex.async_execute(lambda: sum(range(5000))) for _ in range(30)]:
+        f.get()
+    sampler = FleetSampler(pattern="*", net=None)
+    sampler.sample_once()
+    snap = T.snapshot_from_sampler(sampler)
+    assert any(pool == "default" for (_loc, pool) in snap["pools"])
+    frame = T.render_frame(snap)
+    assert "fleet-top" in frame and "scheduler{default}" in frame
+    assert core.counters.get_value("/scheduler{default}/time/busy") > 0
+
+
+def test_top_snapshot_from_metrics_round_trip():
+    from repro.core import counters as C
+    from repro.obs import metrics as M
+    from repro.obs import top as T
+
+    reg = C.CounterRegistry()
+    reg.register_callable("/scheduler{default}/utilization", lambda: 0.8)
+    reg.register_callable("/scheduler{default}/idle-rate", lambda: 0.2)
+    reg.register_callable("/scheduler{default}/queue/worker#0/depth",
+                          lambda: 3.0)
+    reg.gauge("/serve{engine#1}/request/latency/p99").set(0.125)
+    reg.gauge("/net{locality#0/peer#1}/credit/inflight_bytes").set(4096)
+    reg.gauge("/fleet{admission}/open").set(1.0)
+    text = M.render_openmetrics({0: reg.snapshot_export("*")})
+    snap = T.snapshot_from_metrics(text)
+    pool = snap["pools"][(0, "default")]
+    assert pool["util"] == 0.8 and pool["idle"] == 0.2
+    assert pool["queue"] == 3.0
+    assert snap["serve"][(0, 1)]["latency"] == 0.125
+    assert snap["net"][(0, 1)]["inflight_bytes"] == 4096
+    assert snap["admission"][0]["open"] == 1.0
+    frame = T.render_frame(snap)
+    assert "engine#1" in frame and "admission: open" in frame
+
+
+def test_top_cli_once(rt, capsys):
+    from repro.obs import top as T
+
+    assert T.main(["--once"]) == 0
+    out = capsys.readouterr().out
+    assert "fleet-top" in out
